@@ -1,0 +1,110 @@
+"""LM-scale benchmarks (beyond the paper's tables).
+
+- cached-vs-populate epoch wall time on a reduced LM (the paper's claim at
+  transformer scale, measured);
+- fused Skip-LoRA kernel vs unfused einsum path (interpret mode on CPU —
+  correctness-grade timing, the HBM-traffic analysis lives in DESIGN.md);
+- cache-mode footprints (full / int8 / freeze_a).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.core import lm_skiplora as SL
+from repro.models.lm import init_lm
+from repro.optim.optimizers import adamw
+
+
+def cached_epoch_speedup(arch: str = "stablelm-1.6b") -> list[tuple[str, float]]:
+    cfg = reduce_config(get_config(arch))
+    sl = SL.SkipLoRAConfig(rank=8, mode="full", cache_dtype="float32")
+    params = init_lm(jax.random.key(0), cfg)
+    adapters = SL.init_adapters(jax.random.key(1), cfg, sl)
+    trainable, static = SL.split_trainable(adapters, sl)
+    opt = adamw(1e-3)
+    opt_state = opt.init(trainable)
+    b, s, n = 8, 64, 32
+    cache = SL.init_lm_cache(n, cfg, sl, s)
+    key = jax.random.key(2)
+    tokens = jax.random.randint(key, (n, s), 0, cfg.vocab_size)
+
+    populate = jax.jit(SL.make_populate_step(cfg, sl, opt))
+    cached = jax.jit(SL.make_cached_step(cfg, sl, opt))
+
+    def pop_epoch():
+        nonlocal trainable, opt_state, cache
+        for i in range(n // b):
+            idx = jnp.arange(i * b, (i + 1) * b)
+            batch = {"tokens": tokens[idx], "labels": tokens[idx]}
+            trainable, opt_state, cache, loss = populate(
+                params, trainable, static, opt_state, cache, batch, idx
+            )
+        return loss
+
+    def cached_epoch():
+        nonlocal trainable, opt_state
+        for i in range(n // b):
+            idx = jnp.arange(i * b, (i + 1) * b)
+            trainable, opt_state, loss = cached(
+                params, trainable, static, opt_state, cache, idx
+            )
+        return loss
+
+    jax.block_until_ready(pop_epoch())  # compile both
+    jax.block_until_ready(cached_epoch())
+    t0 = time.perf_counter()
+    jax.block_until_ready(pop_epoch())
+    t_pop = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(3):
+        loss = cached_epoch()
+    jax.block_until_ready(loss)
+    t_cached = (time.perf_counter() - t0) / 3
+    return [
+        (f"lm/{arch}/populate_epoch_ms", t_pop * 1e3),
+        (f"lm/{arch}/cached_epoch_ms", t_cached * 1e3),
+        (f"lm/{arch}/epoch_speedup_x", t_pop / t_cached),
+    ]
+
+
+def kernel_vs_einsum(l=8, m=512, d=256, r=8) -> list[tuple[str, float]]:
+    from repro.kernels.skip_lora.kernel import skip_lora_fwd
+    from repro.kernels.skip_lora.ref import skip_lora_fwd_ref
+
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (l, m, d))
+    a = jax.random.normal(jax.random.key(1), (l, d, r)) * 0.05
+    b = jax.random.normal(jax.random.key(2), (l, r, d)) * 0.05
+
+    ref = jax.jit(skip_lora_fwd_ref)
+    ker = jax.jit(lambda x, a, b: skip_lora_fwd(x, a, b, interpret=True))
+
+    def timeit(f, n=20):
+        jax.block_until_ready(f(x, a, b))
+        t0 = time.perf_counter()
+        for _ in range(n):
+            out = f(x, a, b)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / n * 1e6
+
+    return [
+        ("kernel/skip_lora_einsum_us", timeit(ref)),
+        ("kernel/skip_lora_pallas_interpret_us", timeit(ker)),
+    ]
+
+
+def cache_footprints(arch: str = "gemma3-27b", seq: int = 4096) -> list[tuple[str, float]]:
+    cfg = get_config(arch)
+    rows = []
+    for mode in ("full", "int8", "freeze_a"):
+        sl = SL.SkipLoRAConfig(rank=16, mode=mode)
+        rows.append(
+            (f"cache/{arch}/{mode}_MiB_per_sample",
+             SL.cache_nbytes_per_sample(cfg, sl, seq) / 2**20)
+        )
+    return rows

@@ -1,0 +1,56 @@
+"""Benchmark harness: one section per paper table + LM-scale extensions.
+
+Prints ``name,value,derived`` CSV rows (value units embedded in the name).
+
+  PYTHONPATH=src python -m benchmarks.run          # full (~5 min on CPU)
+  PYTHONPATH=src python -m benchmarks.run --quick  # reduced trials
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None, help="substring filter on sections")
+    args = ap.parse_args()
+
+    from benchmarks import lm_bench, paper_tables
+
+    sections = [
+        ("table2", lambda: paper_tables.table2_breakdown()),
+        ("headline", lambda: paper_tables.headline_reduction()),
+        ("table67", lambda: paper_tables.tables_6_7_time()),
+        ("table34", lambda: paper_tables.tables_3_4_accuracy(
+            trials=1 if args.quick else 3, quick=args.quick)),
+        ("fig3", lambda: paper_tables.fig3_required_epochs(
+            max_epochs=30 if args.quick else 60)),
+        ("lm_cached", lambda: lm_bench.cached_epoch_speedup()),
+        ("kernel", lambda: lm_bench.kernel_vs_einsum()),
+        ("cache_footprint", lambda: lm_bench.cache_footprints()),
+    ]
+
+    print("name,value,derived")
+    failures = 0
+    for name, fn in sections:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+            for key, val in rows:
+                print(f"{key},{val:.4f},")
+            print(f"_section/{name}/wall_s,{time.time() - t0:.1f},")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"_section/{name}/ERROR,{0.0},{type(e).__name__}:{e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

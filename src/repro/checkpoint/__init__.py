@@ -1,0 +1,7 @@
+"""Checkpointing: sharded save/restore with manifest + elastic reshard."""
+
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    CheckpointManager,
+    restore_checkpoint,
+    save_checkpoint,
+)

@@ -1,0 +1,8 @@
+"""Core of the paper's contribution: Skip-LoRA topology + Skip-Cache.
+
+- ``compute_model``: Table-1 compute-type taxonomy with closed-form FLOPs.
+- ``methods``: the eight fine-tuning methods of Sections 3-4 at MLP scale.
+- ``skip_cache``: the forward-activation cache (Section 4.2), device-sharded.
+- ``finetune``: Algorithm 1 (populate epoch + cached epochs).
+- ``lm_adapters``: Skip-LoRA adapters for transformer LMs (framework scale).
+"""

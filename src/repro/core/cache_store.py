@@ -1,0 +1,149 @@
+"""Host-offloaded Skip-Cache store with double-buffered prefetch.
+
+The device-resident ``SkipCache`` works when the whole activation cache fits
+HBM (freeze_a mode, or small fine-tune sets). At production scale the full
+cache is host memory / disk territory: gemma3-27b at seq 4096 is 2.6 GiB
+per sample (bf16) — a 10k-sample fine-tune set is ~26 TiB, striped across
+hosts.
+
+``HostCacheStore`` is that tier for a single host (the multi-host version
+stripes by ``sample_id % host_count``, which the data pipeline already
+guarantees aligns with batch host-slicing):
+
+  - slots are memory-mapped per-sample binary files (O(1) random access,
+    crash-safe: a sample is visible only after an fsync'd flush),
+  - ``prefetch(ids)`` stages the *next* batch into pinned host buffers on a
+    background thread while the current step runs (double buffering), so
+    the cached step sees host->device transfer, never disk latency,
+  - reads return the exact pytree the cached step consumes.
+
+The populate step writes through the device cache path; ``flush_batch``
+moves it host-side. Works with every cache mode (full / int8 / freeze_a).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+
+Params = Any
+
+
+class HostCacheStore:
+    def __init__(self, directory: str, slot_spec: dict[str, tuple[tuple, Any]]):
+        """slot_spec: name -> (per-sample shape, dtype) — from
+        ``lm_skiplora.lm_cache_layout``."""
+        self.directory = directory
+        self.slot_spec = {
+            name: (tuple(shape), np.dtype(str(np.dtype(dt))))
+            for name, (shape, dt) in slot_spec.items()
+        }
+        os.makedirs(directory, exist_ok=True)
+        self._write_manifest()
+        self._prefetch_thread: Optional[threading.Thread] = None
+        self._prefetched: Optional[tuple[tuple[int, ...], dict[str, np.ndarray]]] = None
+        self._lock = threading.Lock()
+
+    # -- layout ------------------------------------------------------------
+
+    def _write_manifest(self) -> None:
+        manifest = {
+            name: {"shape": list(shape), "dtype": dt.name}
+            for name, (shape, dt) in self.slot_spec.items()
+        }
+        path = os.path.join(self.directory, "cache_manifest.json")
+        if not os.path.exists(path):
+            with open(path, "w") as f:
+                json.dump(manifest, f)
+
+    def _sample_path(self, sample_id: int) -> str:
+        return os.path.join(self.directory, f"s{sample_id:08d}.bin")
+
+    def _nbytes(self) -> dict[str, int]:
+        return {
+            name: int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+            for name, (shape, dt) in self.slot_spec.items()
+        }
+
+    # -- write path ---------------------------------------------------------
+
+    def flush_batch(self, ids, values: dict[str, Any]) -> None:
+        """Persist a populate-step batch. values[name]: (B, *slot shape)
+        device or host arrays (device_get happens here)."""
+        host_vals = {k: np.asarray(jax.device_get(v)) for k, v in values.items()}
+        for row, sample_id in enumerate(np.asarray(ids).tolist()):
+            tmp = self._sample_path(sample_id) + ".tmp"
+            with open(tmp, "wb") as f:
+                for name in sorted(self.slot_spec):
+                    arr = host_vals[name][row]
+                    want_shape, want_dt = self.slot_spec[name]
+                    assert tuple(arr.shape) == want_shape, (name, arr.shape)
+                    f.write(np.ascontiguousarray(arr, dtype=want_dt).tobytes())
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self._sample_path(sample_id))
+
+    def has(self, sample_id: int) -> bool:
+        return os.path.exists(self._sample_path(sample_id))
+
+    # -- read path ------------------------------------------------------------
+
+    def _read_one(self, sample_id: int) -> dict[str, np.ndarray]:
+        out = {}
+        with open(self._sample_path(sample_id), "rb") as f:
+            mm = f.read()
+        off = 0
+        for name in sorted(self.slot_spec):
+            shape, dt = self.slot_spec[name]
+            n = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+            out[name] = np.frombuffer(mm[off : off + n], dtype=dt).reshape(shape)
+            off += n
+        return out
+
+    def read_batch(self, ids) -> dict[str, np.ndarray]:
+        """Batch read: uses the prefetched staging buffer when it matches."""
+        key = tuple(int(i) for i in np.asarray(ids).tolist())
+        with self._lock:
+            if self._prefetched is not None and self._prefetched[0] == key:
+                vals = self._prefetched[1]
+                self._prefetched = None
+                return vals
+        return self._read_batch_sync(key)
+
+    def _read_batch_sync(self, key: tuple[int, ...]) -> dict[str, np.ndarray]:
+        rows = [self._read_one(i) for i in key]
+        return {
+            name: np.stack([r[name] for r in rows])
+            for name in sorted(self.slot_spec)
+        }
+
+    def prefetch(self, ids) -> None:
+        """Stage the next batch on a background thread (double buffering)."""
+        key = tuple(int(i) for i in np.asarray(ids).tolist())
+
+        def work():
+            vals = self._read_batch_sync(key)
+            with self._lock:
+                self._prefetched = (key, vals)
+
+        if self._prefetch_thread is not None and self._prefetch_thread.is_alive():
+            self._prefetch_thread.join()
+        self._prefetch_thread = threading.Thread(target=work, daemon=True)
+        self._prefetch_thread.start()
+
+    def wait(self) -> None:
+        if self._prefetch_thread is not None:
+            self._prefetch_thread.join()
+
+    def nbytes_on_disk(self) -> int:
+        return sum(
+            os.path.getsize(os.path.join(self.directory, f))
+            for f in os.listdir(self.directory)
+            if f.endswith(".bin")
+        )

@@ -1,0 +1,214 @@
+"""Algorithm 1: fine-tuning with Skip2-LoRA (and the seven baselines).
+
+The paper's loop (per epoch, per batch): forward FCs consulting C_skip,
+add new results to C_skip, forward LoRA, backward LoRA, update LoRA weights.
+
+TPU-shaped realisation (DESIGN.md §4): epoch 0 runs ``populate_step``
+(backbone forward + cache scatter + adapter SGD step); epochs >= 1 run
+``cached_step`` (cache gather + adapter SGD step, zero backbone compute).
+A masked variant supports streams where batches mix hits and misses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import methods as M
+from repro.core import skip_cache as C
+from repro.models.mlp import MLPConfig, accuracy, cross_entropy
+
+Params = Any
+
+
+@dataclasses.dataclass
+class FinetuneResult:
+    trainable: Params
+    frozen: Params
+    losses: list[float]
+    epoch_times_s: list[float]
+    cache: C.SkipCache | None = None
+
+    def predict_fn(self, method: str, cfg: MLPConfig) -> Callable:
+        def predict(x):
+            logits, _ = M.forward(method, self.trainable, self.frozen, x, cfg)
+            return logits
+
+        return predict
+
+
+def _epoch_batches(key, n, batch_size):
+    perm = jax.random.permutation(key, n)
+    steps = n // batch_size
+    return [perm[s * batch_size : (s + 1) * batch_size] for s in range(max(1, steps))]
+
+
+def finetune(
+    key: jax.Array,
+    method: str,
+    cfg: MLPConfig,
+    backbone: Params,
+    x_ft: jax.Array,
+    y_ft: jax.Array,
+    *,
+    epochs: int,
+    batch_size: int = 20,
+    lr: float = 0.05,
+) -> FinetuneResult:
+    """Fine-tune with any of the eight methods. Dispatches to the cached
+    Algorithm-1 loop for skip2_lora."""
+    if method == "skip2_lora":
+        return finetune_skip2_lora(
+            key, cfg, backbone, x_ft, y_ft, epochs=epochs, batch_size=batch_size, lr=lr
+        )
+    ikey, lkey = jax.random.split(key)
+    trainable, frozen = M.init_method(ikey, cfg, backbone, method)
+    n = x_ft.shape[0]
+    losses, times = [], []
+    rng = lkey
+    for _ in range(epochs):
+        rng, sk = jax.random.split(rng)
+        t0 = time.perf_counter()
+        for idx in _epoch_batches(sk, n, batch_size):
+            trainable, loss = M.train_step(
+                method, cfg, trainable, frozen, x_ft[idx], y_ft[idx], lr
+            )
+        losses.append(float(loss))
+        times.append(time.perf_counter() - t0)
+    return FinetuneResult(trainable, frozen, losses, times)
+
+
+# ---------------------------------------------------------------------------
+# Skip2-LoRA: Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def _populate_step(cfg: MLPConfig):
+    """Backbone forward + cache write + adapter step (first encounter)."""
+
+    @jax.jit
+    def step(trainable, frozen, cache, idx, xb, yb, lr):
+        # Full forward once; xs[k] is the input feature map of FC layer k and
+        # logits_base would require re-running without adapters — instead we
+        # exploit linearity: y_base = logits - sum_k x^k A_k B_k.
+        logits, xs = M.forward("skip_lora", trainable, frozen, xb, cfg)
+        skip = jnp.zeros_like(logits)
+        for k, lora in enumerate(trainable["lora"]):
+            skip = skip + M.lora_apply(lora, xs[k])
+        y_base = logits - skip
+        values = {f"x{k}": xs[k] for k in range(1, cfg.n_layers)}
+        values["y_base"] = y_base
+        cache = C.cache_write(cache, idx, values)
+
+        def loss_fn(t):
+            out, _ = M.forward("skip_lora", t, frozen, xb, cfg)
+            return cross_entropy(out, yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(trainable)
+        trainable = jax.tree.map(lambda a, b: a - lr * b, trainable, grads)
+        return trainable, cache, loss
+
+    return step
+
+
+def _cached_step(cfg: MLPConfig):
+    """Adapter-only step from cached activations (zero backbone compute)."""
+
+    @jax.jit
+    def step(trainable, cache, idx, xb, yb, lr):
+        vals = C.cache_read(cache, idx)
+        xs = [xb] + [vals[f"x{k}"] for k in range(1, cfg.n_layers)]
+
+        def loss_fn(t):
+            out = M.skip_forward_cached(t, vals["y_base"], xs)
+            return cross_entropy(out, yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(trainable)
+        trainable = jax.tree.map(lambda a, b: a - lr * b, trainable, grads)
+        return trainable, loss
+
+    return step
+
+
+def masked_populate_step(cfg: MLPConfig):
+    """Streaming variant: batch may mix cache hits and misses. The backbone
+    runs for the whole batch, but only miss rows are written; hit rows keep
+    their cached values (bitwise identical activations either way since the
+    backbone is frozen — the write is for first-seen samples)."""
+
+    @jax.jit
+    def step(trainable, frozen, cache, idx, xb, yb, lr):
+        logits, xs = M.forward("skip_lora", trainable, frozen, xb, cfg)
+        skip = jnp.zeros_like(logits)
+        for k, lora in enumerate(trainable["lora"]):
+            skip = skip + M.lora_apply(lora, xs[k])
+        values = {f"x{k}": xs[k] for k in range(1, cfg.n_layers)}
+        values["y_base"] = logits - skip
+        miss = ~C.cache_hits(cache, idx)
+        cache = C.cache_write_masked(cache, idx, values, miss)
+
+        def loss_fn(t):
+            out, _ = M.forward("skip_lora", t, frozen, xb, cfg)
+            return cross_entropy(out, yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(trainable)
+        trainable = jax.tree.map(lambda a, b: a - lr * b, trainable, grads)
+        return trainable, cache, loss
+
+    return step
+
+
+def finetune_skip2_lora(
+    key: jax.Array,
+    cfg: MLPConfig,
+    backbone: Params,
+    x_ft: jax.Array,
+    y_ft: jax.Array,
+    *,
+    epochs: int,
+    batch_size: int = 20,
+    lr: float = 0.05,
+) -> FinetuneResult:
+    """Algorithm 1. Epoch 0 populates C_skip; epochs 1..E-1 skip the backbone."""
+    ikey, lkey = jax.random.split(key)
+    trainable, frozen = M.init_method(ikey, cfg, backbone, "skip2_lora")
+    n = x_ft.shape[0]
+    cache = C.cache_for_mlp(n, cfg.dims, cfg.dtype)
+    populate = _populate_step(cfg)
+    cached = _cached_step(cfg)
+    losses, times = [], []
+    rng = lkey
+    for e in range(epochs):
+        rng, sk = jax.random.split(rng)
+        t0 = time.perf_counter()
+        for idx in _epoch_batches(sk, n, batch_size):
+            if e == 0:
+                trainable, cache, loss = populate(
+                    trainable, frozen, cache, idx, x_ft[idx], y_ft[idx], lr
+                )
+            else:
+                trainable, loss = cached(trainable, cache, idx, x_ft[idx], y_ft[idx], lr)
+        losses.append(float(loss))
+        times.append(time.perf_counter() - t0)
+    return FinetuneResult(trainable, frozen, losses, times, cache=cache)
+
+
+def evaluate(
+    method: str,
+    cfg: MLPConfig,
+    result: FinetuneResult,
+    x_test: jax.Array,
+    y_test: jax.Array,
+) -> float:
+    logits, _ = M.forward(
+        "skip_lora" if method == "skip2_lora" else method,
+        result.trainable,
+        result.frozen,
+        x_test,
+        cfg,
+    )
+    return float(accuracy(logits, y_test))

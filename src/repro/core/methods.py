@@ -1,0 +1,304 @@
+"""The eight fine-tuning methods of the paper (Sections 3-4), MLP scale.
+
+Each method is a (init, forward) pair over an explicit trainable/frozen
+parameter split, so ``jax.grad`` differentiates *only* the trainable subtree
+and XLA emits exactly the backward ops the paper's Table-1 compute types
+prescribe (e.g. LoRA-Last's backward never touches FC weights; Skip-LoRA's
+backward never chains through the backbone).
+
+Methods:
+    ft_all       : all FC weights/biases + BN affine trainable
+    ft_last      : last FC layer trainable
+    ft_bias      : biases + BN affine trainable
+    ft_all_lora  : ft_all + per-layer LoRA (paper's full-cost reference)
+    lora_all     : per-layer LoRA adapters (backbone frozen)
+    lora_last    : LoRA adapter on the last layer only
+    skip_lora    : adapters from every layer's input to the LAST layer output
+    skip2_lora   : skip_lora + Skip-Cache (cached forward variant)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mlp import MLPConfig, bn_apply, cross_entropy
+
+Params = Any
+
+METHODS = (
+    "ft_all",
+    "ft_last",
+    "ft_bias",
+    "ft_all_lora",
+    "lora_all",
+    "lora_last",
+    "skip_lora",
+    "skip2_lora",
+)
+
+
+# ---------------------------------------------------------------------------
+# Adapter initialisation
+# ---------------------------------------------------------------------------
+
+
+def init_lora(key: jax.Array, n: int, m: int, rank: int, dtype=jnp.float32) -> Params:
+    """Standard LoRA init: A ~ Kaiming, B = 0 (adapter starts as identity)."""
+    a = jax.random.normal(key, (n, rank), dtype) * jnp.sqrt(1.0 / n)
+    return {"A": a, "B": jnp.zeros((rank, m), dtype)}
+
+
+def init_per_layer_loras(key: jax.Array, cfg: MLPConfig) -> list[Params]:
+    """LoRA-All adapters: layer k gets (dims[k] -> dims[k+1])."""
+    dims = cfg.dims
+    keys = jax.random.split(key, cfg.n_layers)
+    return [
+        init_lora(keys[k], dims[k], dims[k + 1], cfg.lora_rank)
+        for k in range(cfg.n_layers)
+    ]
+
+
+def init_skip_loras(key: jax.Array, cfg: MLPConfig) -> list[Params]:
+    """Skip-LoRA adapters: layer k input -> LAST layer output (dims[k] -> dims[n])."""
+    dims = cfg.dims
+    n = cfg.n_layers
+    keys = jax.random.split(key, n)
+    return [init_lora(keys[k], dims[k], dims[n], cfg.lora_rank) for k in range(n)]
+
+
+def lora_apply(lora: Params, x: jax.Array) -> jax.Array:
+    """y_B = (x W_A) W_B  (Eqs. 7-8)."""
+    return (x @ lora["A"]) @ lora["B"]
+
+
+# ---------------------------------------------------------------------------
+# Parameter partitioning per method
+# ---------------------------------------------------------------------------
+
+
+def init_method(
+    key: jax.Array, cfg: MLPConfig, backbone: Params, method: str
+) -> tuple[Params, Params]:
+    """Split a pre-trained backbone into (trainable, frozen) for ``method``.
+
+    The returned trees are disjoint; ``forward`` recombines them. BN running
+    statistics are always frozen during fine-tuning (inference-mode BN), which
+    is what makes activations sample-deterministic and hence cacheable.
+    """
+    fc = backbone["fc"]
+    bn = backbone["bn"]
+    bn_affine = [{"gamma": b["gamma"], "beta": b["beta"]} for b in bn]
+    bn_stats = [{"mean": b["mean"], "var": b["var"]} for b in bn]
+
+    if method == "ft_all":
+        trainable = {"fc": fc, "bn": bn_affine}
+        frozen = {"bn_stats": bn_stats}
+    elif method == "ft_last":
+        trainable = {"fc_last": fc[-1]}
+        frozen = {"fc": fc[:-1], "bn": bn_affine, "bn_stats": bn_stats}
+    elif method == "ft_bias":
+        trainable = {"b": [layer["b"] for layer in fc], "bn": bn_affine}
+        frozen = {"W": [layer["W"] for layer in fc], "bn_stats": bn_stats}
+    elif method == "ft_all_lora":
+        trainable = {
+            "fc": fc,
+            "bn": bn_affine,
+            "lora": init_per_layer_loras(key, cfg),
+        }
+        frozen = {"bn_stats": bn_stats}
+    elif method == "lora_all":
+        trainable = {"lora": init_per_layer_loras(key, cfg)}
+        frozen = {"fc": fc, "bn": bn_affine, "bn_stats": bn_stats}
+    elif method == "lora_last":
+        dims = cfg.dims
+        trainable = {"lora": init_lora(key, dims[-2], dims[-1], cfg.lora_rank)}
+        frozen = {"fc": fc, "bn": bn_affine, "bn_stats": bn_stats}
+    elif method in ("skip_lora", "skip2_lora"):
+        trainable = {"lora": init_skip_loras(key, cfg)}
+        frozen = {"fc": fc, "bn": bn_affine, "bn_stats": bn_stats}
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return trainable, frozen
+
+
+def _bn_act(h: jax.Array, affine: Params, stats: Params) -> jax.Array:
+    merged = {**affine, **stats}
+    return jax.nn.relu(bn_apply(merged, h))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes (full). Each returns (logits, xs) with xs[k] = input of FC k.
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    method: str, trainable: Params, frozen: Params, x: jax.Array, cfg: MLPConfig
+) -> tuple[jax.Array, list[jax.Array]]:
+    n = cfg.n_layers
+    xs: list[jax.Array] = []
+    h = x
+
+    if method == "ft_all":
+        for k in range(n):
+            xs.append(h)
+            h = h @ trainable["fc"][k]["W"] + trainable["fc"][k]["b"]
+            if k < n - 1:
+                h = _bn_act(h, trainable["bn"][k], frozen["bn_stats"][k])
+        return h, xs
+
+    if method == "ft_last":
+        for k in range(n - 1):
+            xs.append(h)
+            h = h @ frozen["fc"][k]["W"] + frozen["fc"][k]["b"]
+            h = _bn_act(h, frozen["bn"][k], frozen["bn_stats"][k])
+        xs.append(h)
+        h = h @ trainable["fc_last"]["W"] + trainable["fc_last"]["b"]
+        return h, xs
+
+    if method == "ft_bias":
+        for k in range(n):
+            xs.append(h)
+            h = h @ frozen["W"][k] + trainable["b"][k]
+            if k < n - 1:
+                h = _bn_act(h, trainable["bn"][k], frozen["bn_stats"][k])
+        return h, xs
+
+    if method == "ft_all_lora":
+        for k in range(n):
+            xs.append(h)
+            h = h @ trainable["fc"][k]["W"] + trainable["fc"][k]["b"] + lora_apply(
+                trainable["lora"][k], h
+            )
+            if k < n - 1:
+                h = _bn_act(h, trainable["bn"][k], frozen["bn_stats"][k])
+        return h, xs
+
+    if method == "lora_all":
+        for k in range(n):
+            xs.append(h)
+            h = h @ frozen["fc"][k]["W"] + frozen["fc"][k]["b"] + lora_apply(
+                trainable["lora"][k], h
+            )
+            if k < n - 1:
+                h = _bn_act(h, frozen["bn"][k], frozen["bn_stats"][k])
+        return h, xs
+
+    if method == "lora_last":
+        for k in range(n):
+            xs.append(h)
+            y = h @ frozen["fc"][k]["W"] + frozen["fc"][k]["b"]
+            if k == n - 1:
+                y = y + lora_apply(trainable["lora"], h)
+            else:
+                y = _bn_act(y, frozen["bn"][k], frozen["bn_stats"][k])
+            h = y
+        return h, xs
+
+    if method in ("skip_lora", "skip2_lora"):
+        # Backbone forward is entirely frozen; adapters tap every x^k and add
+        # into the LAST layer's output (Eq. 17).
+        for k in range(n):
+            xs.append(h)
+            h = h @ frozen["fc"][k]["W"] + frozen["fc"][k]["b"]
+            if k < n - 1:
+                h = _bn_act(h, frozen["bn"][k], frozen["bn_stats"][k])
+        skip = jnp.zeros_like(h)
+        for k in range(n):
+            skip = skip + lora_apply(trainable["lora"][k], xs[k])
+        return h + skip, xs
+
+    raise ValueError(f"unknown method {method!r}")
+
+
+def skip_forward_cached(
+    trainable: Params, y_base: jax.Array, xs: list[jax.Array]
+) -> jax.Array:
+    """Skip2-LoRA cached forward (Section 4.2): y^n <- c^n + sum_k x^k A_k B_k.
+
+    ``y_base`` is the cached frozen-backbone last-layer output c_i^n; ``xs``
+    are the cached per-layer inputs. No backbone compute at all.
+    """
+    out = y_base
+    for k, lora in enumerate(trainable["lora"]):
+        out = out + lora_apply(lora, xs[k])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Train steps (plain SGD, Eq. 5-6 / 15-16)
+# ---------------------------------------------------------------------------
+
+
+def _sgd(p: Params, g: Params, lr: float) -> Params:
+    return jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+
+@functools.partial(jax.jit, static_argnames=("method", "cfg"))
+def train_step(
+    method: str,
+    cfg: MLPConfig,
+    trainable: Params,
+    frozen: Params,
+    xb: jax.Array,
+    yb: jax.Array,
+    lr: float,
+) -> tuple[Params, jax.Array]:
+    """One full-forward SGD step (all methods)."""
+
+    def loss_fn(t):
+        logits, _ = forward(method, t, frozen, xb, cfg)
+        return cross_entropy(logits, yb)
+
+    loss, grads = jax.value_and_grad(loss_fn)(trainable)
+    return _sgd(trainable, grads, lr), loss
+
+
+@jax.jit
+def cached_train_step(
+    trainable: Params,
+    y_base: jax.Array,
+    xs: list[jax.Array],
+    yb: jax.Array,
+    lr: float,
+) -> tuple[Params, jax.Array]:
+    """One Skip2-LoRA step from cached activations: zero backbone compute."""
+
+    def loss_fn(t):
+        logits = skip_forward_cached(t, y_base, xs)
+        return cross_entropy(logits, yb)
+
+    loss, grads = jax.value_and_grad(loss_fn)(trainable)
+    return _sgd(trainable, grads, lr), loss
+
+
+# Convenience: phase-split callables for the timing benchmarks (Table 6/7).
+
+
+def make_phase_fns(
+    method: str, cfg: MLPConfig
+) -> dict[str, Callable]:
+    """Separately-jitted forward / backward / update, mirroring the paper's
+    per-phase timing rows."""
+
+    @jax.jit
+    def fwd(trainable, frozen, xb):
+        logits, _ = forward(method, trainable, frozen, xb, cfg)
+        return logits
+
+    @jax.jit
+    def bwd(trainable, frozen, xb, yb):
+        def loss_fn(t):
+            logits, _ = forward(method, t, frozen, xb, cfg)
+            return cross_entropy(logits, yb)
+
+        return jax.grad(loss_fn)(trainable)
+
+    @jax.jit
+    def upd(trainable, grads, lr):
+        return _sgd(trainable, grads, lr)
+
+    return {"forward": fwd, "backward": bwd, "update": upd}

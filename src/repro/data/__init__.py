@@ -1,0 +1,1 @@
+"""Data substrate: synthetic drifted datasets + distributed token pipeline."""

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The Skip-LoRA aggregation sum_k x^k A_k B_k (Eq. 17) is the fine-tune loop's
+inner loop once the cache removes the backbone; done per-layer it re-reads
+x^k from HBM L times and wastes MXU lanes on R<<128. The fused kernels here
+stream each x^k tile through VMEM exactly once:
+
+  - ``skip_lora``: fused forward (sum over layers) + fused adapter backward
+    (gA_k, gB_k for all k in one pass) + int8 fused-dequant variant.
+
+Validated in interpret mode against ``ref.py`` jnp oracles (CPU container;
+TPU is the target).
+"""

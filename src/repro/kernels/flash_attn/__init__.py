@@ -1,0 +1,3 @@
+"""Flash attention (sliding-window + GQA + softcap) for populate/prefill."""
+
+from repro.kernels.flash_attn.ops import flash_attention  # noqa: F401

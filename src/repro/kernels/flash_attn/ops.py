@@ -1,0 +1,43 @@
+"""Public wrapper: framework-native layouts + GQA folding + interpret fallback.
+
+Forward-only fusion (the populate/prefill pass is forward-only by
+construction — the paper's whole point is that the backbone never runs a
+backward). For full-train use, wrap with ``jax.checkpoint`` and let XLA
+differentiate the reference path, or call the ref directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn import kernel as K
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(
+    q: jax.Array,   # (B, H, S, hd)
+    k: jax.Array,   # (B, Hkv, S, hd)
+    v: jax.Array,   # (B, Hkv, S, hd)
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Causal (optionally sliding-window) attention, GQA-aware."""
+    b, h, s, hd = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    # Fold GQA: repeat each KV head across its query group, then flatten
+    # (B, H) into the kernel's leading grid axis.
+    kf = jnp.repeat(k, group, axis=1).reshape(b * h, s, hd)
+    vf = jnp.repeat(v, group, axis=1).reshape(b * h, s, hd)
+    qf = q.reshape(b * h, s, hd)
+    out = K.flash_attention_fwd(
+        qf, kf, vf, window=window, softcap=softcap, scale=scale,
+        interpret=_interpret(),
+    )
+    return out.reshape(b, h, s, hd)

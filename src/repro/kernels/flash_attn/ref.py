@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for flash attention (causal, sliding window, GQA, softcap)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,    # (B, H, S, hd)
+    k: jnp.ndarray,    # (B, Hkv, S, hd)
+    v: jnp.ndarray,    # (B, Hkv, S, hd)
+    *,
+    window: int = 0,   # 0 -> full causal
+    softcap: float = 0.0,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, h, s, hd = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    scale = scale if scale is not None else hd**-0.5
+    qg = q.reshape(b, hkv, group, s, hd)
+    logits = jnp.einsum(
+        "bngsh,bnth->bngst", (qg * scale), k, preferred_element_type=jnp.float32
+    ).astype(jnp.float32)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    mask = kj <= qi
+    if window > 0:
+        mask &= kj > qi - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngst,bnth->bngsh", probs, v)
+    return out.reshape(b, h, s, hd)

@@ -1,0 +1,6 @@
+"""Fused Skip-LoRA aggregation kernels (forward, backward, int8 variant)."""
+
+from repro.kernels.skip_lora.ops import (  # noqa: F401
+    skip_lora_fused,
+    skip_lora_fused_int8,
+)

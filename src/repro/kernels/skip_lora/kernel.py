@@ -1,0 +1,177 @@
+"""Pallas TPU kernels for the fused Skip-LoRA aggregation.
+
+Shapes: x (L, M, D) cached activations (M = batch*seq rows), a (L, D, R),
+b (L, R, D), out (M, D). R is the LoRA rank (4..64), far below the 128x128
+MXU tile — so the win is not MXU utilisation on the tiny contractions but
+HBM traffic: each x tile is read exactly once across all L layers and the
+(M, D) output is written once, instead of L round-trips.
+
+Forward grid (m_tiles, L): the layer axis is the *inner, arbitrary* axis so
+the fp32 output block stays resident in VMEM while layers accumulate into
+it (out index_map ignores l -> block revisited, initialised at l == 0).
+
+Backward grid (L, m_tiles): per-layer gA (D, R) / gB (R, D) blocks stay
+resident while row tiles stream (accumulated over m, initialised at m == 0).
+
+VMEM budget per step (bf16, TM=128, D=8192 worst case among assigned archs):
+x tile 2 MB + fp32 out tile 4 MB + A/B/z < 1.5 MB << 16 MB/core.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TM = 128  # row-tile size (MXU-aligned)
+
+
+# ---------------------------------------------------------------------------
+# Forward: out[m, :] = sum_l x[l, m, :] @ a[l] @ b[l]
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, a_ref, b_ref, o_ref):
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0]  # (TM, D)
+    a = a_ref[0].astype(x.dtype)  # (D, R)
+    b = b_ref[0].astype(x.dtype)  # (R, D)
+    z = jnp.dot(x, a, preferred_element_type=jnp.float32).astype(x.dtype)
+    o_ref[...] += jnp.dot(z, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def skip_lora_fwd(x: jax.Array, a: jax.Array, b: jax.Array, *, interpret: bool = False) -> jax.Array:
+    lnum, m, d = x.shape
+    r = a.shape[-1]
+    assert m % TM == 0, f"rows {m} must be padded to a multiple of {TM}"
+    grid = (m // TM, lnum)
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TM, d), lambda mi, li: (li, mi, 0)),
+            pl.BlockSpec((1, d, r), lambda mi, li: (li, 0, 0)),
+            pl.BlockSpec((1, r, d), lambda mi, li: (li, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TM, d), lambda mi, li: (mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(x, a, b)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Backward: gA[l] = x[l]^T (g b[l]^T);  gB[l] = (x[l] a[l])^T g
+# ---------------------------------------------------------------------------
+
+
+def _bwd_kernel(x_ref, a_ref, b_ref, g_ref, ga_ref, gb_ref):
+    mi = pl.program_id(1)
+
+    @pl.when(mi == 0)
+    def _init():
+        ga_ref[...] = jnp.zeros_like(ga_ref)
+        gb_ref[...] = jnp.zeros_like(gb_ref)
+
+    x = x_ref[0]                    # (TM, D)
+    g = g_ref[...]                  # (TM, D)
+    a = a_ref[0].astype(x.dtype)    # (D, R)
+    b = b_ref[0].astype(x.dtype)    # (R, D)
+    z = jnp.dot(x, a, preferred_element_type=jnp.float32).astype(x.dtype)   # (TM, R)
+    gz = jnp.dot(g, b.T, preferred_element_type=jnp.float32).astype(x.dtype)  # (TM, R)
+    ga_ref[0] += jnp.dot(x.T, gz, preferred_element_type=jnp.float32)
+    gb_ref[0] += jnp.dot(z.T, g, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def skip_lora_bwd(
+    x: jax.Array, a: jax.Array, b: jax.Array, g: jax.Array, *, interpret: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    lnum, m, d = x.shape
+    r = a.shape[-1]
+    assert m % TM == 0
+    grid = (lnum, m // TM)
+    ga, gb = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TM, d), lambda li, mi: (li, mi, 0)),
+            pl.BlockSpec((1, d, r), lambda li, mi: (li, 0, 0)),
+            pl.BlockSpec((1, r, d), lambda li, mi: (li, 0, 0)),
+            pl.BlockSpec((TM, d), lambda li, mi: (mi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d, r), lambda li, mi: (li, 0, 0)),
+            pl.BlockSpec((1, r, d), lambda li, mi: (li, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lnum, d, r), jnp.float32),
+            jax.ShapeDtypeStruct((lnum, r, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(x, a, b, g)
+    return ga, gb
+
+
+# ---------------------------------------------------------------------------
+# int8 forward: x[l] = q[l] * scale[l][:, None], dequant fused into the
+# A-projection so the int8 cache never round-trips through HBM as bf16.
+# ---------------------------------------------------------------------------
+
+
+def _fwd_int8_kernel(q_ref, s_ref, a_ref, b_ref, o_ref):
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (TM, D)
+    s = s_ref[0][:, None]                     # (TM, 1) fp32
+    x = (q * s).astype(jnp.bfloat16)
+    a = a_ref[0].astype(jnp.bfloat16)
+    b = b_ref[0].astype(jnp.bfloat16)
+    z = jnp.dot(x, a, preferred_element_type=jnp.float32).astype(jnp.bfloat16)
+    o_ref[...] += jnp.dot(z, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def skip_lora_fwd_int8(
+    q: jax.Array, scale: jax.Array, a: jax.Array, b: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    lnum, m, d = q.shape
+    r = a.shape[-1]
+    assert m % TM == 0
+    grid = (m // TM, lnum)
+    out = pl.pallas_call(
+        _fwd_int8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TM, d), lambda mi, li: (li, mi, 0)),
+            pl.BlockSpec((1, TM), lambda mi, li: (li, mi)),
+            pl.BlockSpec((1, d, r), lambda mi, li: (li, 0, 0)),
+            pl.BlockSpec((1, r, d), lambda mi, li: (li, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TM, d), lambda mi, li: (mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(q, scale, a, b)
+    return out.astype(jnp.bfloat16)

@@ -1,0 +1,83 @@
+"""jit'd public wrappers for the fused Skip-LoRA kernels.
+
+``skip_lora_fused`` takes the framework-native layouts — acts (L, B, S, D),
+adapters (L, D, R) / (L, R, D) — flattens rows, pads to the kernel's row
+tile, dispatches the Pallas kernel (interpret mode off-TPU), and wires the
+fused backward through ``jax.custom_vjp``. Cached activations are constants
+in the fine-tune loop, so their cotangent is a symbolic zero (dropped by
+DCE); only (gA, gB) are ever computed — exactly the paper's Table-1
+``LoRA_yw`` compute type.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.skip_lora import kernel as K
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jax.Array, tm: int) -> tuple[jax.Array, int]:
+    m = x.shape[1]
+    pad = (-m) % tm
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    return x, m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def _skip_lora_rows(x: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (L, M, D) -> (M, D). Differentiable in (a, b); x treated as data."""
+    xp, m = _pad_rows(x, K.TM)
+    out = K.skip_lora_fwd(xp, a, b, interpret=_interpret())
+    return out[:m]
+
+
+def _fwd(x, a, b):
+    return _skip_lora_rows(x, a, b), (x, a, b)
+
+
+def _bwd(res, g):
+    x, a, b = res
+    xp, m = _pad_rows(x, K.TM)
+    gp = jnp.pad(g, ((0, (-m) % K.TM), (0, 0))).astype(x.dtype)
+    ga, gb = K.skip_lora_bwd(xp, a, b, gp, interpret=_interpret())
+    # Cached activations are frozen-backbone constants: zero cotangent
+    # (symbolic; DCE'd when unused).
+    return jnp.zeros_like(x), ga.astype(a.dtype), gb.astype(b.dtype)
+
+
+_skip_lora_rows.defvjp(_fwd, _bwd)
+
+
+def skip_lora_fused(acts: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Fused sum_l acts[l] @ a[l] @ b[l].
+
+    acts: (L, B, S, D); a: (L, D, R); b: (L, R, D) -> (B, S, D).
+    """
+    l, bsz, s, d = acts.shape
+    x = acts.reshape(l, bsz * s, d)
+    out = _skip_lora_rows(x, a, b)
+    return out.reshape(bsz, s, d)
+
+
+def skip_lora_fused_int8(
+    q: jax.Array, scale: jax.Array, a: jax.Array, b: jax.Array
+) -> jax.Array:
+    """int8-cache variant (dequant fused). q: (L,B,S,D) int8; scale (L,B,S)."""
+    l, bsz, s, d = q.shape
+    qr = q.reshape(l, bsz * s, d)
+    sr = scale.reshape(l, bsz * s)
+    pad = (-qr.shape[1]) % K.TM
+    m = qr.shape[1]
+    if pad:
+        qr = jnp.pad(qr, ((0, 0), (0, pad), (0, 0)))
+        sr = jnp.pad(sr, ((0, 0), (0, pad)))
+    out = K.skip_lora_fwd_int8(qr, sr, a, b, interpret=_interpret())
+    return out[:m].reshape(bsz, s, d)

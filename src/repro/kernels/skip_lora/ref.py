@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the fused Skip-LoRA kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def skip_lora_fwd_ref(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """sum_l x[l] @ a[l] @ b[l].
+
+    x: (L, M, D); a: (L, D, R); b: (L, R, D) -> (M, D) in x.dtype.
+    Contractions accumulate in fp32 (matches kernel numerics).
+    """
+    z = jnp.einsum(
+        "lmd,ldr->lmr", x, a.astype(x.dtype), preferred_element_type=jnp.float32
+    )
+    out = jnp.einsum(
+        "lmr,lrd->md", z.astype(x.dtype), b.astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(x.dtype)
+
+
+def skip_lora_bwd_ref(
+    x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, g: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Adapter grads for all layers. Returns (gA (L,D,R), gB (L,R,D)) fp32.
+
+    gB[l] = (x[l] a[l])^T g ;  gA[l] = x[l]^T (g b[l]^T).
+    No gx: cached activations are constants (the paper's frozen backbone).
+    """
+    z = jnp.einsum(
+        "lmd,ldr->lmr", x, a.astype(x.dtype), preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    gb = jnp.einsum("lmr,md->lrd", z, g, preferred_element_type=jnp.float32)
+    gz = jnp.einsum(
+        "md,lrd->lmr", g, b.astype(g.dtype), preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    ga = jnp.einsum("lmd,lmr->ldr", x, gz, preferred_element_type=jnp.float32)
+    return ga.astype(jnp.float32), gb.astype(jnp.float32)
+
+
+def skip_lora_int8_fwd_ref(
+    q: jnp.ndarray, scale: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, dtype=jnp.bfloat16
+) -> jnp.ndarray:
+    """int8 variant: x[l] = q[l] * scale[l][:, None] dequantised on the fly.
+
+    q: (L, M, D) int8; scale: (L, M) fp32.
+    """
+    x = (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+    return skip_lora_fwd_ref(x, a.astype(dtype), b.astype(dtype))

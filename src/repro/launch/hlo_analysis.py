@@ -1,0 +1,240 @@
+"""Post-compile HLO analysis: collective-traffic extraction.
+
+``compiled.cost_analysis()`` has no collective-bytes property, so we parse
+the optimized HLO text: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction contributes its estimated
+*per-device traffic*, and instructions inside ``while`` bodies (lax.scan!)
+are multiplied by the loop trip count (recovered from the loop condition's
+``compare(iv, constant(N)), direction=LT`` pattern) — XLA's own cost
+analysis counts loop bodies only once, which would undercount a scanned
+layer stack by n_periods.
+
+Traffic conventions (ring algorithms, per device):
+  all-gather         : result_bytes * (n-1)/n            ~ result bytes
+  reduce-scatter     : input ~ result*n -> result_bytes * (n-1)
+  all-reduce         : 2 * operand_bytes * (n-1)/n       ~ 2 * result bytes
+  all-to-all         : result_bytes * (n-1)/n
+  collective-permute : result bytes
+We approximate (n-1)/n ~ 1 (n = 16..512 here) and do not know n per op
+(subgroups), so the reported number is a slight over-estimate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+) \(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)"
+)
+_TRIP_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_CALL_RE = re.compile(r" call\(.*?\), to_apply=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"%?([\w\.\-]+) = s32\[\] constant\((\d+)\)")
+_COMPARE_RE = re.compile(
+    r"compare\(\s*[^)]*?%?([\w\.\-]+),\s*[^)]*?%?([\w\.\-]+)\s*\), direction=LT"
+)
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+_RESULT_TYPE_RE = re.compile(r"^\s*(?:ROOT )?%?[\w\.\-]+ = (.+?) [\w\-]+\(")
+
+
+def _first_shape_bytes(text: str) -> float:
+    """Bytes of the instruction's result type (tuple results: sum members).
+
+    The type sits between '=' and the op name; tuple types contain parens,
+    so match up to the op-name-then-paren rather than the first '('."""
+    m = _RESULT_TYPE_RE.match(text)
+    head = m.group(1) if m else text.split("(", 1)[0]
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(head):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op_bytes: dict[str, float]
+    total_bytes: float
+    count: int
+
+    def as_dict(self):
+        return {
+            "per_op_bytes": dict(self.per_op_bytes),
+            "total_bytes": self.total_bytes,
+            "count": self.count,
+        }
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """Computation name -> body lines. Headers sit at column 0 and open a
+    brace; bodies are indented (robust to tuple-typed params with nested
+    parens, which defeat naive paren matching)."""
+    comps: dict[str, list[str]] = {}
+    current = None
+    for line in hlo.splitlines():
+        if line and not line[0].isspace():
+            m = _COMP_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                current = m.group(1)
+                comps[current] = []
+                continue
+        if current is not None:
+            comps[current].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Recover scan trip count from the condition computation (default 1)."""
+    consts = {}
+    for ln in cond_lines:
+        for name, val in _CONST_RE.findall(ln):
+            consts[name] = int(val)
+    for ln in cond_lines:
+        m = _COMPARE_RE.search(ln)
+        if m:
+            for op in m.groups():
+                if op in consts:
+                    return max(1, consts[op])
+    # fallback: any s32 constant in the condition
+    if consts:
+        return max(consts.values())
+    return 1
+
+
+def _loop_multipliers(comps: dict[str, list[str]]) -> dict[str, float]:
+    """Per-computation execution multiplier from enclosing while loops.
+
+    Trip counts come from XLA's ``backend_config known_trip_count`` on the
+    while instruction (authoritative for lax.scan), falling back to the
+    condition computation's ``compare(iv, constant), direction=LT``."""
+    mult: dict[str, float] = defaultdict(lambda: 1.0)
+    edges: list[tuple[str, str, float]] = []  # (parent, child, factor)
+    for name, lines in comps.items():
+        for ln in lines:
+            m = _WHILE_RE.search(ln)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                mt = _TRIP_RE.search(ln)
+                tc = int(mt.group(1)) if mt else _trip_count(comps.get(cond, []))
+                edges.append((name, body, float(tc)))
+                edges.append((name, cond, float(tc)))
+            mc = _CALL_RE.search(ln)
+            if mc:
+                edges.append((name, mc.group(1), 1.0))
+
+    for _ in range(8):  # nesting depth bound
+        changed = False
+        for parent, child, factor in edges:
+            want = mult[parent] * factor
+            if mult[child] < want:
+                mult[child] = want
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def analyze_collectives(hlo: str) -> CollectiveStats:
+    comps = _split_computations(hlo)
+    mult = _loop_multipliers(comps)
+    per_op: dict[str, float] = defaultdict(float)
+    count = 0
+    for name, lines in comps.items():
+        m = mult[name]
+        for ln in lines:
+            for op in COLLECTIVE_OPS:
+                if f" {op}(" in ln or f" {op}-start(" in ln:
+                    nbytes = _first_shape_bytes(ln)
+                    if op == "all-reduce":
+                        nbytes *= 2.0
+                    count += 1
+                    per_op[op] += nbytes * m
+                    break
+    total = sum(per_op.values())
+    return CollectiveStats(per_op_bytes=dict(per_op), total_bytes=total, count=count)
+
+
+# ---------------------------------------------------------------------------
+# Dot-FLOP extraction.
+#
+# ``cost_analysis()['flops']`` on the CPU backend is polluted by float-
+# normalisation (bf16 ops rewritten to f32 with full-tensor converts/copies
+# counted as flops) and misses while-loop trip counts. MXU-relevant compute
+# is the dots; we count them from the optimized HLO with loop multipliers:
+# flops(dot) = 2 * prod(result_dims) * prod(contracting dims of lhs).
+# ---------------------------------------------------------------------------
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT )?%?([\w\.\-]+) = (\S+) ")
+_DOT_RE = re.compile(
+    r"^\s*(?:ROOT )?%?([\w\.\-]+) = (\S+) dot\(([^)]*)\).*?"
+    r"lhs_contracting_dims=\{([0-9,]*)\}"
+)
+
+
+def _shape_dims(shape_str: str) -> tuple[str, list[int]]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def analyze_dot_flops(hlo: str) -> float:
+    """Per-device dot FLOPs (2*M*N*K), loop-multiplied."""
+    comps = _split_computations(hlo)
+    mult = _loop_multipliers(comps)
+    total = 0.0
+    for cname, lines in comps.items():
+        shapes: dict[str, str] = {}
+        for ln in lines:
+            mi = _INSTR_RE.match(ln)
+            if mi:
+                shapes[mi.group(1)] = mi.group(2)
+        for ln in lines:
+            md = _DOT_RE.match(ln)
+            if not md:
+                continue
+            out_name, out_shape, operands, lhs_cdims = md.groups()
+            _, out_dims = _shape_dims(out_shape)
+            # Operands are either typed ("f32[128,256]{1,0} %ar, ...") or
+            # bare ("%ar, %w"). Shape literals contain commas, so prefer a
+            # direct shape scan over comma-splitting.
+            op_shapes = _SHAPE_RE.findall(operands)
+            if op_shapes:
+                lhs_dims = [int(d) for d in op_shapes[0][1].split(",") if d]
+            else:
+                lhs_name = operands.split(",")[0].strip().lstrip("%")
+                _, lhs_dims = _shape_dims(shapes.get(lhs_name, ""))
+            k = 1
+            for ci in (int(c) for c in lhs_cdims.split(",") if c):
+                if ci < len(lhs_dims):
+                    k *= lhs_dims[ci]
+            n_out = 1
+            for d in out_dims:
+                n_out *= d
+            total += 2.0 * n_out * k * mult[cname]
+    return total

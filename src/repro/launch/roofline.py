@@ -1,0 +1,130 @@
+"""Roofline analysis over the dry-run records (§Roofline of EXPERIMENTS.md).
+
+Per (arch x shape x step x mesh):
+
+    compute_s    = dot_flops_per_device / PEAK_FLOPS        (197 TF/s bf16)
+    memory_s     = bytes_accessed_per_device / HBM_BW       (819 GB/s)
+    collective_s = collective_bytes_per_device / ICI_BW     (~50 GB/s/link)
+
+All three numerators are per-device (the XLA SPMD module is one device's
+program). dot_flops comes from our HLO dot parser (loop-aware; the CPU
+backend's cost_analysis 'flops' is polluted by f32 normalisation).
+bytes_accessed is cost_analysis's number: an over-estimate on this CPU
+backend (bf16->f32 materialisation roughly doubles traffic; treat the
+memory term as an upper bound — noted in the report).
+
+MFU_model = MODEL_FLOPS / (chips * PEAK * max(terms)): useful-model-flops
+utilisation at the modeled bottleneck — the §Perf score.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.roofline \
+        --in benchmarks/dryrun_baseline.json --md
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+PEAK_FLOPS = 197e12     # TPU v5e bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+
+def analyze_record(rec: dict) -> dict:
+    from repro.configs.registry import get_config
+    from repro.launch.flops import model_flops
+
+    if "error" in rec:
+        return dict(rec)
+    chips = rec["chips"]
+    compute_s = rec["dot_flops"] / PEAK_FLOPS
+    memory_s = rec["bytes_accessed"] / HBM_BW
+    collective_s = rec["collective_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())
+
+    cfg = get_config(rec["arch"])
+    mf = model_flops(cfg, rec["shape"], rec["step"])
+    hlo_global = rec["dot_flops"] * chips
+    ratio = mf / hlo_global if hlo_global else 0.0
+    mfu = mf / (chips * PEAK_FLOPS * step_time) if step_time else 0.0
+
+    out = dict(rec)
+    out.update(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        step_time_s=step_time,
+        model_flops=mf,
+        model_to_hlo_ratio=ratio,
+        mfu_model=mfu,
+    )
+    return out
+
+
+MOVE_HINTS = {
+    "compute": "cut recompute (remat policy) / pad-free sharding; compute is the wall",
+    "memory": "fuse elementwise chains, keep bf16 end-to-end, larger per-step tiles",
+    "collective": "reshard to cut all-gathers (seq-parallel residuals), overlap collectives with compute, compress DP grads",
+}
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | step | mesh | compute_s | memory_s | collective_s | "
+        "dominant | MODEL_FLOPS | model/HLO | MFU_model |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    body = []
+    for r in rows:
+        if "error" in r:
+            body.append(
+                f"| {r['arch']} | {r['shape']} | {r['step']} | {r['mesh']} | "
+                f"ERROR: {r['error'][:60]} | | | | | | |"
+            )
+            continue
+        body.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} | {r['mesh']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| **{r['dominant']}** | {r['model_flops']:.2e} "
+            f"| {r['model_to_hlo_ratio']:.2f} | {r['mfu_model']:.3f} |"
+        )
+    return hdr + "\n".join(body) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="benchmarks/dryrun_baseline.json")
+    ap.add_argument("--out", default=None, help="write analyzed JSON here")
+    ap.add_argument("--md", action="store_true", help="print markdown table")
+    ap.add_argument("--mesh", default=None, help="filter: 16x16 or 2x16x16")
+    args = ap.parse_args()
+
+    with open(args.inp) as f:
+        records = json.load(f)
+    rows = [analyze_record(r) for r in records]
+    if args.mesh:
+        rows = [r for r in rows if r.get("mesh") == args.mesh]
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+    if args.md:
+        print(to_markdown(rows))
+    else:
+        for r in rows:
+            if "error" in r:
+                print(f"{r['arch']} {r['shape']} {r['mesh']}: ERROR")
+                continue
+            print(
+                f"{r['arch']:24s} {r['shape']:12s} {r['step']:16s} {r['mesh']:7s} "
+                f"C={r['compute_s']:.3f}s M={r['memory_s']:.3f}s "
+                f"X={r['collective_s']:.3f}s dom={r['dominant']:10s} "
+                f"MFU={r['mfu_model']:.3f} hint: {MOVE_HINTS[r['dominant']]}"
+            )
+
+
+if __name__ == "__main__":
+    main()

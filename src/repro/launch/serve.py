@@ -1,0 +1,98 @@
+"""Batched serving launcher: prefill + decode loop with optional adapters.
+
+Demonstrates serving a (reduced) model with batched requests and Skip-LoRA
+adapters applied at decode time — the deployment path after an on-device
+fine-tune (adapters are NOT mergeable into the backbone because the skip
+topology bypasses it; the running skip-sum costs 2*L*R*(D_in+D_out) FLOPs
+per token, <0.1% of a block forward).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
+      --reduced --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.core import lm_skiplora as SL
+from repro.models.lm import (
+    init_lm,
+    init_serve_caches,
+    serve_decode,
+    serve_prefill,
+)
+
+
+def generate(
+    params, cfg, tokens, *, max_new: int, adapters_stack=None, temperature: float = 0.0
+):
+    """Greedy/temperature batched generation. Returns (B, max_new) tokens."""
+    b, s = tokens.shape
+    caches = init_serve_caches(cfg, b, s + max_new)
+    prefill = jax.jit(
+        lambda p, t, c: serve_prefill(p, cfg, t, c, adapters=adapters_stack)
+    )
+    decode = jax.jit(
+        lambda p, t, pos, c: serve_decode(p, cfg, t, pos, c, adapters=adapters_stack)
+    )
+    logits, caches = prefill(params, tokens, caches)
+    out = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    key = jax.random.key(0)
+    for i in range(max_new):
+        out.append(tok)
+        logits, caches = decode(params, tok, jnp.asarray(s + i, jnp.int32), caches)
+        if temperature > 0:
+            key, sk = jax.random.split(key)
+            tok = jax.random.categorical(sk, logits[:, 0] / temperature)[:, None]
+            tok = tok.astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--with-adapters", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    params = init_lm(jax.random.key(0), cfg)
+
+    adapters_stack = None
+    if args.with_adapters:
+        sl = SL.SkipLoRAConfig(rank=8)
+        ad = SL.init_adapters(jax.random.key(1), cfg, sl)
+        ad["B"] = jax.random.normal(jax.random.key(2), ad["B"].shape) * 0.01
+        adapters_stack = SL.adapters_to_stack(ad, cfg)
+
+    prompts = jax.random.randint(
+        jax.random.key(3), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+    t0 = time.perf_counter()
+    toks = generate(
+        params, cfg, prompts, max_new=args.gen,
+        adapters_stack=adapters_stack, temperature=args.temperature,
+    )
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    print(f"generated {toks.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s incl. compile)")
+    print("first sequences:", toks[:2, :8].tolist())
+
+
+if __name__ == "__main__":
+    main()

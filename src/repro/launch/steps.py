@@ -1,0 +1,400 @@
+"""Step factories + input/sharding spec builders for every dry-run cell.
+
+``build_cell(arch, shape, mesh, step_kind)`` returns (fn, arg_specs,
+in_shardings, out_shardings) ready for ``jax.jit(fn, ...).lower(*specs)``:
+
+  step kinds:
+    train            : full-backprop AdamW train step (baseline)
+    finetune_populate: Skip2-LoRA populate step (backbone fwd + cache write)
+    finetune_cached  : Skip2-LoRA cached step (the paper's fast path;
+                       consumes a batch of cached activations — the cache
+                       itself streams from host/store, DESIGN.md §4)
+    prefill          : serve_prefill over the full prompt
+    decode           : one-token serve_decode against a seq-long cache
+
+All inputs are ShapeDtypeStructs (no allocation).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import get_config
+from repro.core import lm_skiplora as SL
+from repro.launch.shapes import SHAPES, ShapeCell
+from repro.models.config import ModelConfig
+from repro.models.lm import (
+    init_lm,
+    init_serve_caches,
+    model_dtype,
+    serve_decode,
+    serve_prefill,
+    train_loss_fn,
+)
+from repro.optim.optimizers import adamw, apply_updates, clip_by_global_norm
+from repro.runtime import sharding as SH
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Spec helpers
+# ---------------------------------------------------------------------------
+
+
+def _shape_tree(f, *args) -> Params:
+    return jax.eval_shape(f, *args)
+
+
+def _guarded_spec(shape: tuple, logical: tuple, mesh, rules: SH.AxisRules) -> P:
+    parts = []
+    for dim, a in zip(shape, logical):
+        r = rules.resolve(mesh.axis_names, a)
+        if r is not None and dim % SH._axis_size(mesh, r) != 0:
+            r = None  # argument shardings must divide evenly
+        parts.append(r)
+    parts += [None] * (len(shape) - len(logical))
+    return P(*parts)
+
+
+def cache_specs(cache_shape: Params, mesh, rules: SH.AxisRules) -> Params:
+    """Sharding specs for serve caches (KV + recurrent states)."""
+
+    def leaf(path, x):
+        pstr = SH._path_str(path)
+        shape = tuple(x.shape)
+        stacked = "periods" in pstr
+        inner = shape[1:] if stacked else shape
+        name = pstr.rsplit("/", 1)[-1]
+        if name in ("k", "v"):             # (B, S, nk, hd)
+            # Prefer head-sharded KV; if kv-head count doesn't divide the
+            # model axis, shard the *sequence* dim over it instead (context
+            # parallelism) — composing with 'data' when long-decode rules
+            # already put seq there.
+            nk = inner[2]
+            heads_ok = nk % SH._axis_size(mesh, "model") == 0
+            seq_axes = []
+            if rules.resolve(mesh.axis_names, "seq") is not None:
+                seq_axes.append("data")
+            if not heads_ok:
+                seq_axes.append("model")
+            seq_part = tuple(seq_axes) if seq_axes else None
+            if seq_part is not None and inner[1] % SH._axis_size(mesh, seq_part) != 0:
+                seq_part = None
+            sp = _guarded_spec(
+                inner,
+                ("batch", seq_part, "heads" if heads_ok else None, None),
+                mesh,
+                rules,
+            )
+        elif name == "ssm":                # (B, Di, N)
+            sp = _guarded_spec(inner, ("batch", "d_inner", None), mesh, rules)
+        elif name == "conv":               # (B, K-1, Di)
+            sp = _guarded_spec(inner, ("batch", None, "d_inner"), mesh, rules)
+        elif name == "c":                  # (B, H, hd, hd) mLSTM
+            sp = _guarded_spec(inner, ("batch", "heads", None, None), mesh, rules)
+        elif name in ("n",):               # (B, H, hd) or (B, D)
+            sp = _guarded_spec(inner, ("batch",) + (None,) * (len(inner) - 1), mesh, rules)
+        else:                              # m, h, ...
+            sp = _guarded_spec(inner, ("batch",) + (None,) * (len(inner) - 1), mesh, rules)
+        return P(None, *sp) if stacked else sp
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shape)
+
+
+def batch_specs(batch_shape: Params, mesh, rules: SH.AxisRules) -> Params:
+    def leaf(x):
+        return _guarded_spec(tuple(x.shape), ("batch",), mesh, rules)
+
+    return jax.tree.map(leaf, batch_shape)
+
+
+def opt_state_specs(opt_shape, p_specs, mesh) -> Params:
+    """OptState specs: scalar step replicated; moments ZeRO-1-upgraded
+    (mu/nu share the params' tree structure)."""
+    from repro.optim.optimizers import OptState
+
+    mu_specs = (
+        SH.zero1_specs(opt_shape.mu, p_specs, mesh) if opt_shape.mu is not None else None
+    )
+    nu_specs = (
+        SH.zero1_specs(opt_shape.nu, p_specs, mesh) if opt_shape.nu is not None else None
+    )
+    return OptState(step=P(), mu=mu_specs, nu=nu_specs)
+
+
+# ---------------------------------------------------------------------------
+# Cell builder
+# ---------------------------------------------------------------------------
+
+
+STEP_KINDS = (
+    "train", "finetune_populate", "finetune_cached", "prefill", "decode",
+    "decode_adapted",
+)
+
+
+def _grid_batch_rules(kw: dict, shape: ShapeCell, mesh, vocab_size: int,
+                      batch_cands) -> SH.AxisRules:
+    for cand in batch_cands:
+        axes = tuple(a for a in cand if a in mesh.axis_names)
+        if axes and shape.batch % SH._axis_size(mesh, axes) == 0:
+            kw["batch"] = axes
+            break
+    # Loss sharding: whole-grid vocab when it divides (logits batch stays
+    # replicated, d_table fully local); otherwise batch@data x vocab@model.
+    grid = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    if vocab_size % SH._axis_size(mesh, grid) == 0:
+        kw["vocab"] = grid
+        kw["logits_batch"] = None
+    else:
+        kw["vocab"] = "model"
+        kw["logits_batch"] = ("data",)
+    return SH.AxisRules(**kw)
+
+
+def rules_for(shape: ShapeCell, mesh, strategy: str = "tp", vocab_size: int = 0) -> SH.AxisRules:
+    if strategy == "ep":
+        return _grid_batch_rules(
+            dict(SH.EP_RULES_KW), shape, mesh, vocab_size,
+            (("data", "model"), ("pod", "data"), ("data",)),
+        )
+    if strategy == "fsdp":
+        return _grid_batch_rules(
+            dict(SH.FSDP_RULES_KW), shape, mesh, vocab_size,
+            (("pod", "data", "model"), ("data", "model"), ("pod", "data"), ("data",)),
+        )
+    if shape.kind == "decode" and shape.batch < SH._axis_size(mesh, "data"):
+        # Long-context decode (batch=1): sequence parallelism over the cache.
+        return SH.AxisRules(seq="data")
+    return SH.AxisRules()
+
+
+def default_skiplora(cfg: ModelConfig) -> SL.SkipLoRAConfig:
+    return SL.SkipLoRAConfig(rank=16, mode="full", cache_dtype="bfloat16")
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    step_kind: str,
+    *,
+    skiplora: Optional[SL.SkipLoRAConfig] = None,
+    strategy: str = "tp",
+):
+    """Returns (fn, example_args (ShapeDtypeStructs), in_shardings, out_shardings).
+
+    strategy:
+      tp   — Megatron TP on 'model' + DP on ('pod','data') (baseline);
+             auto-upgrades to mixed FSDP when weights don't fit.
+      fsdp — batch over the whole (data x model) grid, weights fully
+             sharded, per-layer weight all-gather (§Perf hillclimb).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rules = rules_for(shape, mesh, strategy, get_config(arch).vocab_size)
+    dt = model_dtype(cfg)
+    key = jax.random.key(0)
+
+    params_shape = _shape_tree(lambda k: init_lm(k, cfg), key)
+    if strategy == "fsdp":
+        p_specs = SH.fsdp_param_specs(params_shape, mesh)
+    elif strategy == "ep":
+        p_specs = SH.ep_param_specs(params_shape, mesh)
+    else:
+        p_specs = SH.param_specs(params_shape, mesh)
+        # FSDP upgrade when TP alone can't fit the weights (jamba-398B).
+        p_specs, _ = SH.maybe_fsdp_specs(params_shape, p_specs, mesh)
+    p_shard = SH.named(mesh, p_specs)
+
+    def mk_batch_shape(b, s):
+        bs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if cfg.frontend:
+            bs["prefix_embeds"] = jax.ShapeDtypeStruct((b, cfg.frontend_seq, cfg.d_model), dt)
+        return bs
+
+    if step_kind == "train":
+        opt = adamw(3e-4, weight_decay=0.1)
+        opt_shape = _shape_tree(opt.init, params_shape)
+        o_specs = opt_state_specs(opt_shape, p_specs, mesh)
+        o_shard = SH.named(mesh, o_specs)
+        batch_shape = mk_batch_shape(shape.batch, shape.seq)
+        b_specs = batch_specs(batch_shape, mesh, rules)
+        b_shard = SH.named(mesh, b_specs)
+
+        def train_step(params, opt_state, batch):
+            with SH.sharding_scope(mesh, rules):
+                loss, grads = jax.value_and_grad(
+                    lambda p: train_loss_fn(p, cfg, batch)
+                )(params)
+                grads = clip_by_global_norm(grads, 1.0)
+                updates, opt_state = opt.update(grads, opt_state, params)
+                params = apply_updates(params, updates)
+            return params, opt_state, loss
+
+        args = (params_shape, opt_shape, batch_shape)
+        in_sh = (p_shard, o_shard, b_shard)
+        out_sh = (p_shard, o_shard, SH.replicated(mesh))
+        return train_step, args, in_sh, out_sh
+
+    if step_kind in ("finetune_populate", "finetune_cached"):
+        sl = skiplora or default_skiplora(cfg)
+        opt = adamw(1e-3)
+        ad_shape = _shape_tree(lambda k: SL.init_adapters(k, cfg, sl), key)
+        trainable_shape, static_shape = SL.split_trainable(ad_shape, sl)
+        opt_shape = _shape_tree(opt.init, trainable_shape)
+        # A (L, D, R): tiny, replicate. B (L, R, D): shard output dim.
+        ad_spec = {
+            "A": P(None, None, None),
+            "B": P(None, None, "model"),
+        }
+        t_specs, s_specs = SL.split_trainable(ad_spec, sl)
+        t_shard = SH.named(mesh, t_specs)
+        s_shard = SH.named(mesh, s_specs)
+        o_shard = SH.named(mesh, jax.tree.map(lambda _: P(), opt_shape))
+
+        if step_kind == "finetune_populate":
+            batch_shape = mk_batch_shape(shape.batch, shape.seq)
+            b_specs = batch_specs(batch_shape, mesh, rules)
+            b_shard = SH.named(mesh, b_specs)
+            # Cache values are *outputs* here (stream to host/store).
+            def populate_step(params, trainable, static, batch):
+                with SH.sharding_scope(mesh, rules):
+                    def loss_fn(t):
+                        return SL.populate_loss_fn(
+                            params, cfg, SL.merge_adapters(t, static), batch
+                        )
+
+                    (loss, (acts, y_base, labels)), grads = jax.value_and_grad(
+                        loss_fn, has_aux=True
+                    )(trainable)
+                    values = SL._encode_acts(
+                        acts, SL.merge_adapters(trainable, static), sl
+                    )
+                    values["y_base"] = y_base
+                    trainable = apply_updates(
+                        trainable, jax.tree.map(lambda g: -1e-3 * g, grads)
+                    )
+                return trainable, values, loss
+
+            args = (params_shape, trainable_shape, static_shape, batch_shape)
+            in_sh = (p_shard, t_shard, s_shard, b_shard)
+            out_sh = None
+            return populate_step, args, in_sh, out_sh
+
+        # finetune_cached: consumes a batch of cached activations.
+        b, s = shape.batch, shape.seq
+        l, d, r = cfg.n_layers, cfg.d_model, sl.rank
+        cdt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[sl.cache_dtype]
+        if sl.mode == "freeze_a":
+            vals_shape = {"z": jax.ShapeDtypeStruct((b, l, s, r), cdt)}
+        elif sl.mode == "int8":
+            vals_shape = {
+                "acts_q": jax.ShapeDtypeStruct((b, l, s, d), jnp.int8),
+                "acts_scale": jax.ShapeDtypeStruct((b, l, s), jnp.float32),
+            }
+        else:
+            vals_shape = {"acts": jax.ShapeDtypeStruct((b, l, s, d), cdt)}
+        vals_shape["y_base"] = jax.ShapeDtypeStruct((b, s, d), cdt)
+        vals_shape["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        v_specs = batch_specs(vals_shape, mesh, rules)
+        v_shard = SH.named(mesh, v_specs)
+
+        def cached_step(params, trainable, static, opt_state, vals):
+            with SH.sharding_scope(mesh, rules):
+                def loss_fn(t):
+                    return SL.cached_loss_fn(
+                        params, cfg, sl, SL.merge_adapters(t, static), vals, dt
+                    )
+
+                loss, grads = jax.value_and_grad(loss_fn)(trainable)
+                updates, opt_state = opt.update(grads, opt_state, trainable)
+                trainable = apply_updates(trainable, updates)
+            return trainable, opt_state, loss
+
+        args = (params_shape, trainable_shape, static_shape, opt_shape, vals_shape)
+        in_sh = (p_shard, t_shard, s_shard, o_shard, v_shard)
+        out_sh = (t_shard, o_shard, SH.replicated(mesh))
+        return cached_step, args, in_sh, out_sh
+
+    if step_kind == "prefill":
+        b, s = shape.batch, shape.seq
+        # The frontend prefix occupies the first positions of the context
+        # window: text/code tokens fill the remainder (total == shape.seq).
+        s_tok = s - (cfg.frontend_seq if cfg.frontend else 0)
+        tokens_shape = jax.ShapeDtypeStruct((b, s_tok), jnp.int32)
+        cache_shape = _shape_tree(lambda: init_serve_caches(cfg, b, s))
+        c_specs = cache_specs(cache_shape, mesh, rules)
+        c_shard = SH.named(mesh, c_specs)
+        tok_shard = SH.named(mesh, batch_specs(tokens_shape, mesh, rules))
+        prefix_shape = (
+            jax.ShapeDtypeStruct((b, cfg.frontend_seq, cfg.d_model), dt)
+            if cfg.frontend
+            else None
+        )
+
+        def prefill_step(params, tokens, caches, prefix_embeds):
+            with SH.sharding_scope(mesh, rules):
+                return serve_prefill(
+                    params, cfg, tokens, caches, prefix_embeds=prefix_embeds
+                )
+
+        args = (params_shape, tokens_shape, cache_shape, prefix_shape)
+        pre_shard = (
+            SH.named(mesh, batch_specs(prefix_shape, mesh, rules))
+            if prefix_shape is not None
+            else None
+        )
+        in_sh = (p_shard, tok_shard, c_shard, pre_shard)
+        out_sh = (SH.replicated(mesh), c_shard)
+        return prefill_step, args, in_sh, out_sh
+
+    if step_kind in ("decode", "decode_adapted"):
+        b, s = shape.batch, shape.seq
+        token_shape = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+        cache_shape = _shape_tree(lambda: init_serve_caches(cfg, b, s))
+        c_specs = cache_specs(cache_shape, mesh, rules)
+        c_shard = SH.named(mesh, c_specs)
+        tok_shard = SH.named(mesh, batch_specs(token_shape, mesh, rules))
+
+        if step_kind == "decode_adapted":
+            # Post-fine-tune deployment: Skip-LoRA adapters applied at
+            # decode time (the skip topology is not mergeable; the running
+            # skip-sum rides along through the stack).
+            sl = skiplora or default_skiplora(cfg)
+            ad_shape = _shape_tree(lambda k: SL.init_adapters(k, cfg, sl), key)
+            ad_spec = {"A": P(None, None, None), "B": P(None, None, "model")}
+            ad_shard = SH.named(mesh, ad_spec)
+
+            def decode_adapted_step(params, adapters, token, pos, caches):
+                with SH.sharding_scope(mesh, rules):
+                    stack = SL.adapters_to_stack(adapters, cfg)
+                    return serve_decode(
+                        params, cfg, token, pos, caches, adapters=stack
+                    )
+
+            args = (params_shape, ad_shape, token_shape, pos_shape, cache_shape)
+            in_sh = (p_shard, ad_shard, tok_shard, SH.replicated(mesh), c_shard)
+            out_sh = (SH.replicated(mesh), c_shard)
+            return decode_adapted_step, args, in_sh, out_sh
+
+        def decode_step(params, token, pos, caches):
+            with SH.sharding_scope(mesh, rules):
+                return serve_decode(params, cfg, token, pos, caches)
+
+        args = (params_shape, token_shape, pos_shape, cache_shape)
+        in_sh = (p_shard, tok_shard, SH.replicated(mesh), c_shard)
+        out_sh = (SH.replicated(mesh), c_shard)
+        return decode_step, args, in_sh, out_sh
+
+    raise ValueError(step_kind)

@@ -1,0 +1,1 @@
+"""Model zoo: paper-scale MLPs and the assigned LM architectures."""

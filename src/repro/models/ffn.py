@@ -1,0 +1,39 @@
+"""Feed-forward blocks: plain MLP, SwiGLU/GeGLU gated variants."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation
+
+Params = Any
+
+
+def init_ffn(key: jax.Array, d: int, d_ff: int, *, gated: bool, dtype=jnp.float32) -> Params:
+    s_in = 1.0 / jnp.sqrt(d)
+    s_out = 1.0 / jnp.sqrt(d_ff)
+    if gated:
+        kg, ku, kd = jax.random.split(key, 3)
+        return {
+            "w_gate": jax.random.normal(kg, (d, d_ff), dtype) * s_in,
+            "w_up": jax.random.normal(ku, (d, d_ff), dtype) * s_in,
+            "w_down": jax.random.normal(kd, (d_ff, d), dtype) * s_out,
+        }
+    ku, kd = jax.random.split(key)
+    return {
+        "w_up": jax.random.normal(ku, (d, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(kd, (d_ff, d), dtype) * s_out,
+    }
+
+
+def ffn(params: Params, x: jax.Array, *, act: str, gated: bool) -> jax.Array:
+    dtype = x.dtype
+    if gated:
+        g = activation(act, x @ params["w_gate"].astype(dtype))
+        u = x @ params["w_up"].astype(dtype)
+        return (g * u) @ params["w_down"].astype(dtype)
+    h = activation(act, x @ params["w_up"].astype(dtype))
+    return h @ params["w_down"].astype(dtype)

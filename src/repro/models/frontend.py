@@ -1,0 +1,39 @@
+"""Modality frontend stubs (assignment: frontends are NOT implemented).
+
+``[vlm]`` / ``[audio]`` architectures specify the transformer *backbone*
+only. Per the assignment, ``input_specs()`` provides precomputed patch/frame
+embeddings; these helpers define their shapes and fold them into the token
+stream (prefix embeddings ahead of the embedded text/code tokens, with the
+loss masked over the prefix).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def frontend_prefix_len(cfg: ModelConfig) -> int:
+    """Number of prefix embedding positions supplied by the (stub) frontend."""
+    if cfg.frontend is None:
+        return 0
+    return cfg.frontend_seq
+
+
+def prefix_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct for the precomputed frontend embeddings."""
+    p = frontend_prefix_len(cfg)
+    if p == 0:
+        return None
+    return jax.ShapeDtypeStruct((batch, p, cfg.d_model), dtype)
+
+
+def splice_prefix(
+    token_embeds: jax.Array, prefix_embeds: jax.Array | None
+) -> jax.Array:
+    """Concatenate frontend prefix embeddings ahead of token embeddings."""
+    if prefix_embeds is None:
+        return token_embeds
+    return jnp.concatenate([prefix_embeds.astype(token_embeds.dtype), token_embeds], axis=1)

@@ -1,0 +1,149 @@
+"""Elementary layers: norms, embeddings, rotary embeddings, activations."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, *, eps: float = 1e-6, unit_offset: bool = True) -> jax.Array:
+    """RMSNorm. ``unit_offset`` follows gemma: effective scale = 1 + w, with
+    w zero-initialised (so init_rmsnorm starts as identity either way)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    scale = 1.0 + scale if unit_offset else scale
+    return (xf * scale).astype(dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mean) * jax.lax.rsqrt(var + eps)
+    out = xf * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def make_norm(norm_type: str, d: int, dtype=jnp.float32) -> Params:
+    if norm_type == "rmsnorm":
+        return init_rmsnorm(d, dtype)
+    if norm_type == "layernorm":
+        return init_layernorm(d, dtype)
+    raise ValueError(norm_type)
+
+
+def apply_norm(norm_type: str, params: Params, x: jax.Array, *, eps: float, unit_offset: bool = False) -> jax.Array:
+    if norm_type == "rmsnorm":
+        return rmsnorm(params, x, eps=eps, unit_offset=unit_offset)
+    if norm_type == "layernorm":
+        return layernorm(params, x, eps=eps)
+    raise ValueError(norm_type)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(params: Params, ids: jax.Array, *, scale_by_sqrt_dim: bool, dtype) -> jax.Array:
+    x = jnp.take(params["table"], ids, axis=0).astype(dtype)
+    if scale_by_sqrt_dim:
+        x = x * jnp.asarray(jnp.sqrt(params["table"].shape[1]), dtype)
+    return x
+
+
+def unembed(params: Params, h: jax.Array) -> jax.Array:
+    """Tied readout: logits = h @ E^T (computed in fp32 for stability)."""
+    return jnp.einsum(
+        "...d,vd->...v", h.astype(jnp.float32), params["table"].astype(jnp.float32)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (with partial-rotary support)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float, rope_pct: float) -> jax.Array:
+    rot_dim = int(head_dim * rope_pct) // 2 * 2
+    exponent = jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / max(rot_dim, 1)
+    return 1.0 / (theta**exponent)  # (rot_dim/2,)
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    theta: float = 10_000.0,
+    rope_pct: float = 1.0,
+) -> jax.Array:
+    """Apply rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    rot_dim = int(head_dim * rope_pct) // 2 * 2
+    if rot_dim == 0:
+        return x
+    freqs = rope_freqs(head_dim, theta, rope_pct)  # (rot/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, rot/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., seq, 1, rot/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = x_rot[..., : rot_dim // 2], x_rot[..., rot_dim // 2 :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out1 = xf1 * cos - xf2 * sin
+    out2 = xf2 * cos + xf1 * sin
+    out = jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1) if rot_dim < head_dim else out
+
+
+# ---------------------------------------------------------------------------
+# Dense / activations
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key: jax.Array, n: int, m: int, dtype=jnp.float32, *, scale: float | None = None) -> Params:
+    s = scale if scale is not None else (1.0 / jnp.sqrt(n))
+    return {"W": jax.random.normal(key, (n, m), dtype) * s}
+
+
+def dense(params: Params, x: jax.Array) -> jax.Array:
+    return x @ params["W"].astype(x.dtype)
+
+
+def activation(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma2-style logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)

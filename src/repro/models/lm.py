@@ -1,0 +1,219 @@
+"""TransformerLM: embedding -> LayerStack -> final norm -> (tied) readout.
+
+Entry points:
+  - ``init_lm`` / ``lm_forward``: parameter init and the three-mode forward
+    (train / prefill / decode), with optional Skip-LoRA adapters and
+    activation collection (for Skip-Cache population).
+  - ``lm_loss``: next-token cross entropy with *chunked* readout — the
+    (B, S, vocab) logits tensor is never materialised; the unembedding and
+    log-softmax run per sequence chunk inside a rematerialised scan (critical
+    for vocab 256k at seq 4k+).
+  - ``init_serve_caches``: per-layer KV/state caches for serving.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.config import ModelConfig
+from repro.models.frontend import splice_prefix
+from repro.models.layers import embed, init_embedding, make_norm, softcap, unembed
+from repro.models.blocks import stack_forward
+from repro.runtime.sharding import constrain
+
+Params = Any
+
+
+def model_dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig) -> Params:
+    ke, ks, kh = jax.random.split(key, 3)
+    dtype = model_dtype(cfg)
+    params = {
+        "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "stack": B.init_stack(ks, cfg, dtype),
+        "final_norm": make_norm(cfg.norm_type, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {
+            "table": jax.random.normal(kh, (cfg.vocab_size, cfg.d_model), dtype) * 0.02
+        }
+    return params
+
+
+def lm_forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,                       # (B, S) int32
+    *,
+    mode: str = "train",
+    caches: Optional[Params] = None,
+    pos: Optional[jax.Array] = None,
+    adapters: Optional[Params] = None,
+    collect_acts: bool = False,
+    prefix_embeds: Optional[jax.Array] = None,
+) -> dict[str, Any]:
+    """Returns {"h": final hidden (pre-norm, incl. skip term), "caches",
+    "acts", "aux", "y_base": final hidden *without* the skip term}."""
+    dtype = model_dtype(cfg)
+    h = embed(params["embed"], tokens, scale_by_sqrt_dim=cfg.scale_embed_by_sqrt_dim, dtype=dtype)
+    h = splice_prefix(h, prefix_embeds)
+    out = stack_forward(
+        params["stack"],
+        h,
+        cfg,
+        mode=mode,
+        caches=caches,
+        pos=pos,
+        adapters=adapters,
+        collect_acts=collect_acts,
+    )
+    y_base = out["h"]
+    y = y_base + out["skip"].astype(y_base.dtype) if adapters is not None else y_base
+    return {
+        "h": y,
+        "y_base": y_base,
+        "caches": out["caches"],
+        "acts": out["acts"],
+        "aux": out["aux"],
+    }
+
+
+def readout(params: Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    """Final norm + unembed (+ gemma2 final softcap). h: (..., D) -> logits."""
+    from repro.models.layers import apply_norm
+
+    hn = apply_norm(
+        cfg.norm_type, params["final_norm"], h, eps=cfg.norm_eps,
+        unit_offset=cfg.rmsnorm_unit_offset,
+    )
+    table = params["head"] if not cfg.tie_embeddings else params["embed"]
+    logits = unembed(table, hn)
+    if cfg.final_softcap:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits
+
+
+def lm_loss(
+    params: Params,
+    cfg: ModelConfig,
+    h: jax.Array,                       # (B, S, D) final hidden (pre-norm)
+    labels: jax.Array,                  # (B, S) int32; -1 = masked
+    *,
+    chunk: int = 512,
+) -> jax.Array:
+    """Mean next-token CE with chunked readout (never materialises B,S,V)."""
+    from repro.models.layers import apply_norm
+
+    b, s, d = h.shape
+    hn = apply_norm(
+        cfg.norm_type, params["final_norm"], h, eps=cfg.norm_eps,
+        unit_offset=cfg.rmsnorm_unit_offset,
+    )
+    table = (params["head"] if not cfg.tie_embeddings else params["embed"])["table"]
+    chunk = min(chunk, s)
+    n_chunks = max(1, s // chunk)
+    usable = n_chunks * chunk
+    hn = hn[:, :usable].reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    lab = labels[:, :usable].reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(hc, lc):
+        logits = jnp.einsum(
+            "bsd,vd->bsv", hc.astype(jnp.float32), table.astype(jnp.float32)
+        )
+        logits = constrain(logits, "logits_batch", None, "vocab")
+        if cfg.final_softcap:
+            logits = softcap(logits, cfg.final_softcap)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        mask = (lc >= 0).astype(jnp.float32)
+        ll = jnp.take_along_axis(logp, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        return jnp.sum(ll * mask), jnp.sum(mask)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        ll, m = chunk_loss(*xs)
+        return (tot + ll, cnt + m), None
+
+    from repro.models.blocks import _SCAN_UNROLL
+
+    (total, count), _ = jax.lax.scan(
+        body, (0.0, 0.0), (hn, lab), unroll=n_chunks if _SCAN_UNROLL.get() else 1
+    )
+    return -total / jnp.maximum(count, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Steps (train / serve)
+# ---------------------------------------------------------------------------
+
+
+def train_loss_fn(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict[str, jax.Array],
+    *,
+    adapters: Optional[Params] = None,
+) -> jax.Array:
+    out = lm_forward(
+        params,
+        cfg,
+        batch["tokens"],
+        mode="train",
+        adapters=adapters,
+        prefix_embeds=batch.get("prefix_embeds"),
+    )
+    h = out["h"]
+    labels = batch["labels"]
+    if batch.get("prefix_embeds") is not None:
+        # Prefix positions carry no next-token loss.
+        p = batch["prefix_embeds"].shape[1]
+        pad = -jnp.ones((labels.shape[0], p), labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    return lm_loss(params, cfg, h, labels) + out["aux"]
+
+
+def init_serve_caches(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    return B.init_stack_caches(batch, max_seq, cfg, jnp.bfloat16)
+
+
+def serve_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    caches: Params,
+    *,
+    adapters: Optional[Params] = None,
+    prefix_embeds: Optional[jax.Array] = None,
+) -> tuple[jax.Array, Params]:
+    """Prefill: process the prompt, return (last-position logits, caches)."""
+    out = lm_forward(
+        params, cfg, tokens, mode="prefill", caches=caches,
+        adapters=adapters, prefix_embeds=prefix_embeds,
+    )
+    logits = readout(params, cfg, out["h"][:, -1:])
+    return logits, out["caches"]
+
+
+def serve_decode(
+    params: Params,
+    cfg: ModelConfig,
+    token: jax.Array,        # (B, 1) int32
+    pos: jax.Array,          # scalar int32
+    caches: Params,
+    *,
+    adapters: Optional[Params] = None,
+) -> tuple[jax.Array, Params]:
+    """One decode step: returns (logits (B,1,V), updated caches)."""
+    out = lm_forward(
+        params, cfg, token, mode="decode", caches=caches, pos=pos, adapters=adapters
+    )
+    logits = readout(params, cfg, out["h"])
+    return logits, out["caches"]

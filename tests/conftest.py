@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device; the 512-way placeholder mesh is
+# *only* for launch/dryrun.py (which sets XLA_FLAGS itself before jax import).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

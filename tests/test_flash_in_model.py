@@ -1,0 +1,37 @@
+"""Flash-attention path wired into the model: must match the einsum path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import AttnSpec, attn_train, init_attn
+from repro.models.config import ModelConfig
+
+
+def mini_cfg(**kw):
+    base = dict(
+        name="t", family="dense", n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=64, dtype="float32",
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+class TestFlashInModel:
+    def test_attn_train_flash_matches_einsum(self):
+        cfg = mini_cfg()
+        spec = AttnSpec.from_config(cfg, local=False)
+        params = init_attn(jax.random.key(0), cfg)
+        x = jax.random.normal(jax.random.key(1), (2, 256, cfg.d_model))
+        ref = attn_train(params, x, spec)
+        fl = attn_train(params, x, spec, use_flash=True)
+        np.testing.assert_allclose(np.asarray(fl), np.asarray(ref), atol=2e-4, rtol=2e-4)
+
+    def test_local_window_and_softcap(self):
+        cfg = mini_cfg(sliding_window=128, attn_softcap=50.0)
+        spec = AttnSpec.from_config(cfg, local=True)
+        params = init_attn(jax.random.key(0), cfg)
+        x = jax.random.normal(jax.random.key(1), (1, 256, cfg.d_model))
+        ref = attn_train(params, x, spec)
+        fl = attn_train(params, x, spec, use_flash=True)
+        np.testing.assert_allclose(np.asarray(fl), np.asarray(ref), atol=2e-4, rtol=2e-4)

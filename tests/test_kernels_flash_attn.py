@@ -1,0 +1,76 @@
+"""Flash-attention kernel vs oracle: shape/dtype/feature sweeps (interpret)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn.kernel import flash_attention_fwd
+from repro.kernels.flash_attn.ops import flash_attention
+from repro.kernels.flash_attn.ref import flash_attention_ref
+
+
+def make_qkv(b, h, hkv, s, hd, dtype, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+CASES = [
+    # (b, h, hkv, s, hd, window, softcap)
+    (1, 2, 2, 256, 64, 0, 0.0),        # full causal MHA
+    (2, 4, 2, 256, 64, 0, 0.0),        # GQA 2:1
+    (1, 4, 1, 128, 128, 0, 0.0),       # MQA
+    (1, 2, 2, 512, 64, 128, 0.0),      # sliding window
+    (1, 2, 2, 256, 64, 256, 0.0),      # window == seq (degenerate full)
+    (1, 2, 1, 256, 128, 128, 50.0),    # window + softcap + GQA (gemma2)
+    (1, 1, 1, 384, 256, 0, 30.0),      # head_dim 256 + softcap
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", CASES)
+class TestFlashAttention:
+    def test_matches_oracle(self, case, dtype):
+        b, h, hkv, s, hd, window, softcap = case
+        q, k, v = make_qkv(b, h, hkv, s, hd, dtype)
+        out = flash_attention(q, k, v, window=window, softcap=softcap)
+        ref = flash_attention_ref(q, k, v, window=window, softcap=softcap)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol(dtype)
+        )
+
+
+class TestProperties:
+    def test_window_seq_equals_full(self):
+        q, k, v = make_qkv(1, 2, 2, 256, 64, jnp.float32)
+        full = flash_attention(q, k, v, window=0)
+        win = flash_attention(q, k, v, window=256)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(win), atol=1e-6)
+
+    def test_first_token_attends_only_itself(self):
+        q, k, v = make_qkv(1, 1, 1, 128, 64, jnp.float32)
+        out = flash_attention(q, k, v)
+        np.testing.assert_allclose(
+            np.asarray(out[0, 0, 0]), np.asarray(v[0, 0, 0]), atol=1e-5
+        )
+
+    def test_rows_are_convex_combinations(self):
+        # Softmax output: each row of out is inside the convex hull of v
+        # rows -> bounded by [min(v), max(v)] per channel prefix.
+        q, k, v = make_qkv(1, 2, 2, 256, 64, jnp.float32, seed=3)
+        out = flash_attention(q, k, v)
+        assert float(jnp.max(out)) <= float(jnp.max(v)) + 1e-4
+        assert float(jnp.min(out)) >= float(jnp.min(v)) - 1e-4
+
+    def test_scale_override(self):
+        q, k, v = make_qkv(1, 1, 1, 128, 64, jnp.float32)
+        a = flash_attention(q, k, v, scale=0.25)
+        b = flash_attention_ref(q, k, v, scale=0.25)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

@@ -1,0 +1,189 @@
+"""Skip2-LoRA LM integration tests (reduced configs, CPU)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core import lm_skiplora as SL
+from repro.models.lm import init_lm, lm_forward, train_loss_fn
+from repro.optim import make_optimizer
+
+
+def setup_arch(arch="stablelm-1.6b", mode="full", rank=4):
+    cfg = reduce_config(get_config(arch))
+    sl = SL.SkipLoRAConfig(rank=rank, mode=mode, cache_dtype="float32")
+    key = jax.random.key(0)
+    params = init_lm(key, cfg)
+    adapters = SL.init_adapters(jax.random.key(1), cfg, sl)
+    return cfg, sl, params, adapters
+
+
+def make_batch(cfg, b=2, s=16, seed=2):
+    key = jax.random.key(seed)
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return {"tokens": tokens, "labels": tokens}
+
+
+class TestAdapters:
+    def test_identity_at_init(self):
+        cfg, sl, params, adapters = setup_arch()
+        batch = make_batch(cfg)
+        base = lm_forward(params, cfg, batch["tokens"], mode="train")
+        with_ad = lm_forward(
+            params, cfg, batch["tokens"], mode="train",
+            adapters=SL.adapters_to_stack(adapters, cfg),
+        )
+        assert jnp.allclose(base["h"], with_ad["h"], atol=1e-6)
+
+    def test_stack_layout_roundtrip(self):
+        # Layer k's flat adapter must land on layer k in the periodic layout.
+        cfg, sl, _, _ = setup_arch("gemma3-27b")  # has remainder layers
+        l, d, r = cfg.n_layers, cfg.d_model, 4
+        a = jnp.arange(l, dtype=jnp.float32)[:, None, None] * jnp.ones((l, d, r))
+        stack = SL.adapters_to_stack({"A": a, "B": jnp.zeros((l, r, d))}, cfg)
+        period, n_per = cfg.period, cfg.n_periods
+        for pos in range(period):
+            for p in range(n_per):
+                layer = p * period + pos
+                assert float(stack["periods"][pos]["A"][p, 0, 0]) == layer
+        for j in range(len(cfg.remainder_pattern)):
+            assert float(stack["remainder"][j]["A"][0, 0]) == n_per * period + j
+
+    def test_skip_sum_matches_stack_forward(self):
+        """The cached-path skip aggregation must equal the in-stack tap."""
+        cfg, sl, params, adapters = setup_arch()
+        adapters = {
+            "A": adapters["A"],
+            "B": jax.random.normal(jax.random.key(3), adapters["B"].shape) * 0.02,
+        }
+        batch = make_batch(cfg)
+        out = lm_forward(
+            params, cfg, batch["tokens"], mode="train",
+            adapters=SL.adapters_to_stack(adapters, cfg), collect_acts=True,
+        )
+        skip_in_stack = out["h"] - out["y_base"]
+        skip_ref = SL.skip_sum_ref(out["acts"], adapters["A"], adapters["B"])
+        assert jnp.allclose(skip_in_stack, skip_ref, atol=1e-4)
+
+
+class TestQuantisation:
+    def test_int8_roundtrip_error(self):
+        x = jax.random.normal(jax.random.key(0), (3, 5, 64))
+        q, s = SL.quantize_int8(x)
+        xr = SL.dequantize_int8(q, s, jnp.float32)
+        rel = jnp.max(jnp.abs(xr - x)) / jnp.max(jnp.abs(x))
+        assert float(rel) < 0.02
+        assert q.dtype == jnp.int8
+
+    def test_int8_scale_shape(self):
+        x = jax.random.normal(jax.random.key(0), (2, 4, 8, 16))
+        q, s = SL.quantize_int8(x)
+        assert s.shape == (2, 4, 8)
+
+
+@pytest.mark.parametrize("mode", ["full", "int8", "freeze_a"])
+class TestCachedFinetune:
+    def test_cached_step_matches_populate_gradients(self, mode):
+        """After populate, a cached step must produce (nearly) the same loss
+        as the full-forward step on the same batch — the paper's core
+        equivalence (exact for full, close for int8)."""
+        cfg, sl, params, adapters = setup_arch(mode=mode)
+        opt = make_optimizer("sgd", 0.0)  # lr=0 -> pure loss probe
+        trainable, static = SL.split_trainable(adapters, sl)
+        opt_state = opt.init(trainable)
+        batch = make_batch(cfg, b=4, s=16)
+        cache = SL.init_lm_cache(8, cfg, sl, 16)
+        idx = jnp.arange(4)
+
+        populate = jax.jit(SL.make_populate_step(cfg, sl, opt))
+        cached = jax.jit(SL.make_cached_step(cfg, sl, opt))
+
+        trainable, opt_state, cache, loss_full = populate(
+            params, trainable, static, opt_state, cache, batch, idx
+        )
+        trainable, opt_state, loss_cached = cached(
+            params, trainable, static, opt_state, cache, idx
+        )
+        tol = 2e-2 if mode == "int8" else 2e-4
+        assert abs(float(loss_full) - float(loss_cached)) < tol, mode
+
+    def test_finetuning_learns(self, mode):
+        """Loss decreases over cached epochs with zero backbone compute."""
+        cfg, sl, params, adapters = setup_arch(mode=mode)
+        opt = make_optimizer("adamw", 1e-2)
+        trainable, static = SL.split_trainable(adapters, sl)
+        opt_state = opt.init(trainable)
+        batch = make_batch(cfg, b=4, s=16)
+        cache = SL.init_lm_cache(4, cfg, sl, 16)
+        idx = jnp.arange(4)
+
+        populate = jax.jit(SL.make_populate_step(cfg, sl, opt))
+        cached = jax.jit(SL.make_cached_step(cfg, sl, opt))
+        trainable, opt_state, cache, loss0 = populate(
+            params, trainable, static, opt_state, cache, batch, idx
+        )
+        n_steps = 30 if mode == "freeze_a" else 10  # only B trains in freeze_a
+        for _ in range(n_steps):
+            trainable, opt_state, loss = cached(
+                params, trainable, static, opt_state, cache, idx
+            )
+        min_drop = 0.02 if mode == "freeze_a" else 0.05
+        assert float(loss) < float(loss0) - min_drop, mode
+
+    def test_trainable_split(self, mode):
+        cfg, sl, params, adapters = setup_arch(mode=mode)
+        trainable, static = SL.split_trainable(adapters, sl)
+        if mode == "freeze_a":
+            assert set(trainable) == {"B"} and set(static) == {"A"}
+        else:
+            assert set(trainable) == {"A", "B"}
+        merged = SL.merge_adapters(trainable, static)
+        assert set(merged) == {"A", "B"}
+
+
+class TestCacheCompression:
+    def test_mode_sizes_ordered(self):
+        cfg = reduce_config(get_config("stablelm-1.6b"))
+        seq = 64
+        full = SL.cache_nbytes_per_sample(cfg, SL.SkipLoRAConfig(rank=4, mode="full"), seq)
+        int8 = SL.cache_nbytes_per_sample(cfg, SL.SkipLoRAConfig(rank=4, mode="int8"), seq)
+        fa = SL.cache_nbytes_per_sample(cfg, SL.SkipLoRAConfig(rank=4, mode="freeze_a"), seq)
+        assert fa < int8 < full
+
+    def test_freeze_a_compression_ratio(self):
+        # freeze_a stores (L,S,R) instead of (L,S,D): ~D/R reduction on acts.
+        cfg = get_config("gemma3-27b")
+        sl_full = SL.SkipLoRAConfig(rank=16, mode="full")
+        sl_fa = SL.SkipLoRAConfig(rank=16, mode="freeze_a")
+        seq = 4096
+        ratio = SL.cache_nbytes_per_sample(cfg, sl_full, seq) / SL.cache_nbytes_per_sample(cfg, sl_fa, seq)
+        assert ratio > 50  # D/R = 5376/16 = 336 on the acts term
+
+
+class TestComputeSavings:
+    def test_cached_step_flops_fraction(self):
+        """HLO FLOPs of the cached step must be a small fraction of the full
+        train step — the paper's compute claim, checked on the compiled
+        artifact (same method as the roofline)."""
+        cfg, sl, params, adapters = setup_arch("gemma-7b")
+        opt = make_optimizer("sgd", 0.01)
+        trainable, static = SL.split_trainable(adapters, sl)
+        opt_state = opt.init(trainable)
+        batch = make_batch(cfg, b=2, s=32)
+        cache = SL.init_lm_cache(2, cfg, sl, 32)
+        idx = jnp.arange(2)
+
+        populate = jax.jit(SL.make_populate_step(cfg, sl, opt))
+        cached = jax.jit(SL.make_cached_step(cfg, sl, opt))
+
+        c_full = populate.lower(
+            params, trainable, static, opt_state, cache, batch, idx
+        ).compile().cost_analysis()
+        c_cached = cached.lower(
+            params, trainable, static, opt_state, cache, idx
+        ).compile().cost_analysis()
+        ratio = c_cached["flops"] / c_full["flops"]
+        # Reduced configs have huge vocab/d ratios, so the readout dominates;
+        # still the cached step must cut total step FLOPs substantially.
+        assert ratio < 0.6, ratio

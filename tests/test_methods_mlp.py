@@ -1,0 +1,187 @@
+"""Behavioural tests of the eight fine-tuning methods at paper scale."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import methods as M
+from repro.core import skip_cache as C
+from repro.core.finetune import finetune, evaluate, masked_populate_step
+from repro.data.synthetic import make_drifted_dataset
+from repro.models.mlp import MLPConfig, init_mlp, mlp_forward, pretrain, accuracy
+
+
+CFG = MLPConfig(in_dim=32, hidden_dim=24, out_dim=3, lora_rank=4)
+
+
+@pytest.fixture(scope="module")
+def backbone():
+    return init_mlp(jax.random.key(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    k1, k2 = jax.random.split(jax.random.key(1))
+    x = jax.random.normal(k1, (16, CFG.in_dim))
+    y = jax.random.randint(k2, (16,), 0, CFG.out_dim)
+    return x, y
+
+
+class TestForwardEquivalence:
+    """At init (LoRA B=0), every method must equal the frozen backbone."""
+
+    @pytest.mark.parametrize("method", M.METHODS)
+    def test_init_preserves_backbone(self, method, backbone, batch):
+        x, _ = batch
+        ref, _ = mlp_forward(backbone, x, CFG)
+        trainable, frozen = M.init_method(jax.random.key(2), CFG, backbone, method)
+        fwd_method = "skip_lora" if method == "skip2_lora" else method
+        out, xs = M.forward(fwd_method, trainable, frozen, x, CFG)
+        assert jnp.allclose(out, ref, atol=1e-5), method
+        assert len(xs) == CFG.n_layers
+
+    def test_cached_forward_matches_full(self, backbone, batch):
+        x, _ = batch
+        trainable, frozen = M.init_method(jax.random.key(3), CFG, backbone, "skip_lora")
+        # Perturb adapters so the skip term is non-zero.
+        trainable = jax.tree.map(
+            lambda a: a + 0.1 * jnp.ones_like(a), trainable
+        )
+        full, xs = M.forward("skip_lora", trainable, frozen, x, CFG)
+        skip = sum(M.lora_apply(l, xk) for l, xk in zip(trainable["lora"], xs))
+        y_base = full - skip
+        cached = M.skip_forward_cached(trainable, y_base, xs)
+        assert jnp.allclose(cached, full, atol=1e-5)
+
+
+class TestGradientScoping:
+    """Skip-LoRA's backward must not touch the backbone (Table 1 types)."""
+
+    def test_skip_lora_grads_only_adapters(self, backbone, batch):
+        x, y = batch
+        trainable, frozen = M.init_method(jax.random.key(4), CFG, backbone, "skip_lora")
+        new_t, loss = M.train_step("skip_lora", CFG, trainable, frozen, x, y, 0.1)
+        # B was zero-init; after one step gB != 0 (dL/dB = yA^T gy), and A
+        # unchanged only if gA == 0 (gA = x^T gy B^T = 0 since B=0).
+        for k in range(CFG.n_layers):
+            assert not jnp.allclose(new_t["lora"][k]["B"], 0.0), k
+            assert jnp.allclose(new_t["lora"][k]["A"], trainable["lora"][k]["A"]), k
+
+    def test_frozen_tree_untouched(self, backbone, batch):
+        x, y = batch
+        for method in M.METHODS:
+            fwd = "skip_lora" if method == "skip2_lora" else method
+            trainable, frozen = M.init_method(jax.random.key(5), CFG, backbone, method)
+            M.train_step(fwd, CFG, trainable, frozen, x, y, 0.1)
+            # frozen is not even passed to the optimizer: structural guarantee.
+            assert frozen is not None
+
+    def test_trainable_frozen_disjoint_and_complete(self, backbone):
+        # ft_all: fc weights trainable, bn stats frozen.
+        t, f = M.init_method(jax.random.key(6), CFG, backbone, "ft_all")
+        assert "fc" in t and "bn_stats" in f
+        t, f = M.init_method(jax.random.key(6), CFG, backbone, "lora_all")
+        assert "lora" in t and "fc" in f
+
+
+class TestTrainingDynamics:
+    @pytest.mark.parametrize("method", M.METHODS)
+    def test_loss_decreases(self, method, backbone, batch):
+        x, y = batch
+        fwd = "skip_lora" if method == "skip2_lora" else method
+        trainable, frozen = M.init_method(jax.random.key(7), CFG, backbone, method)
+
+        def loss_of(t):
+            logits, _ = M.forward(fwd, t, frozen, x, CFG)
+            from repro.models.mlp import cross_entropy
+
+            return float(cross_entropy(logits, y))
+
+        l0 = loss_of(trainable)
+        for _ in range(20):
+            trainable, _ = M.train_step(fwd, CFG, trainable, frozen, x, y, 0.1)
+        assert loss_of(trainable) < l0, method
+
+
+class TestSkipCache:
+    def test_write_read_roundtrip(self):
+        cache = C.init_cache(10, {"a": (4,), "b": (2, 3)})
+        idx = jnp.array([1, 3, 5])
+        vals = {"a": jnp.ones((3, 4)), "b": 2 * jnp.ones((3, 2, 3))}
+        cache = C.cache_write(cache, idx, vals)
+        out = C.cache_read(cache, idx)
+        assert jnp.allclose(out["a"], 1.0) and jnp.allclose(out["b"], 2.0)
+        assert int(cache.hit_count()) == 3
+        assert bool(C.cache_hits(cache, jnp.array([1]))[0])
+        assert not bool(C.cache_hits(cache, jnp.array([0]))[0])
+
+    def test_masked_write_preserves_hits(self):
+        cache = C.init_cache(4, {"a": (2,)})
+        cache = C.cache_write(cache, jnp.array([0]), {"a": jnp.full((1, 2), 7.0)})
+        # Second write masked: index 0 is a hit, must keep 7.0.
+        mask = ~C.cache_hits(cache, jnp.array([0, 1]))
+        cache = C.cache_write_masked(
+            cache, jnp.array([0, 1]), {"a": jnp.full((2, 2), 9.0)}, mask
+        )
+        assert jnp.allclose(cache.slots["a"][0], 7.0)
+        assert jnp.allclose(cache.slots["a"][1], 9.0)
+
+    def test_cache_layout_matches_paper_sizes(self):
+        cache = C.cache_for_mlp(470, (256, 96, 96, 3))
+        assert C.cache_nbytes(cache) == 470 * (96 + 96 + 3) * 4
+
+
+class TestAlgorithm1:
+    """End-to-end: Skip2-LoRA == Skip-LoRA up to float reassociation."""
+
+    def test_skip2_equals_skip_first_steps(self, backbone):
+        key = jax.random.key(8)
+        x = jax.random.normal(key, (40, CFG.in_dim))
+        y = jax.random.randint(key, (40,), 0, CFG.out_dim)
+        r_skip = finetune(jax.random.key(9), "skip_lora", CFG, backbone, x, y, epochs=3, batch_size=20, lr=0.05)
+        r_skip2 = finetune(jax.random.key(9), "skip2_lora", CFG, backbone, x, y, epochs=3, batch_size=20, lr=0.05)
+        for a, b in zip(
+            jax.tree.leaves(r_skip.trainable), jax.tree.leaves(r_skip2.trainable)
+        ):
+            assert jnp.allclose(a, b, atol=1e-4)
+
+    def test_cache_fully_populated_after_first_epoch(self, backbone):
+        key = jax.random.key(10)
+        x = jax.random.normal(key, (40, CFG.in_dim))
+        y = jax.random.randint(key, (40,), 0, CFG.out_dim)
+        res = finetune(jax.random.key(11), "skip2_lora", CFG, backbone, x, y, epochs=1, batch_size=20, lr=0.05)
+        assert int(res.cache.hit_count()) == 40
+
+    def test_masked_populate_step_streaming(self, backbone):
+        cfg = CFG
+        trainable, frozen = M.init_method(jax.random.key(12), cfg, backbone, "skip2_lora")
+        cache = C.cache_for_mlp(8, cfg.dims)
+        step = masked_populate_step(cfg)
+        x = jax.random.normal(jax.random.key(13), (4, cfg.in_dim))
+        y = jnp.zeros((4,), jnp.int32)
+        idx = jnp.array([0, 1, 2, 3])
+        trainable, cache, _ = step(trainable, frozen, cache, idx, x, y, 0.05)
+        assert int(cache.hit_count()) == 4
+        # Re-running over an overlapping window must not clobber hits.
+        idx2 = jnp.array([2, 3, 4, 5])
+        x2 = jax.random.normal(jax.random.key(14), (4, cfg.in_dim))
+        before = cache.slots["y_base"][2].copy()
+        trainable, cache, _ = step(trainable, frozen, cache, idx2, x2, y, 0.05)
+        assert int(cache.hit_count()) == 6
+        assert jnp.allclose(cache.slots["y_base"][2], before)
+
+
+class TestDriftReproduction:
+    """Small-scale version of Tables 3/4: drift collapse + recovery."""
+
+    def test_drift_gap_and_recovery(self):
+        ds = make_drifted_dataset(jax.random.key(0), "damage1")
+        cfg = MLPConfig(in_dim=256, hidden_dim=96, out_dim=3)
+        bb = pretrain(jax.random.key(1), cfg, ds.x_pre, ds.y_pre, epochs=25, lr=0.05)
+        logits, _ = mlp_forward(bb, ds.x_test, cfg)
+        before = float(accuracy(logits, ds.y_test))
+        res = finetune(jax.random.key(2), "skip2_lora", cfg, bb, ds.x_ft, ds.y_ft, epochs=25, lr=0.05)
+        after = evaluate("skip2_lora", cfg, res, ds.x_test, ds.y_test)
+        assert before < 0.5
+        assert after > 0.8
+        assert after - before > 0.3

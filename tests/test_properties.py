@@ -1,0 +1,179 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compute_model as cm
+from repro.core import lm_skiplora as SL
+from repro.kernels.skip_lora import kernel as K
+from repro.kernels.skip_lora import ref as R
+from repro.optim.quantized import dequantize_blockwise, quantize_blockwise
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+class TestCostModelProperties:
+    @given(
+        b=st.integers(1, 64),
+        n=st.integers(1, 512),
+        m=st.integers(1, 512),
+        r=st.integers(1, 32),
+    )
+    @settings(**SETTINGS)
+    def test_costs_nonnegative_and_monotone_in_batch(self, b, n, m, r):
+        for t in cm.FCType:
+            c1 = cm.fc_cost(t, b, n, m)
+            c2 = cm.fc_cost(t, b + 1, n, m)
+            assert c1.total >= 0
+            assert c2.forward >= c1.forward
+        for t in cm.LoRAType:
+            c1 = cm.lora_cost(t, b, n, m, r)
+            c2 = cm.lora_cost(t, b + 1, n, m, r)
+            assert c1.total >= 0
+            assert c2.total >= c1.total
+
+    @given(
+        depth=st.integers(2, 6),
+        width=st.sampled_from([32, 64, 96, 128]),
+        rank=st.sampled_from([1, 2, 4, 8]),
+    )
+    @settings(**SETTINGS)
+    def test_skip_lora_backward_never_exceeds_lora_all(self, depth, width, rank):
+        """Invariant (Section 4.1): Skip-LoRA's backward cost is below
+        LoRA-All's for any depth/width (no backbone backward chain)."""
+        dims = (width * 2,) + (width,) * (depth - 1) + (max(2, width // 16),)
+        skip = cm.method_cost("skip_lora", 20, dims, rank).backward
+        lall = cm.method_cost("lora_all", 20, dims, rank).backward
+        assert skip <= lall
+
+    @given(e=st.integers(1, 1000))
+    @settings(**SETTINGS)
+    def test_hit_rate_bounds(self, e):
+        h = cm.expected_hit_rate(e)
+        assert 0.0 <= h < 1.0
+
+    @given(
+        depth=st.integers(2, 5),
+        hit=st.floats(0.0, 1.0),
+    )
+    @settings(**SETTINGS)
+    def test_cache_hits_only_reduce_cost(self, depth, hit):
+        dims = (64,) + (32,) * (depth - 1) + (4,)
+        c0 = cm.method_cost("skip2_lora", 20, dims, 4, cache_hit_rate=0.0).total
+        ch = cm.method_cost("skip2_lora", 20, dims, 4, cache_hit_rate=hit).total
+        assert ch <= c0 + 1e-6
+
+
+class TestKernelProperties:
+    @given(
+        l=st.integers(1, 4),
+        mtiles=st.integers(1, 3),
+        d=st.sampled_from([128, 256]),
+        r=st.sampled_from([2, 4, 8]),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_fused_forward_matches_oracle(self, l, mtiles, d, r, seed):
+        m = 128 * mtiles
+        k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+        x = jax.random.normal(k1, (l, m, d))
+        a = jax.random.normal(k2, (l, d, r)) / np.sqrt(d)
+        b = jax.random.normal(k3, (l, r, d)) * 0.1
+        out = K.skip_lora_fwd(x, a, b, interpret=True)
+        ref = R.skip_lora_fwd_ref(x, a, b)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=10, deadline=None)
+    def test_linearity_in_b(self, seed):
+        """skip_sum is linear in B: f(x, A, B1+B2) == f(x,A,B1) + f(x,A,B2)."""
+        k = jax.random.key(seed)
+        x = jax.random.normal(k, (2, 128, 128))
+        a = jax.random.normal(jax.random.fold_in(k, 1), (2, 128, 4)) * 0.1
+        b1 = jax.random.normal(jax.random.fold_in(k, 2), (2, 4, 128)) * 0.1
+        b2 = jax.random.normal(jax.random.fold_in(k, 3), (2, 4, 128)) * 0.1
+        lhs = R.skip_lora_fwd_ref(x, a, b1 + b2)
+        rhs = R.skip_lora_fwd_ref(x, a, b1) + R.skip_lora_fwd_ref(x, a, b2)
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-4)
+
+
+class TestQuantProperties:
+    @given(
+        n=st.integers(1, 2000),
+        scale=st.floats(1e-3, 1e3),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(**SETTINGS)
+    def test_blockwise_quant_error_bound(self, n, scale, seed):
+        """|dequant(quant(x)) - x| <= blockmax/127 elementwise, any shape."""
+        x = jax.random.normal(jax.random.key(seed), (n,)) * scale
+        q = quantize_blockwise(x)
+        xr = dequantize_blockwise(q, x.shape)
+        blocks, _ = np.asarray(x), None
+        err = np.abs(np.asarray(xr) - np.asarray(x))
+        bound = np.max(np.abs(np.asarray(x))) / 127.0 + 1e-6
+        assert float(err.max()) <= bound * 1.01
+
+    @given(seed=st.integers(0, 2**16), s=st.integers(1, 8))
+    @settings(**SETTINGS)
+    def test_int8_cache_roundtrip_relative_error(self, seed, s):
+        x = jax.random.normal(jax.random.key(seed), (2, s, 64))
+        q, sc = SL.quantize_int8(x)
+        xr = SL.dequantize_int8(q, sc, jnp.float32)
+        denom = jnp.max(jnp.abs(x), axis=-1, keepdims=True) + 1e-9
+        rel = jnp.max(jnp.abs(xr - x) / denom)
+        assert float(rel) <= 1.0 / 127.0 + 1e-3
+
+
+class TestCacheInvariants:
+    @given(
+        n=st.integers(1, 32),
+        writes=st.lists(st.integers(0, 31), min_size=1, max_size=16),
+    )
+    @settings(**SETTINGS)
+    def test_validity_monotone(self, n, writes):
+        """Cache validity only grows; hit count == #distinct written ids."""
+        from repro.core import skip_cache as C
+
+        cache = C.init_cache(32, {"a": (3,)})
+        seen = set()
+        for w in writes:
+            idx = jnp.array([w % 32])
+            cache = C.cache_write(cache, idx, {"a": jnp.ones((1, 3)) * w})
+            seen.add(w % 32)
+            assert int(cache.hit_count()) == len(seen)
+
+    @given(
+        ids=st.lists(st.integers(0, 15), min_size=1, max_size=8, unique=True),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(**SETTINGS)
+    def test_read_returns_last_write(self, ids, seed):
+        from repro.core import skip_cache as C
+
+        cache = C.init_cache(16, {"a": (4,)})
+        vals = jax.random.normal(jax.random.key(seed), (len(ids), 4))
+        cache = C.cache_write(cache, jnp.array(ids), {"a": vals})
+        out = C.cache_read(cache, jnp.array(ids))
+        np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(vals))
+
+
+class TestDataPipelineProperties:
+    @given(
+        batch=st.sampled_from([2, 4, 8]),
+        n_mult=st.integers(2, 6),
+        seed=st.integers(0, 100),
+    )
+    @settings(**SETTINGS)
+    def test_every_epoch_is_a_permutation(self, batch, n_mult, seed):
+        from repro.data.pipeline import BatchSampler, DataConfig
+
+        n = batch * n_mult
+        cfg = DataConfig(vocab_size=10, seq_len=4, global_batch=batch,
+                         num_samples=n, seed=seed)
+        s = BatchSampler(cfg)
+        for _ in range(2):  # two consecutive epochs
+            seen = np.concatenate([s.next_ids() for _ in range(n // batch)])
+            assert sorted(seen.tolist()) == list(range(n))
