@@ -1,7 +1,9 @@
 """LM-scale benchmarks (beyond the paper's tables).
 
 - cached-vs-populate epoch wall time on a reduced LM (the paper's claim at
-  transformer scale, measured);
+  transformer scale, measured) — each epoch phase one lax.scan dispatch;
+- the tiered cache engine under an HBM budget: streaming cached epochs with
+  LRU spill + prefetch, reporting per-tier hit counts;
 - fused Skip-LoRA kernel vs unfused einsum path (interpret mode on CPU —
   correctness-grade timing, the HBM-traffic analysis lives in DESIGN.md);
 - cache-mode footprints (full / int8 / freeze_a).
@@ -13,14 +15,17 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, reduce_config
 from repro.core import lm_skiplora as SL
+from repro.core.cache_engine import TieredCacheEngine
+from repro.core.skip_cache import cache_read
 from repro.models.lm import init_lm
 from repro.optim.optimizers import adamw
 
 
-def cached_epoch_speedup(arch: str = "stablelm-1.6b") -> list[tuple[str, float]]:
+def _setup(arch: str, b: int, s: int, n: int):
     cfg = reduce_config(get_config(arch))
     sl = SL.SkipLoRAConfig(rank=8, mode="full", cache_dtype="float32")
     params = init_lm(jax.random.key(0), cfg)
@@ -28,48 +33,86 @@ def cached_epoch_speedup(arch: str = "stablelm-1.6b") -> list[tuple[str, float]]
     trainable, static = SL.split_trainable(adapters, sl)
     opt = adamw(1e-3)
     opt_state = opt.init(trainable)
-    b, s, n = 8, 64, 32
     cache = SL.init_lm_cache(n, cfg, sl, s)
-    key = jax.random.key(2)
-    tokens = jax.random.randint(key, (n, s), 0, cfg.vocab_size)
+    tokens = jax.random.randint(jax.random.key(2), (n, s), 0, cfg.vocab_size)
+    idx_mat = jnp.arange(n).reshape(n // b, b)
+    return cfg, sl, params, trainable, static, opt, opt_state, cache, tokens, idx_mat
 
-    populate = jax.jit(SL.make_populate_step(cfg, sl, opt))
-    cached = jax.jit(SL.make_cached_step(cfg, sl, opt))
 
-    def pop_epoch():
-        nonlocal trainable, opt_state, cache
-        for i in range(n // b):
-            idx = jnp.arange(i * b, (i + 1) * b)
-            batch = {"tokens": tokens[idx], "labels": tokens[idx]}
-            trainable, opt_state, cache, loss = populate(
-                params, trainable, static, opt_state, cache, batch, idx
-            )
-        return loss
+def cached_epoch_speedup(arch: str = "stablelm-1.6b") -> list[tuple[str, float]]:
+    """Populate vs cached epoch wall time; one scan dispatch per epoch."""
+    b, s, n = 8, 64, 32
+    (cfg, sl, params, trainable, static, opt, opt_state, cache, tokens,
+     idx_mat) = _setup(arch, b, s, n)
 
-    def cached_epoch():
-        nonlocal trainable, opt_state
-        for i in range(n // b):
-            idx = jnp.arange(i * b, (i + 1) * b)
-            trainable, opt_state, loss = cached(
-                params, trainable, static, opt_state, cache, idx
-            )
-        return loss
+    populate_epoch = SL.make_populate_epoch(cfg, sl, opt)
+    cached_epoch = SL.make_cached_epoch(cfg, sl, opt)
 
-    jax.block_until_ready(pop_epoch())  # compile both
-    jax.block_until_ready(cached_epoch())
+    trainable, opt_state, cache, ls = populate_epoch(  # compile
+        params, trainable, static, opt_state, cache, tokens, tokens, idx_mat)
+    jax.block_until_ready(ls)
     t0 = time.perf_counter()
-    jax.block_until_ready(pop_epoch())
+    trainable, opt_state, cache, ls = populate_epoch(
+        params, trainable, static, opt_state, cache, tokens, tokens, idx_mat)
+    jax.block_until_ready(ls)
     t_pop = time.perf_counter() - t0
+
+    trainable, opt_state, ls = cached_epoch(  # compile
+        params, trainable, static, opt_state, cache, idx_mat)
+    jax.block_until_ready(ls)
     t0 = time.perf_counter()
     for _ in range(3):
-        loss = cached_epoch()
-    jax.block_until_ready(loss)
+        trainable, opt_state, ls = cached_epoch(
+            params, trainable, static, opt_state, cache, idx_mat)
+    jax.block_until_ready(ls)
     t_cached = (time.perf_counter() - t0) / 3
     return [
         (f"lm/{arch}/populate_epoch_ms", t_pop * 1e3),
         (f"lm/{arch}/cached_epoch_ms", t_cached * 1e3),
         (f"lm/{arch}/epoch_speedup_x", t_pop / t_cached),
     ]
+
+
+def tiered_engine_epoch(arch: str = "stablelm-1.6b") -> list[tuple[str, float]]:
+    """Cached epochs through the TieredCacheEngine with an HBM budget that
+    holds only half the fine-tune set: LRU spill to the host tier, reads
+    promote back, next batch prefetched while the adapter step runs."""
+    b, s, n = 4, 64, 32
+    (cfg, sl, params, trainable, static, opt, opt_state, cache, tokens,
+     idx_mat) = _setup(arch, b, s, n)
+
+    populate_epoch = SL.make_populate_epoch(cfg, sl, opt)
+    trainable, opt_state, cache, ls = populate_epoch(
+        params, trainable, static, opt_state, cache, tokens, tokens, idx_mat)
+    jax.block_until_ready(ls)
+
+    layout = SL.lm_cache_layout(cfg, sl, s)
+    engine = TieredCacheEngine(n, layout, capacity=n // 2)
+    for row in np.asarray(idx_mat):
+        idx = jnp.asarray(row)
+        engine.write(idx, cache_read(cache, idx))
+
+    step = jax.jit(SL.make_cached_step_from_vals(cfg, sl, opt))
+
+    def engine_epoch():
+        nonlocal trainable, opt_state
+        for _, vals in engine.stream_batches(idx_mat):
+            trainable, opt_state, loss = step(
+                params, trainable, static, opt_state, vals)
+        return loss
+
+    jax.block_until_ready(engine_epoch())  # compile
+    engine.stats.reset()  # count only the timed epochs
+    t0 = time.perf_counter()
+    for _ in range(3):
+        loss = engine_epoch()
+    jax.block_until_ready(loss)
+    t_engine = (time.perf_counter() - t0) / 3
+    st = engine.stats
+    return [
+        (f"lm/{arch}/engine_cached_epoch_ms", t_engine * 1e3),
+        (f"lm/{arch}/engine_hbm_capacity_rows", float(engine.capacity)),
+    ] + st.as_rows(f"lm/{arch}/engine")
 
 
 def kernel_vs_einsum(l=8, m=512, d=256, r=8) -> list[tuple[str, float]]:

@@ -30,6 +30,7 @@ def main() -> None:
         ("fig3", lambda: paper_tables.fig3_required_epochs(
             max_epochs=30 if args.quick else 60)),
         ("lm_cached", lambda: lm_bench.cached_epoch_speedup()),
+        ("cache_engine", lambda: lm_bench.tiered_engine_epoch()),
         ("kernel", lambda: lm_bench.kernel_vs_einsum()),
         ("cache_footprint", lambda: lm_bench.cache_footprints()),
     ]

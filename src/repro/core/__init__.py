@@ -5,4 +5,14 @@
 - ``skip_cache``: the forward-activation cache (Section 4.2), device-sharded.
 - ``finetune``: Algorithm 1 (populate epoch + cached epochs).
 - ``lm_adapters``: Skip-LoRA adapters for transformer LMs (framework scale).
+- ``cache_engine``: tiered HBM/host cache placement (DESIGN.md §4).
 """
+
+import jax
+
+
+def donate_argnums(*argnums: int) -> tuple[int, ...]:
+    """Scan-carry donation policy for the fused epoch loops (DESIGN.md §2):
+    donate off-CPU, where it enables in-place cache/optimizer updates; the
+    CPU backend does not implement donation and would only warn."""
+    return argnums if jax.default_backend() != "cpu" else ()

@@ -1,0 +1,477 @@
+"""Tiered Skip-Cache engine: one placement policy over HBM and host tiers.
+
+The repo grew two cache implementations — the device-resident ``SkipCache``
+pytree (``repro/core/skip_cache.py``) and the disk-backed ``HostCacheStore``
+(``repro/core/cache_store.py``). ``TieredCacheEngine`` unifies them behind a
+single read / write / prefetch API (DESIGN.md §4):
+
+  - **HBM tier**: a fixed-capacity ``SkipCache`` whose rows are *slots*, not
+    sample ids; a host-side LRU map assigns sample -> slot. All data-plane
+    gathers/scatters stay the jitted ``cache_read``/``cache_write`` ops.
+  - **Host tier**: receives LRU spills. In-memory (numpy) by default, or the
+    crash-safe mmap'd ``HostCacheStore`` when a directory is given — the
+    same bytes either way, so a spilled row reads back bit-identical.
+  - **Placement**: capacity-driven. ``capacity`` rows directly, or derived
+    from ``hbm_budget_bytes`` and the per-row footprint. Reads promote host
+    rows back into HBM, evicting the least-recently-used resident rows.
+  - **Compression**: ``compress="int8"`` stores float slots rowwise-quantised
+    (int8 payload + fp32 scales) in *both* tiers. ``read`` dequantises;
+    ``read_raw`` hands the quantised payload straight to the fused
+    ``skip_lora_fwd_int8`` Pallas kernel so dequant never round-trips HBM.
+  - **Prefetch**: ``prefetch(ids)`` stages the next batch's host-tier rows
+    on a background thread (double buffering) so a cached step overlapped
+    with it only ever sees a host->device copy, not disk/IO latency.
+
+The engine is the orchestration plane; it owns no math. Equivalence with the
+untiered paths is enforced by ``tests/test_cache_engine.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache_store import HostCacheStore
+from repro.core.skip_cache import SkipCache, cache_read, cache_write
+
+Layout = dict[str, tuple[tuple, Any]]  # name -> (per-sample shape, dtype)
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Per-engine counters (sample granularity, not batch granularity)."""
+
+    hbm_hits: int = 0
+    host_hits: int = 0
+    staged_hits: int = 0
+    spills: int = 0  # rows evicted from HBM to the host tier
+    writes: int = 0
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, f.default)
+
+    def reads(self) -> int:
+        return self.hbm_hits + self.host_hits + self.staged_hits
+
+    def hbm_hit_rate(self) -> float:
+        r = self.reads()
+        return self.hbm_hits / r if r else 0.0
+
+    def as_rows(self, prefix: str = "cache_engine") -> list[tuple[str, float]]:
+        return [
+            (f"{prefix}/hbm_hits", float(self.hbm_hits)),
+            (f"{prefix}/host_hits", float(self.host_hits)),
+            (f"{prefix}/staged_hits", float(self.staged_hits)),
+            (f"{prefix}/spills", float(self.spills)),
+            (f"{prefix}/hbm_hit_rate", self.hbm_hit_rate()),
+        ]
+
+
+# ---------------------------------------------------------------------------
+# Host tiers
+# ---------------------------------------------------------------------------
+
+
+class MemoryHostTier:
+    """In-memory host tier: per-sample numpy rows (the fast default)."""
+
+    def __init__(self, layout: Layout):
+        self.layout = layout
+        self._rows: dict[int, dict[str, np.ndarray]] = {}
+
+    def write(self, ids, values: dict[str, np.ndarray]) -> None:
+        for pos, sid in enumerate(int(i) for i in ids):
+            self._rows[sid] = {name: np.asarray(values[name][pos]) for name in values}
+
+    def read(self, ids) -> dict[str, np.ndarray]:
+        rows = [self._rows[int(i)] for i in ids]
+        return {name: np.stack([r[name] for r in rows]) for name in self.layout}
+
+    def has(self, sample_id: int) -> bool:
+        return int(sample_id) in self._rows
+
+
+class DiskHostTier:
+    """Disk-backed host tier: thin adapter over ``HostCacheStore``."""
+
+    def __init__(self, directory: str, layout: Layout):
+        self.layout = layout
+        self.store = HostCacheStore(directory, layout)
+
+    def write(self, ids, values: dict[str, np.ndarray]) -> None:
+        self.store.flush_batch(np.asarray(list(ids)), values)
+
+    def read(self, ids) -> dict[str, np.ndarray]:
+        return self.store._read_batch_sync(tuple(int(i) for i in ids))
+
+    def has(self, sample_id: int) -> bool:
+        return self.store.has(int(sample_id))
+
+
+# ---------------------------------------------------------------------------
+# int8 slot compression (shared by both tiers)
+# ---------------------------------------------------------------------------
+
+
+def _is_compressible(shape: tuple, dtype) -> bool:
+    return len(shape) >= 1 and jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
+
+
+def storage_layout(layout: Layout, compress: Optional[str]) -> Layout:
+    """The physical layout both tiers store. int8: float slot ``x`` becomes
+    ``x/q`` (int8 payload) + ``x/s`` (fp32 rowwise scales, last axis dropped)."""
+    if compress is None:
+        return dict(layout)
+    if compress != "int8":
+        raise ValueError(f"unknown compression {compress!r}")
+    out: Layout = {}
+    for name, (shape, dtype) in layout.items():
+        if _is_compressible(shape, dtype):
+            out[f"{name}/q"] = (tuple(shape), jnp.int8)
+            out[f"{name}/s"] = (tuple(shape[:-1]), jnp.float32)
+        else:
+            out[name] = (tuple(shape), dtype)
+    return out
+
+
+def _quantize_slot(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    from repro.core.lm_skiplora import quantize_int8
+
+    return quantize_int8(x)
+
+
+def _dequantize_slot(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    from repro.core.lm_skiplora import dequantize_int8
+
+    return dequantize_int8(q, scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+class TieredCacheEngine:
+    def __init__(
+        self,
+        num_samples: int,
+        layout: Layout,
+        *,
+        capacity: Optional[int] = None,
+        hbm_budget_bytes: Optional[int] = None,
+        directory: Optional[str] = None,
+        compress: Optional[str] = None,
+    ):
+        if (capacity is None) == (hbm_budget_bytes is None):
+            raise ValueError("pass exactly one of capacity / hbm_budget_bytes")
+        self.num_samples = num_samples
+        self.layout = {n: (tuple(s), jnp.dtype(d)) for n, (s, d) in layout.items()}
+        self.compress = compress
+        self._storage = storage_layout(self.layout, compress)
+        if capacity is None:
+            capacity = max(1, hbm_budget_bytes // self.row_nbytes())
+        self.capacity = min(int(capacity), num_samples)
+
+        slots = {
+            name: jnp.zeros((self.capacity,) + shape, dtype)
+            for name, (shape, dtype) in self._storage.items()
+        }
+        self._device = SkipCache(
+            slots=slots, valid=jnp.zeros((self.capacity,), jnp.bool_)
+        )
+        self._host = (
+            DiskHostTier(directory, self._storage)
+            if directory is not None
+            else MemoryHostTier(self._storage)
+        )
+        self._lru: OrderedDict[int, int] = OrderedDict()  # sample id -> HBM row
+        self._free: list[int] = list(range(self.capacity - 1, -1, -1))
+        self._present: set[int] = set()
+
+        self._staged: dict[int, dict[str, np.ndarray]] = {}
+        self._prefetch_thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+
+    # -- footprint ----------------------------------------------------------
+
+    def row_nbytes(self) -> int:
+        total = 0
+        for shape, dtype in self._storage.values():
+            n = 1
+            for s in shape:
+                n *= s
+            total += n * jnp.dtype(dtype).itemsize
+        return total
+
+    def hbm_nbytes(self) -> int:
+        return self.capacity * self.row_nbytes()
+
+    def resident_ids(self) -> list[int]:
+        return list(self._lru.keys())
+
+    def has(self, sample_id: int) -> bool:
+        return int(sample_id) in self._present
+
+    # -- compression --------------------------------------------------------
+
+    def _encode(self, values: dict[str, jax.Array]) -> dict[str, jax.Array]:
+        """Logical batch values -> storage-layout values."""
+        if self.compress is None:
+            return {n: values[n] for n in self.layout}
+        out = {}
+        for name, (shape, dtype) in self.layout.items():
+            if _is_compressible(shape, dtype):
+                q, s = _quantize_slot(values[name])
+                out[f"{name}/q"] = q
+                out[f"{name}/s"] = s
+            else:
+                out[name] = values[name]
+        return out
+
+    def _decode(self, stored: dict[str, jax.Array]) -> dict[str, jax.Array]:
+        """Storage-layout batch values -> logical values (dequantised)."""
+        if self.compress is None:
+            return stored
+        out = {}
+        for name, (shape, dtype) in self.layout.items():
+            if _is_compressible(shape, dtype):
+                out[name] = _dequantize_slot(
+                    stored[f"{name}/q"], stored[f"{name}/s"], dtype
+                )
+            else:
+                out[name] = stored[name]
+        return out
+
+    # -- placement ----------------------------------------------------------
+
+    def _evict_rows(self, count: int, pinned: set[int]) -> None:
+        """Spill the ``count`` least-recently-used unpinned rows to host."""
+        victims = [sid for sid in self._lru if sid not in pinned][:count]
+        if len(victims) < count:
+            raise RuntimeError(
+                f"HBM tier too small: need {count} free rows, capacity "
+                f"{self.capacity}, pinned {len(pinned)}"
+            )
+        rows = jnp.asarray([self._lru[sid] for sid in victims])
+        vals = cache_read(self._device, rows)
+        host_vals = {k: np.asarray(v) for k, v in vals.items()}
+        self._host.write(victims, host_vals)
+        for sid in victims:
+            self._free.append(self._lru.pop(sid))
+        self.stats.spills += len(victims)
+
+    def _allocate(self, ids: list[int], pinned: set[int]) -> list[int]:
+        need = len(ids) - len(self._free)
+        if need > 0:
+            self._evict_rows(need, pinned)
+        return [self._free.pop() for _ in ids]
+
+    def _ensure_resident(self, ids: list[int]) -> None:
+        missing = list(dict.fromkeys(i for i in ids if i not in self._lru))
+        if not missing:
+            return
+        staged_rows, host_ids = {}, []
+        with self._lock:
+            for i in missing:
+                if i in self._staged:
+                    staged_rows[i] = self._staged.pop(i)
+                else:
+                    host_ids.append(i)
+        if host_ids:
+            self.wait()  # a prefetch in flight may be racing for the same ids
+            with self._lock:
+                for i in list(host_ids):
+                    if i in self._staged:
+                        staged_rows[i] = self._staged.pop(i)
+                        host_ids.remove(i)
+        host_vals = self._host.read(host_ids) if host_ids else None
+        self.stats.staged_hits += len(staged_rows)
+        self.stats.host_hits += len(host_ids)
+
+        rows = self._allocate(missing, pinned=set(ids))
+        batch = {}
+        for name in self._storage:
+            parts = []
+            for i in missing:
+                if i in staged_rows:
+                    parts.append(staged_rows[i][name])
+                else:
+                    parts.append(host_vals[name][host_ids.index(i)])
+            batch[name] = jnp.asarray(np.stack(parts))
+        self._device = cache_write(self._device, jnp.asarray(rows), batch)
+        for i, r in zip(missing, rows):
+            self._lru[i] = r
+
+    def _touch(self, ids: list[int]) -> None:
+        for i in ids:
+            self._lru.move_to_end(i)
+
+    # -- public API ---------------------------------------------------------
+
+    def write(self, idx, values: dict[str, jax.Array]) -> None:
+        """Place a batch (populate step output). values[name]: (B, *shape).
+
+        New ids land in the HBM tier; if it is full, LRU rows spill to host
+        first. Ids already resident are overwritten in place.
+        """
+        ids = [int(i) for i in np.asarray(idx).tolist()]
+        stored = self._encode(values)
+        # A write supersedes any prefetch staged (or in flight) before it.
+        self.wait()
+        with self._lock:
+            for i in ids:
+                self._staged.pop(i, None)
+        if len(ids) > self.capacity:
+            # Batch can never be HBM-resident: write straight to host tier.
+            self._host.write(ids, {k: np.asarray(v) for k, v in stored.items()})
+            for i in dict.fromkeys(ids):
+                if i in self._lru:
+                    self._free.append(self._lru.pop(i))  # host copy is newer
+            self._present.update(ids)
+            self.stats.writes += len(ids)  # host-direct, not an HBM spill
+            return
+        resident = [i for i in ids if i in self._lru]
+        fresh = list(dict.fromkeys(i for i in ids if i not in self._lru))
+        rows_of: dict[int, int] = {i: self._lru[i] for i in resident}
+        if fresh:
+            for i, r in zip(fresh, self._allocate(fresh, pinned=set(ids))):
+                rows_of[i] = r
+        rows = jnp.asarray([rows_of[i] for i in ids])
+        self._device = cache_write(self._device, rows, stored)
+        for i in ids:
+            self._lru[i] = rows_of[i]
+            self._lru.move_to_end(i)
+        self._present.update(ids)
+        self.stats.writes += len(ids)
+
+    def _read_oversized(self, ids: list[int]) -> dict[str, jax.Array]:
+        """Batch larger than the HBM tier: assemble without promotion (the
+        batch could never become resident anyway)."""
+        resident = [i for i in ids if i in self._lru]
+        missing = list(dict.fromkeys(i for i in ids if i not in self._lru))
+        self.stats.hbm_hits += len(resident)
+        parts: dict[int, dict[str, np.ndarray]] = {}
+        if resident:
+            rows = jnp.asarray([self._lru[i] for i in resident])
+            vals = cache_read(self._device, rows)
+            for pos, i in enumerate(resident):
+                parts[i] = {k: np.asarray(v[pos]) for k, v in vals.items()}
+        if missing:
+            self.wait()
+            with self._lock:
+                for i in list(missing):
+                    if i in self._staged:
+                        parts[i] = self._staged.pop(i)
+                        missing.remove(i)
+                        self.stats.staged_hits += 1
+        if missing:
+            self.stats.host_hits += len(missing)
+            vals = self._host.read(missing)
+            for pos, i in enumerate(missing):
+                parts[i] = {k: vals[k][pos] for k in self._storage}
+        return {
+            name: jnp.asarray(np.stack([parts[i][name] for i in ids]))
+            for name in self._storage
+        }
+
+    def _read_stored(self, idx) -> dict[str, jax.Array]:
+        ids = [int(i) for i in np.asarray(idx).tolist()]
+        unknown = [i for i in ids if i not in self._present]
+        if unknown:
+            raise KeyError(f"sample ids never written: {unknown[:8]}")
+        if len(ids) > self.capacity:
+            return self._read_oversized(ids)
+        self.stats.hbm_hits += sum(1 for i in ids if i in self._lru)
+        self._ensure_resident(ids)
+        self._touch(ids)
+        rows = jnp.asarray([self._lru[i] for i in ids])
+        return cache_read(self._device, rows)
+
+    def read(self, idx) -> dict[str, jax.Array]:
+        """Gather a batch in logical layout (dequantised), promoting any
+        host-tier rows into HBM."""
+        return self._decode(self._read_stored(idx))
+
+    def read_raw(self, idx) -> dict[str, jax.Array]:
+        """Gather a batch in *storage* layout. With ``compress="int8"`` this
+        returns ``name/q`` / ``name/s`` slots ready for the fused
+        ``skip_lora_fwd_int8`` kernel — dequant stays inside the kernel."""
+        return self._read_stored(idx)
+
+    def prefetch(self, idx) -> None:
+        """Stage host-tier rows for an upcoming batch on a background thread
+        (double buffering: overlap with the in-flight adapter step)."""
+        ids = [int(i) for i in np.asarray(idx).tolist()]
+        with self._lock:
+            todo = [
+                i
+                for i in ids
+                if i in self._present and i not in self._lru and i not in self._staged
+            ]
+        if not todo:
+            return
+
+        def work():
+            vals = self._host.read(todo)
+            with self._lock:
+                for pos, i in enumerate(todo):
+                    self._staged[i] = {
+                        name: vals[name][pos] for name in self._storage
+                    }
+
+        if self._prefetch_thread is not None and self._prefetch_thread.is_alive():
+            self._prefetch_thread.join()
+        self._prefetch_thread = threading.Thread(target=work, daemon=True)
+        self._prefetch_thread.start()
+
+    def wait(self) -> None:
+        if self._prefetch_thread is not None:
+            self._prefetch_thread.join()
+
+    def flush_to_host(self) -> None:
+        """Write every resident row through to the host tier (persistence
+        point; resident rows stay readable from HBM)."""
+        ids = list(self._lru.keys())
+        if not ids:
+            return
+        rows = jnp.asarray([self._lru[i] for i in ids])
+        vals = cache_read(self._device, rows)
+        self._host.write(ids, {k: np.asarray(v) for k, v in vals.items()})
+
+    def stream_batches(self, idx_mat):
+        """Iterate a (steps, batch) id matrix as ``(idx_row, values)`` pairs
+        with double-buffered prefetch: batch i+1 is staged on the background
+        thread while the caller's step for batch i runs. The canonical
+        streaming-epoch loop — all engine-driven epochs go through this."""
+        idx_np = np.asarray(idx_mat)
+        self.prefetch(idx_np[0])
+        for i in range(idx_np.shape[0]):
+            vals = self.read(idx_np[i])
+            if i + 1 < idx_np.shape[0]:
+                self.prefetch(idx_np[i + 1])
+            yield idx_np[i], vals
+
+    def export_skipcache(self) -> SkipCache:
+        """Materialise an id-indexed ``SkipCache`` over all present samples
+        (logical layout). This is the scan fast path: when the whole set fits
+        HBM, epochs run as one fused dispatch over this pytree."""
+        slots = {
+            name: jnp.zeros((self.num_samples,) + shape, dtype)
+            for name, (shape, dtype) in self.layout.items()
+        }
+        out = SkipCache(slots=slots, valid=jnp.zeros((self.num_samples,), jnp.bool_))
+        ids = sorted(self._present)
+        for lo in range(0, len(ids), max(1, self.capacity)):
+            chunk = ids[lo : lo + max(1, self.capacity)]
+            vals = self.read(jnp.asarray(chunk))
+            out = cache_write(out, jnp.asarray(chunk), vals)
+        return out

@@ -32,6 +32,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import donate_argnums
 from repro.core.skip_cache import SkipCache, cache_read, cache_write, init_cache
 from repro.models.config import ModelConfig
 from repro.models.lm import lm_forward, lm_loss
@@ -263,24 +264,32 @@ def cached_loss_fn(
     dtype,
 ) -> jax.Array:
     """Loss from cached activations only — zero backbone compute."""
-    acts = _decode_acts(vals, sl, dtype)
-    if sl.mode == "freeze_a":
-        skip = skip_sum_compressed(acts, adapters["B"])
+    if sl.mode == "int8" and sl.use_fused_kernel:
+        # int8 payload goes straight into the Pallas kernel: dequant is fused
+        # into the A-projection, never round-tripping HBM as bf16.
+        from repro.kernels.skip_lora.ops import skip_lora_fused_int8
+
+        q = jnp.swapaxes(vals["acts_q"], 0, 1)        # (L, B, S, D)
+        scale = jnp.swapaxes(vals["acts_scale"], 0, 1)  # (L, B, S)
+        skip = skip_lora_fused_int8(q, scale, adapters["A"], adapters["B"])
     else:
-        skip = skip_sum(
-            acts, adapters["A"], adapters["B"], use_kernel=sl.use_fused_kernel
-        )
+        acts = _decode_acts(vals, sl, dtype)
+        if sl.mode == "freeze_a":
+            skip = skip_sum_compressed(acts, adapters["B"])
+        else:
+            skip = skip_sum(
+                acts, adapters["A"], adapters["B"], use_kernel=sl.use_fused_kernel
+            )
     h = vals["y_base"].astype(dtype) + skip.astype(dtype)
     return lm_loss(params, cfg, h, vals["labels"])
 
 
-def make_cached_step(cfg: ModelConfig, sl: SkipLoRAConfig, optimizer):
-    """jit-able: cache gather + adapter step. This is the paper's fast path."""
+def make_cached_step_from_vals(cfg: ModelConfig, sl: SkipLoRAConfig, optimizer):
+    """Adapter step from already-gathered cache values. This granularity is
+    what the tiered engine's streaming read path feeds."""
     from repro.models.lm import model_dtype
 
-    def step(params, trainable, static, opt_state, cache, idx):
-        vals = cache_read(cache, idx)
-
+    def step(params, trainable, static, opt_state, vals):
         def loss_fn(t):
             return cached_loss_fn(
                 params, cfg, sl, merge_adapters(t, static), vals, model_dtype(cfg)
@@ -294,3 +303,64 @@ def make_cached_step(cfg: ModelConfig, sl: SkipLoRAConfig, optimizer):
         return trainable, opt_state, loss
 
     return step
+
+
+def make_cached_step(cfg: ModelConfig, sl: SkipLoRAConfig, optimizer):
+    """jit-able: cache gather + adapter step. This is the paper's fast path."""
+    from_vals = make_cached_step_from_vals(cfg, sl, optimizer)
+
+    def step(params, trainable, static, opt_state, cache, idx):
+        return from_vals(params, trainable, static, opt_state, cache_read(cache, idx))
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Fused epoch loops: one XLA dispatch per epoch phase (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+
+def make_populate_epoch(cfg: ModelConfig, sl: SkipLoRAConfig, optimizer, *,
+                        donate: bool = True):
+    """Whole populate epoch as one lax.scan dispatch over a pre-permuted
+    batch index matrix. tokens/labels: (num_samples, seq) device arrays;
+    idx_mat: (steps, batch). Carries (trainable, opt_state, cache) are
+    donated so the cache updates in place across scan iterations —
+    ``donate=False`` for callers that reuse the carry arrays afterwards."""
+    step = make_populate_step(cfg, sl, optimizer)
+    d = donate_argnums if donate else (lambda *a: ())
+
+    def epoch(params, trainable, static, opt_state, cache, tokens, labels, idx_mat):
+        def body(carry, idx):
+            t, o, c = carry
+            batch = {"tokens": tokens[idx], "labels": labels[idx]}
+            t, o, c, loss = step(params, t, static, o, c, batch, idx)
+            return (t, o, c), loss
+
+        (trainable, opt_state, cache), losses = jax.lax.scan(
+            body, (trainable, opt_state, cache), idx_mat
+        )
+        return trainable, opt_state, cache, losses
+
+    return jax.jit(epoch, donate_argnums=d(1, 3, 4))
+
+
+def make_cached_epoch(cfg: ModelConfig, sl: SkipLoRAConfig, optimizer, *,
+                      donate: bool = True):
+    """Whole cached epoch as one lax.scan dispatch: cache gathers + adapter
+    steps only, zero backbone compute and zero Python in the loop."""
+    step = make_cached_step(cfg, sl, optimizer)
+    d = donate_argnums if donate else (lambda *a: ())
+
+    def epoch(params, trainable, static, opt_state, cache, idx_mat):
+        def body(carry, idx):
+            t, o = carry
+            t, o, loss = step(params, t, static, o, cache, idx)
+            return (t, o), loss
+
+        (trainable, opt_state), losses = jax.lax.scan(
+            body, (trainable, opt_state), idx_mat
+        )
+        return trainable, opt_state, losses
+
+    return jax.jit(epoch, donate_argnums=d(1, 3))

@@ -5,10 +5,11 @@ intermediate outputs so the forward pass of seen samples can be skipped.
 Here the cache is a struct-of-arrays pytree with a leading ``num_samples``
 axis plus a validity bitmap — O(1) lookup by sample id (the paper's
 "stored exclusively in the i-th element of C_skip"), fully vectorised, and
-shardable (the LM-scale variant in ``repro/core/lm_cache.py`` adds
-NamedSharding + int8 compression on the same layout).
+shardable (the LM-scale variant in ``repro/core/lm_skiplora.py`` adds
+int8 compression and mode-dependent layouts on the same structure; the
+tiered HBM/host engine in ``repro/core/cache_engine.py`` builds on both).
 
-TPU adaptation (see DESIGN.md §4): instead of a per-row `if` inside the
+TPU adaptation (see DESIGN.md §2): instead of a per-row `if` inside the
 matmul, the fine-tune loop is phase-split — a *populate* epoch computes the
 backbone forward and scatters results; *cached* epochs gather and never touch
 the backbone. ``masked_populate`` covers streaming ingestion where a batch
@@ -81,13 +82,16 @@ def cache_write_masked(
 
     Rows with ``write_mask == False`` perform a self-overwrite with the
     existing value (gather + where) so the op stays dense and jittable.
+    Validity follows the same rule: a masked-out row keeps its previous
+    validity bit (a never-seen row stays invalid).
     """
     slots = dict(cache.slots)
     for name, val in values.items():
         old = slots[name][idx]
         mask = write_mask.reshape((-1,) + (1,) * (val.ndim - 1))
         slots[name] = slots[name].at[idx].set(jnp.where(mask, val, old))
-    return SkipCache(slots=slots, valid=cache.valid.at[idx].set(True))
+    valid = cache.valid.at[idx].set(cache.valid[idx] | write_mask)
+    return SkipCache(slots=slots, valid=valid)
 
 
 @jax.jit

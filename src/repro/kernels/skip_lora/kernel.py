@@ -26,6 +26,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams in newer releases.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 TM = 128  # row-tile size (MXU-aligned)
 
 
@@ -64,7 +67,7 @@ def skip_lora_fwd(x: jax.Array, a: jax.Array, b: jax.Array, *, interpret: bool =
         ],
         out_specs=pl.BlockSpec((TM, d), lambda mi, li: (mi, 0)),
         out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,
@@ -120,7 +123,7 @@ def skip_lora_bwd(
             jax.ShapeDtypeStruct((lnum, d, r), jnp.float32),
             jax.ShapeDtypeStruct((lnum, r, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,
@@ -169,7 +172,7 @@ def skip_lora_fwd_int8(
         ],
         out_specs=pl.BlockSpec((TM, d), lambda mi, li: (mi, 0)),
         out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

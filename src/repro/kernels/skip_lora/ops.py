@@ -15,6 +15,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.skip_lora import kernel as K
 
@@ -67,6 +68,44 @@ def skip_lora_fused(acts: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
     return out.reshape(bsz, s, d)
 
 
+def _pad_rows_int8(q: jax.Array, s: jax.Array) -> tuple[jax.Array, jax.Array, int]:
+    m = q.shape[1]
+    pad = (-m) % K.TM
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+        s = jnp.pad(s, ((0, 0), (0, pad)))
+    return q, s, m
+
+
+@jax.custom_vjp
+def _skip_lora_rows_int8(q: jax.Array, s: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """q: (L, M, D) int8, s: (L, M) fp32 -> (M, D) bf16. Dequant stays fused
+    in the kernel; differentiable in (a, b) only (the cache is data)."""
+    qp, sp, m = _pad_rows_int8(q, s)
+    out = K.skip_lora_fwd_int8(qp, sp, a, b, interpret=_interpret())
+    return out[:m]
+
+
+def _int8_fwd(q, s, a, b):
+    return _skip_lora_rows_int8(q, s, a, b), (q, s, a, b)
+
+
+def _int8_bwd(res, g):
+    q, s, a, b = res
+    # Adapter grads need the dequantised activations once; the forward never
+    # materialises them (dequant is fused), so this is the only bf16 copy.
+    x = (q.astype(jnp.float32) * s[..., None]).astype(jnp.bfloat16)
+    xp, m = _pad_rows(x, K.TM)
+    gp = jnp.pad(g, ((0, (-m) % K.TM), (0, 0))).astype(x.dtype)
+    ga, gb = K.skip_lora_bwd(xp, a, b, gp, interpret=_interpret())
+    # int8 payload / fp32 scales are cache constants: symbolic-zero cotangents.
+    zeros_q = np.zeros(q.shape, jax.dtypes.float0)
+    return zeros_q, jnp.zeros_like(s), ga.astype(a.dtype), gb.astype(b.dtype)
+
+
+_skip_lora_rows_int8.defvjp(_int8_fwd, _int8_bwd)
+
+
 def skip_lora_fused_int8(
     q: jax.Array, scale: jax.Array, a: jax.Array, b: jax.Array
 ) -> jax.Array:
@@ -74,10 +113,5 @@ def skip_lora_fused_int8(
     l, bsz, s, d = q.shape
     qr = q.reshape(l, bsz * s, d)
     sr = scale.reshape(l, bsz * s)
-    pad = (-qr.shape[1]) % K.TM
-    m = qr.shape[1]
-    if pad:
-        qr = jnp.pad(qr, ((0, 0), (0, pad), (0, 0)))
-        sr = jnp.pad(sr, ((0, 0), (0, pad)))
-    out = K.skip_lora_fwd_int8(qr, sr, a, b, interpret=_interpret())
-    return out[:m].reshape(bsz, s, d)
+    out = _skip_lora_rows_int8(qr, sr, a, b)
+    return out.reshape(bsz, s, d)

@@ -1,12 +1,19 @@
 """Skip2-LoRA fine-tuning launcher — the paper's Algorithm 1 at LM scale.
 
 Epoch 0 populates the activation cache (backbone forward once per sample);
-epochs >= 1 run cached steps with ZERO backbone compute. Compare wall-clock
-per epoch to see the paper's claim live (examples/finetune_lm.py drives
-this for a ~100M model):
+epochs >= 1 run cached steps with ZERO backbone compute. Each epoch phase is
+a single ``jax.lax.scan`` dispatch (DESIGN.md §2) — no per-batch Python.
+Compare wall-clock per epoch to see the paper's claim live
+(examples/finetune_lm.py drives this for a ~100M model):
 
   PYTHONPATH=src python -m repro.launch.finetune --arch stablelm-1.6b \
       --reduced --epochs 4 --samples 64 --batch 8 --seq 128 --mode full
+
+With ``--hbm-mb`` the activation cache is placed by a ``TieredCacheEngine``
+under that HBM budget: rows beyond the budget spill to the host tier and
+cached epochs run the streaming path (per-batch engine reads, next batch
+prefetched on a background thread while the adapter step runs). Tier hit
+counts are reported at the end.
 """
 
 from __future__ import annotations
@@ -16,12 +23,21 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, reduce_config
 from repro.core import lm_skiplora as SL
+from repro.core.cache_engine import TieredCacheEngine
+from repro.core.skip_cache import cache_read
 from repro.data.pipeline import DataConfig, epoch_permutation, make_pipeline
 from repro.models.lm import init_lm
 from repro.optim.optimizers import adamw
+
+
+def _index_matrix(samples: int, batch: int, epoch: int = 0) -> np.ndarray:
+    perm = epoch_permutation(0, epoch, samples)  # same visitation order
+    steps = samples // batch
+    return perm[: steps * batch].reshape(steps, batch)
 
 
 def main(argv=None) -> dict:
@@ -37,6 +53,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--mode", default="full", choices=["full", "int8", "freeze_a"])
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--hbm-mb", type=float, default=0.0,
+                    help="cache HBM budget in MiB; 0 = fully device-resident")
+    ap.add_argument("--cache-dir", default=None,
+                    help="host-tier directory (disk spill); default in-memory")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -65,28 +85,46 @@ def main(argv=None) -> dict:
     store, _ = make_pipeline(dcfg)
     cache = SL.init_lm_cache(args.samples, cfg, sl, args.seq)
 
-    populate = jax.jit(SL.make_populate_step(cfg, sl, opt))
-    cached = jax.jit(SL.make_cached_step(cfg, sl, opt))
+    # Stage the fine-tune set once; the populate epoch is then one dispatch.
+    all_ids = np.arange(args.samples)
+    staged = store.batch(all_ids)
+    tokens = jnp.asarray(staged["tokens"])
+    labels = jnp.asarray(staged["labels"])
+
+    populate_epoch = SL.make_populate_epoch(cfg, sl, opt)
+    cached_epoch = SL.make_cached_epoch(cfg, sl, opt)
+    step_from_vals = jax.jit(SL.make_cached_step_from_vals(cfg, sl, opt))
+
+    engine = None
+    if args.hbm_mb > 0:
+        layout = SL.lm_cache_layout(cfg, sl, args.seq)
+        engine = TieredCacheEngine(
+            args.samples, layout,
+            hbm_budget_bytes=int(args.hbm_mb * 2**20),
+            directory=args.cache_dir,
+        )
+        print(f"tiered engine: HBM budget {args.hbm_mb:g} MiB -> "
+              f"{engine.capacity}/{args.samples} rows resident")
 
     epoch_times, losses = [], []
     for epoch in range(args.epochs):
-        perm = epoch_permutation(0, 0, args.samples)  # same visitation order
+        idx_mat = _index_matrix(args.samples, args.batch)
         t0 = time.perf_counter()
-        for s in range(args.samples // args.batch):
-            ids = perm[s * args.batch : (s + 1) * args.batch]
-            idx = jnp.asarray(ids)
-            if epoch == 0:
-                b = store.batch(ids)
-                batch = {
-                    "tokens": jnp.asarray(b["tokens"]),
-                    "labels": jnp.asarray(b["labels"]),
-                }
-                trainable, opt_state, cache, loss = populate(
-                    params, trainable, static, opt_state, cache, batch, idx
-                )
-            else:
-                trainable, opt_state, loss = cached(
-                    params, trainable, static, opt_state, cache, idx
+        if epoch == 0:
+            trainable, opt_state, cache, ls = populate_epoch(
+                params, trainable, static, opt_state, cache,
+                tokens, labels, jnp.asarray(idx_mat),
+            )
+            loss = ls[-1]
+        elif engine is None:
+            trainable, opt_state, ls = cached_epoch(
+                params, trainable, static, opt_state, cache, jnp.asarray(idx_mat)
+            )
+            loss = ls[-1]
+        else:
+            for _, vals in engine.stream_batches(idx_mat):
+                trainable, opt_state, loss = step_from_vals(
+                    params, trainable, static, opt_state, vals
                 )
         jax.block_until_ready(loss)
         dt = time.perf_counter() - t0
@@ -94,11 +132,26 @@ def main(argv=None) -> dict:
         losses.append(float(loss))
         kind = "populate" if epoch == 0 else "cached  "
         print(f"epoch {epoch} [{kind}] loss {float(loss):.4f} time {dt:.2f}s")
+        if epoch == 0 and engine is not None:
+            # Hand the populated rows to the placement engine (outside the
+            # timed region — staging is a one-off, not epoch cost); rows
+            # past the HBM budget spill to the host tier.
+            for row in idx_mat:
+                idx = jnp.asarray(row)
+                engine.write(idx, cache_read(cache, idx))
+            cache = None  # engine owns placement now
 
     if len(epoch_times) > 1:
         speedup = epoch_times[0] / (sum(epoch_times[1:]) / len(epoch_times[1:]))
         print(f"cached-epoch speedup vs populate epoch: {speedup:.1f}x")
-    return {"epoch_times": epoch_times, "losses": losses}
+    out = {"epoch_times": epoch_times, "losses": losses}
+    if engine is not None:
+        st = engine.stats
+        print(f"cache tiers: hbm_hits={st.hbm_hits} host_hits={st.host_hits} "
+              f"staged_hits={st.staged_hits} spills={st.spills} "
+              f"hbm_hit_rate={st.hbm_hit_rate():.2f}")
+        out["cache_stats"] = st
+    return out
 
 
 if __name__ == "__main__":

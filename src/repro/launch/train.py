@@ -8,6 +8,12 @@ runs the production mesh.
 
   PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
       --reduced --steps 200 --batch 8 --seq 128
+
+``--scan-chunk N`` fuses N steps into one ``jax.lax.scan`` dispatch over
+pre-sampled batch ids (the whole synthetic fine-tune set is staged on
+device). This is the same dispatch-amortisation strategy the Skip2-LoRA
+epoch loops use (DESIGN.md §2); the supervisor/straggler path stays on the
+default per-step loop.
 """
 
 from __future__ import annotations
@@ -40,6 +46,32 @@ def make_step(cfg, opt):
     return step
 
 
+def make_scan_chunk(cfg, opt):
+    """A chunk of train steps as one compiled dispatch: scan over an
+    (n_steps, batch) id matrix gathering from device-staged tokens/labels."""
+
+    def run_chunk(params, opt_state, tokens, labels, idx_mat):
+        def body(carry, idx):
+            p, o = carry
+            batch = {"tokens": tokens[idx], "labels": labels[idx]}
+            loss, grads = jax.value_and_grad(
+                lambda q: train_loss_fn(q, cfg, batch)
+            )(p)
+            grads = clip_by_global_norm(grads, 1.0)
+            updates, o = opt.update(grads, o, p)
+            p = apply_updates(p, updates)
+            return (p, o), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), idx_mat
+        )
+        return params, opt_state, losses
+
+    from repro.core import donate_argnums
+
+    return jax.jit(run_chunk, donate_argnums=donate_argnums(0, 1))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
@@ -52,6 +84,8 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--scan-chunk", type=int, default=0,
+                    help="fuse N steps per dispatch via lax.scan (0 = off)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -79,6 +113,36 @@ def main() -> None:
     state = {"params": params, "opt": opt_state}
     t_start = time.time()
     losses = []
+
+    if args.scan_chunk > 0:
+        # Fused path: chunks of steps in one dispatch; checkpoint per chunk.
+        run_chunk = make_scan_chunk(cfg, opt)
+        staged = store.batch(np.arange(dcfg.num_samples))
+        tokens = jnp.asarray(staged["tokens"])
+        labels = jnp.asarray(staged["labels"])
+        params, opt_state = state["params"], state["opt"]
+        step = 0
+        while step < args.steps:
+            n = min(args.scan_chunk, args.steps - step)
+            idx_mat = jnp.asarray(
+                np.stack([sampler.next_ids() for _ in range(n)])
+            )
+            params, opt_state, ls = run_chunk(
+                params, opt_state, tokens, labels, idx_mat
+            )
+            jax.block_until_ready(ls)
+            losses.extend(np.asarray(ls, np.float32).tolist())
+            prev = step
+            step += n
+            dt = time.time() - t_start
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"({dt:.1f}s, {n} steps/dispatch)")
+            # Save whenever the chunk crossed a save boundary (chunk size
+            # need not divide --ckpt-every).
+            if prev // args.ckpt_every != step // args.ckpt_every:
+                ckpt.save(step, {"params": params, "opt": opt_state})
+        print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+        return
 
     def run_one(state, step):
         ids = sampler.next_ids()

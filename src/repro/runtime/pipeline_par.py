@@ -25,6 +25,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# jax promoted shard_map out of experimental (and renamed check_rep ->
+# check_vma) in newer releases; support both.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:  # jax < 0.6
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
 Params = Any
 
 
@@ -107,12 +117,12 @@ def pipeline_apply(
         return outs
 
     spec_params = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(
+    fn = _shard_map(
         per_stage,
         mesh=mesh,
         in_specs=(spec_params, P()),
         out_specs=P(),
-        check_vma=False,
+        **{_CHECK_KW: False},
     )
     return fn(stage_params, x_micro)
 

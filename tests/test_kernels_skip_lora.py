@@ -61,6 +61,77 @@ class TestBackward:
         np.testing.assert_allclose(np.asarray(gb), np.asarray(gb_ref), **t)
 
 
+class TestBackwardVsAutodiff:
+    """Satellite: the hand-written Pallas backward against jax.grad of the
+    pure-jnp reference (not just the hand-written reference backward)."""
+
+    @pytest.mark.parametrize("shape", [(1, 128, 128, 4), (3, 256, 128, 8)])
+    def test_bwd_kernel_matches_jax_grad_of_ref(self, shape):
+        l, m, d, r = shape
+        x, a, b = make_inputs(l, m, d, r, jnp.float32)
+        g = jax.random.normal(jax.random.key(11), (m, d), jnp.float32)
+
+        # d/d(a,b) of <ref(x, a, b), g> — cotangent g injected via the loss.
+        def loss(ab):
+            return jnp.sum(R.skip_lora_fwd_ref(x, ab["A"], ab["B"]) * g)
+
+        grads = jax.grad(loss)({"A": a, "B": b})
+        ga, gb = K.skip_lora_bwd(x, a, b, g, interpret=True)
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(grads["A"]),
+                                   atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(gb), np.asarray(grads["B"]),
+                                   atol=1e-3, rtol=1e-3)
+
+    def test_int8_fwd_matches_dequant_then_fwd_kernel(self):
+        """Satellite: fused-dequant int8 kernel == dequantise on the host
+        then run the plain fwd kernel (both interpret mode)."""
+        l, m, d, r = 3, 256, 128, 8
+        x, a, b = make_inputs(l, m, d, r, jnp.float32)
+        amax = jnp.max(jnp.abs(x), axis=-1)
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+        out_int8 = K.skip_lora_fwd_int8(q, scale, a, b, interpret=True)
+        x_deq = (q.astype(jnp.float32) * scale[..., None]).astype(jnp.bfloat16)
+        out_deq = K.skip_lora_fwd(
+            x_deq, a.astype(jnp.bfloat16), b.astype(jnp.bfloat16), interpret=True
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_int8, np.float32), np.asarray(out_deq, np.float32),
+            atol=5e-2, rtol=5e-2,
+        )
+
+    def test_fused_int8_wrapper_grads_match_dequant_ref(self):
+        """jax.grad through skip_lora_fused_int8 (custom VJP) == grad of the
+        dequant-then-einsum reference."""
+        l, bsz, s, d, r = 2, 2, 96, 128, 4  # M=192 pads to 256
+        acts = jax.random.normal(jax.random.key(0), (l, bsz, s, d), jnp.float32)
+        x = acts.reshape(l, bsz * s, d)
+        amax = jnp.max(jnp.abs(x), axis=-1)
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+        a = jax.random.normal(jax.random.key(1), (l, d, r)) / np.sqrt(d)
+        b = jax.random.normal(jax.random.key(2), (l, r, d)) * 0.1
+        tgt = jax.random.normal(jax.random.key(3), (bsz, s, d))
+
+        def loss_kernel(ab):
+            out = skip_lora_fused_int8(
+                q.reshape(l, bsz, s, d), scale.reshape(l, bsz, s), ab["A"], ab["B"]
+            )
+            return jnp.mean((out.astype(jnp.float32) - tgt) ** 2)
+
+        def loss_ref(ab):
+            x_deq = (q.astype(jnp.float32) * scale[..., None]).astype(jnp.bfloat16)
+            out = R.skip_lora_fwd_ref(x_deq, ab["A"], ab["B"]).reshape(bsz, s, d)
+            return jnp.mean((out.astype(jnp.float32) - tgt) ** 2)
+
+        gk = jax.grad(loss_kernel)({"A": a, "B": b})
+        gr = jax.grad(loss_ref)({"A": a, "B": b})
+        np.testing.assert_allclose(np.asarray(gk["A"]), np.asarray(gr["A"]),
+                                   atol=1e-3, rtol=5e-2)
+        np.testing.assert_allclose(np.asarray(gk["B"]), np.asarray(gr["B"]),
+                                   atol=1e-3, rtol=5e-2)
+
+
 class TestCustomVJP:
     def test_grad_matches_autodiff_of_ref(self):
         """d loss/d (A,B) via the fused kernel == jax.grad of the einsum ref."""

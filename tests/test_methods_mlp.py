@@ -126,6 +126,18 @@ class TestSkipCache:
         assert jnp.allclose(cache.slots["a"][0], 7.0)
         assert jnp.allclose(cache.slots["a"][1], 9.0)
 
+    def test_masked_write_never_seen_row_stays_invalid(self):
+        """Regression: a masked-out row that was never written must stay
+        invalid (cache_write_masked used to flip valid=True unconditionally)."""
+        cache = C.init_cache(4, {"a": (2,)})
+        mask = jnp.array([True, False])
+        cache = C.cache_write_masked(
+            cache, jnp.array([0, 1]), {"a": jnp.full((2, 2), 3.0)}, mask
+        )
+        assert bool(C.cache_hits(cache, jnp.array([0]))[0])
+        assert not bool(C.cache_hits(cache, jnp.array([1]))[0])
+        assert int(cache.hit_count()) == 1
+
     def test_cache_layout_matches_paper_sizes(self):
         cache = C.cache_for_mlp(470, (256, 96, 96, 3))
         assert C.cache_nbytes(cache) == 470 * (96 + 96 + 3) * 4
@@ -151,6 +163,18 @@ class TestAlgorithm1:
         y = jax.random.randint(key, (40,), 0, CFG.out_dim)
         res = finetune(jax.random.key(11), "skip2_lora", CFG, backbone, x, y, epochs=1, batch_size=20, lr=0.05)
         assert int(res.cache.hit_count()) == 40
+
+    def test_cache_fully_populated_with_remainder_batch(self, backbone):
+        """Regression: n not divisible by batch_size must still populate
+        every sample in epoch 0 (the last batch wraps), or later epochs'
+        permutations gather all-zero cache rows."""
+        key = jax.random.key(20)
+        n = 47  # 47 % 20 != 0
+        x = jax.random.normal(key, (n, CFG.in_dim))
+        y = jax.random.randint(key, (n,), 0, CFG.out_dim)
+        res = finetune(jax.random.key(21), "skip2_lora", CFG, backbone, x, y,
+                       epochs=2, batch_size=20, lr=0.05)
+        assert int(res.cache.hit_count()) == n
 
     def test_masked_populate_step_streaming(self, backbone):
         cfg = CFG
