@@ -1,0 +1,175 @@
+"""Serving benchmarks: scan-fused decode and grouped multi-adapter batches.
+
+Measures the two structural wins of the serving engine (DESIGN.md §7) on
+the reduced stablelm-1.6b config:
+
+- **decode dispatch**: three implementations of the same ``gen``-token
+  decode, timed post-prefill —
+
+    * ``loop``: the per-token Python loop as it shipped before the scan
+      engine — a fresh ``jax.jit(lambda ...)`` closure per ``generate()``
+      call, so every request pays a full retrace + compile on top of its
+      ``gen`` dispatches;
+    * ``cached_loop``: the same per-token loop after hoisting the jits
+      into the compiled-function cache — ``gen`` XLA dispatches plus
+      eager sampling between them;
+    * ``scan``: one ``lax.scan`` dispatch for the whole generation,
+      sampling folded into the carry, ``unroll`` steps fused per loop
+      iteration.
+
+  ``scan_speedup_x`` is scan vs the replaced loop; ``scan_vs_cached_loop_x``
+  isolates the dispatch-count effect alone (1 scan dispatch vs ``gen``
+  loop steps, shared per-step compute floor).
+- **single vs grouped adapters**: one shared adapter stack via the inline
+  per-layer tap vs a mixed-tenant batch through the stacked adapter pool
+  (jnp oracle path on CPU — interpret-mode Pallas timing is
+  correctness-grade only, see ``lm_bench.kernel_vs_einsum``).
+
+The scan path donates its KV caches off-CPU, so each timed repeat feeds it
+a fresh copy of the prefill caches (a no-op-sized cost next to the decode).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.core import lm_skiplora as SL
+from repro.core.adapter_pool import AdapterPool
+from repro.launch.serve import (
+    _decode_scan_fn,
+    _decode_step_fn,
+    _prefill_fn,
+    generate,
+    generate_grouped,
+)
+from repro.models.lm import (
+    init_lm,
+    init_serve_caches,
+    sample_token,
+    serve_decode,
+)
+
+
+def _time(fn, repeats: int = 5) -> float:
+    """Best-of-N wall time: this container's scheduler jitter swings a
+    Python dispatch loop ~3x between runs, and the minimum is the standard
+    noise-robust estimator for dispatch-bound microbenchmarks."""
+    jax.block_until_ready(fn())  # compile / warm caches
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def decode_dispatch(
+    arch: str = "stablelm-1.6b", b: int = 2, prompt: int = 16, gen: int = 64,
+    unroll: int = 8,
+) -> list[tuple[str, float]]:
+    """Tokens/sec + dispatch counts: rebuild-per-call vs cached loop vs scan."""
+    cfg = reduce_config(get_config(arch))
+    params = init_lm(jax.random.key(0), cfg)
+    prompts = jax.random.randint(jax.random.key(1), (b, prompt), 0, cfg.vocab_size)
+    caches = init_serve_caches(cfg, b, prompt + gen)
+    logits, caches0 = _prefill_fn(cfg)(params, prompts, caches, None)
+    tok0, key = sample_token(logits, jax.random.key(2), 0.0)
+    pos0 = jnp.asarray(prompt, jnp.int32)
+
+    decode = _decode_step_fn(cfg)
+
+    def run_loop(dec):
+        tok, c = tok0, caches0
+        out = []
+        for i in range(gen):
+            out.append(tok)
+            lg, c = dec(params, tok, jnp.asarray(prompt + i, jnp.int32), c, None)
+            tok, _ = sample_token(lg, key, 0.0)
+        return jnp.concatenate(out, axis=1)
+
+    def loop_cached():
+        return run_loop(decode)
+
+    def loop_rebuild():
+        # Fresh jit wrapper per request == fresh trace + compile per request.
+        dec = jax.jit(
+            lambda p, t, pos, c, a: serve_decode(p, cfg, t, pos, c, adapters=a)
+        )
+        return run_loop(dec)
+
+    scan_fn = _decode_scan_fn(cfg)
+
+    def scan():
+        # The scan jit donates its caches off-CPU; hand it a fresh copy per
+        # repeat so caches0 survives (the copy is tiny next to gen steps).
+        c = jax.tree.map(jnp.copy, caches0)
+        toks, _ = scan_fn(
+            params, tok0, pos0, c, key, None, None, None, gen, 0.0, unroll
+        )
+        return toks
+
+    t_loop = _time(loop_cached)
+    t_scan = _time(scan)
+    t_rebuild = _time(loop_rebuild, repeats=1)
+    toks = b * gen
+    return [
+        (f"serve/{arch}/loop_tok_s", toks / t_rebuild),
+        (f"serve/{arch}/cached_loop_tok_s", toks / t_loop),
+        (f"serve/{arch}/scan_tok_s", toks / t_scan),
+        # Headline: scan vs the per-token Python loop this engine replaced
+        # (the seed ``generate()``, which re-jitted every call). The cached
+        # loop isolates the remaining dispatch-count win; on a quiet CPU
+        # the shared per-step compute floor bounds that ratio near ~1.5-2x,
+        # while under scheduler jitter the 'gen' sequential dispatches are
+        # hit far harder than the single scan (tail-latency win).
+        (f"serve/{arch}/scan_speedup_x", t_rebuild / t_scan),
+        (f"serve/{arch}/scan_vs_cached_loop_x", t_loop / t_scan),
+        (f"serve/{arch}/loop_decode_dispatches", float(gen)),
+        (f"serve/{arch}/scan_decode_dispatches", 1.0),
+        (f"serve/{arch}/scan_unroll", float(unroll)),
+    ]
+
+
+def grouped_adapters(
+    arch: str = "stablelm-1.6b", b: int = 4, prompt: int = 16, gen: int = 32,
+    n_tenants: int = 3, rank: int = 8, unroll: int = 8,
+) -> list[tuple[str, float]]:
+    """Single shared stack vs a mixed-tenant batch from the adapter pool."""
+    cfg = reduce_config(get_config(arch))
+    params = init_lm(jax.random.key(0), cfg)
+    prompts = jax.random.randint(jax.random.key(1), (b, prompt), 0, cfg.vocab_size)
+    sl = SL.SkipLoRAConfig(rank=rank)
+
+    pool = AdapterPool(n_tenants + 1, cfg, rank)
+    first = None
+    for t in range(n_tenants):
+        ad = SL.init_adapters(jax.random.key(10 + t), cfg, sl)
+        ad["B"] = jax.random.normal(jax.random.key(20 + t), ad["B"].shape) * 0.02
+        pool.register(f"u{t}", ad)
+        first = ad if first is None else first
+    stack = SL.adapters_to_stack(first, cfg)
+    idx = pool.lookup([None] + [f"u{i % n_tenants}" for i in range(1, b)])
+
+    t_single = _time(
+        lambda: generate(
+            params, cfg, prompts, max_new=gen, adapters_stack=stack, unroll=unroll
+        )
+    )
+    t_grouped = _time(
+        lambda: generate_grouped(
+            params, cfg, prompts, pool.pools(), idx, max_new=gen,
+            use_kernel=False, unroll=unroll,
+        )
+    )
+    toks = b * gen
+    return [
+        (f"serve/{arch}/single_adapter_tok_s", toks / t_single),
+        (f"serve/{arch}/grouped_adapter_tok_s", toks / t_grouped),
+        (f"serve/{arch}/grouped_overhead_x", t_grouped / t_single),
+        (f"serve/{arch}/pool_tenants", float(len(pool))),
+        (f"serve/{arch}/pool_MiB", pool.nbytes() / 2**20),
+    ]

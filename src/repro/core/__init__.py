@@ -6,6 +6,8 @@
 - ``finetune``: Algorithm 1 (populate epoch + cached epochs).
 - ``lm_adapters``: Skip-LoRA adapters for transformer LMs (framework scale).
 - ``cache_engine``: tiered HBM/host cache placement (DESIGN.md §4).
+- ``adapter_pool``: slot-based multi-tenant adapter registry for serving
+  (DESIGN.md §7); feeds the grouped Pallas kernel.
 """
 
 import jax

@@ -1,0 +1,240 @@
+"""Adapter pool: slot-based registry of per-tenant Skip-LoRA stacks.
+
+The serving half of the Skip2-LoRA story (DESIGN.md §7): every user
+fine-tunes their own adapter stack on-device, and the serving fleet must
+apply a *different* stack per batch row. Because the skip topology taps
+every layer input into the final output, the adapters can never be merged
+into the backbone — so serving keeps them in a stacked device-resident pool
+
+    A: (n_slots, L, D, R)    B: (n_slots, L, R, D)
+
+indexed per request row by the grouped Pallas kernel
+(``kernels.skip_lora.ops.skip_lora_grouped``). The pool mirrors the
+``TieredCacheEngine`` slot design (§4): rows are *slots*, a host-side LRU
+map assigns tenant -> slot, and registration past capacity evicts the
+least-recently-served tenant. Slot 0 is pinned all-zeros — the "no adapter"
+tenant, so base-model traffic rides the same batched kernel for free.
+
+``compress="int8"`` stores the pool rowwise-quantised (int8 payload + fp32
+scales over the last axis, the same scheme as the activation cache). The
+quantised slots feed ``skip_lora_grouped_int8`` *raw*: dequant happens on
+the gathered per-tile blocks in VMEM, so an int8 pool holds 4x the resident
+tenants of a bf16 pool for the same HBM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import donate_argnums
+from repro.core.lm_skiplora import quantize_int8
+from repro.models.config import ModelConfig
+
+Params = Any
+
+#: In-place single-slot write: the pool array is donated (off-CPU), so a
+#: registration costs one O(L*D*R) slot write, never a full-pool copy.
+#: ``slot`` rides as a traced scalar so every slot shares one trace.
+_set_slot = jax.jit(
+    lambda arr, slot, val: arr.at[slot].set(val),
+    donate_argnums=donate_argnums(0),
+)
+
+#: pinned all-zeros slot: rows with no registered adapter (base model).
+ZERO_SLOT = 0
+
+
+@dataclasses.dataclass
+class PoolStats:
+    registrations: int = 0
+    evictions: int = 0
+    lookups: int = 0
+    misses: int = 0
+
+    def as_rows(self, prefix: str = "adapter_pool") -> list[tuple[str, float]]:
+        return [
+            (f"{prefix}/registrations", float(self.registrations)),
+            (f"{prefix}/evictions", float(self.evictions)),
+            (f"{prefix}/lookups", float(self.lookups)),
+            (f"{prefix}/misses", float(self.misses)),
+        ]
+
+
+class AdapterPool:
+    """Fixed-capacity device pool of per-tenant adapter stacks.
+
+    Data plane: stacked jnp arrays consumed directly by the grouped kernel.
+    Control plane: host-side LRU tenant->slot map, like the cache engine.
+    """
+
+    def __init__(
+        self,
+        n_slots: int,
+        cfg: ModelConfig,
+        rank: int,
+        *,
+        compress: Optional[str] = None,
+        dtype=jnp.float32,
+    ):
+        if n_slots < 2:
+            raise ValueError("need >= 2 slots (slot 0 is pinned to zeros)")
+        if compress not in (None, "int8"):
+            raise ValueError(f"unknown compression {compress!r}")
+        self.n_slots = n_slots
+        self.rank = rank
+        self.compress = compress
+        l, d, r = cfg.n_layers, cfg.d_model, rank
+        self._shape_a, self._shape_b = (l, d, r), (l, r, d)
+        if compress == "int8":
+            self._qa = jnp.zeros((n_slots, l, d, r), jnp.int8)
+            self._sa = jnp.zeros((n_slots, l, d), jnp.float32)
+            self._qb = jnp.zeros((n_slots, l, r, d), jnp.int8)
+            self._sb = jnp.zeros((n_slots, l, r), jnp.float32)
+        else:
+            self._a = jnp.zeros((n_slots, l, d, r), dtype)
+            self._b = jnp.zeros((n_slots, l, r, d), dtype)
+        # Slot 0 never enters the LRU / free list: it is the zero tenant.
+        self._lru: OrderedDict[Any, int] = OrderedDict()
+        self._free: list[int] = list(range(n_slots - 1, 0, -1))
+        self.stats = PoolStats()
+
+    # -- capacity -----------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def tenants(self) -> list:
+        return list(self._lru.keys())
+
+    def has(self, tenant) -> bool:
+        return tenant in self._lru
+
+    def nbytes(self) -> int:
+        arrs = (
+            (self._qa, self._sa, self._qb, self._sb)
+            if self.compress == "int8"
+            else (self._a, self._b)
+        )
+        return sum(a.size * a.dtype.itemsize for a in arrs)
+
+    # -- registration -------------------------------------------------------
+
+    def _write_slot(self, slot: int, adapters: Params) -> None:
+        a = jnp.asarray(adapters["A"], jnp.float32)
+        b = jnp.asarray(adapters["B"], jnp.float32)
+        if a.shape != self._shape_a or b.shape != self._shape_b:
+            raise ValueError(
+                f"adapter shapes {a.shape}/{b.shape} != pool "
+                f"{self._shape_a}/{self._shape_b}"
+            )
+        s = jnp.asarray(slot, jnp.int32)
+        if self.compress == "int8":
+            qa, sa = quantize_int8(a)
+            qb, sb = quantize_int8(b)
+            self._qa = _set_slot(self._qa, s, qa)
+            self._sa = _set_slot(self._sa, s, sa)
+            self._qb = _set_slot(self._qb, s, qb)
+            self._sb = _set_slot(self._sb, s, sb)
+        else:
+            self._a = _set_slot(self._a, s, a.astype(self._a.dtype))
+            self._b = _set_slot(self._b, s, b.astype(self._b.dtype))
+
+    def register(self, tenant, adapters: Params) -> int:
+        """Install a tenant's fine-tuned {"A": (L,D,R), "B": (L,R,D)} stack.
+
+        Re-registering overwrites in place (a fresh on-device fine-tune).
+        A full pool evicts the least-recently-served tenant.
+
+        Off-CPU the slot write donates the pool buffers (an in-place
+        O(L*D*R) write, never a full-pool copy) — any dict previously
+        returned by ``pools()`` is invalidated; re-fetch it after
+        registration and never register mid-flight of a computation that
+        still holds the old arrays.
+        """
+        if tenant in self._lru:
+            slot = self._lru[tenant]
+            self._lru.move_to_end(tenant)
+        else:
+            if not self._free:
+                victim, slot = self._lru.popitem(last=False)
+                self.stats.evictions += 1
+            else:
+                slot = self._free.pop()
+            self._lru[tenant] = slot
+        self._write_slot(slot, adapters)
+        self.stats.registrations += 1
+        return slot
+
+    def evict(self, tenant) -> None:
+        slot = self._lru.pop(tenant)
+        self._free.append(slot)
+        self.stats.evictions += 1
+
+    # -- lookup -------------------------------------------------------------
+
+    def lookup(self, tenants) -> jax.Array:
+        """Tenant ids -> (B,) int32 slot indices for the grouped kernel.
+
+        ``None`` maps to the pinned zero slot (base model, no adapter);
+        unknown tenants raise — the serving tier decides whether a miss
+        means "fine-tune first" or "serve base", not the pool.
+        """
+        slots = []
+        for t in tenants:
+            self.stats.lookups += 1
+            if t is None:
+                slots.append(ZERO_SLOT)
+            elif t in self._lru:
+                self._lru.move_to_end(t)
+                slots.append(self._lru[t])
+            else:
+                self.stats.misses += 1
+                raise KeyError(f"tenant {t!r} has no registered adapters")
+        return jnp.asarray(slots, jnp.int32)
+
+    # -- data plane ---------------------------------------------------------
+
+    def pools(self) -> dict[str, jax.Array]:
+        """The stacked arrays the grouped kernel consumes, in storage layout.
+
+        float pool: {"A", "B"}; int8 pool: {"qa", "sa", "qb", "sb"} — the
+        int8 payload is handed over *raw* (dequant lives in the kernel).
+        The dict is a snapshot of the live buffers: ``register`` donates
+        them off-CPU, so re-fetch after any registration (see ``register``).
+        """
+        if self.compress == "int8":
+            return {"qa": self._qa, "sa": self._sa, "qb": self._qb, "sb": self._sb}
+        return {"A": self._a, "B": self._b}
+
+
+def grouped_skip_sum(
+    acts: jax.Array,
+    pools: dict[str, jax.Array],
+    idx: jax.Array,
+    *,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Per-row skip-sum over a stacked pool: unpacks the pool layout (float
+    or raw-int8) and forwards to the grouped kernel wrappers, which own the
+    row flattening, stop_gradient contract, and kernel/oracle dispatch.
+
+    acts: (L, B, S, D); idx: (B,) int32 -> (B, S, D).
+    """
+    from repro.kernels.skip_lora.ops import (
+        skip_lora_grouped,
+        skip_lora_grouped_int8,
+    )
+
+    if "qa" in pools:
+        return skip_lora_grouped_int8(
+            acts, pools["qa"], pools["sa"], pools["qb"], pools["sb"], idx,
+            use_kernel=use_kernel,
+        )
+    return skip_lora_grouped(
+        acts, pools["A"], pools["B"], idx, use_kernel=use_kernel
+    )

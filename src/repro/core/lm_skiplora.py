@@ -20,8 +20,10 @@ Cache modes (``SkipLoRAConfig``):
                     trains (beyond-paper).
 
 Adapters live in a *flat* layout {"A": (L, D, R), "B": (L, R, D)} (what the
-fused Pallas kernel consumes) with converters to the LayerStack's periodic
-layout for populate/serve forwards.
+fused Pallas kernel consumes, and the per-slot layout of the serving
+``AdapterPool`` — DESIGN.md §7) with converters to and from the
+LayerStack's periodic layout (``adapters_to_stack`` / ``stack_to_adapters``)
+for populate/serve forwards.
 """
 
 from __future__ import annotations
@@ -79,6 +81,24 @@ def adapters_to_stack(adapters: Params, cfg: ModelConfig) -> Params:
         {"A": a[lp + j], "B": b[lp + j]} for j in range(len(cfg.remainder_pattern))
     ]
     return {"periods": periods, "remainder": remainder}
+
+
+def stack_to_adapters(stack: Params, cfg: ModelConfig) -> Params:
+    """LayerStack periodic layout -> flat {"A": (L, D, R), "B": (L, R, D)}.
+
+    Inverse of ``adapters_to_stack``; the serve-time handoff — a fine-tuned
+    stack registers into an ``AdapterPool`` slot in flat layout (DESIGN.md
+    §7), which is also what the grouped kernel's pool gather consumes."""
+    period = cfg.period
+    parts_a, parts_b = [], []
+    for p in range(cfg.n_periods):
+        for i in range(period):
+            parts_a.append(stack["periods"][i]["A"][p])
+            parts_b.append(stack["periods"][i]["B"][p])
+    for rem in stack["remainder"]:
+        parts_a.append(rem["A"])
+        parts_b.append(rem["B"])
+    return {"A": jnp.stack(parts_a), "B": jnp.stack(parts_b)}
 
 
 def split_trainable(adapters: Params, sl: SkipLoRAConfig) -> tuple[Params, Params]:

@@ -1,6 +1,8 @@
-"""Fused Skip-LoRA aggregation kernels (forward, backward, int8 variant)."""
+"""Fused Skip-LoRA aggregation kernels (forward, backward, int8, grouped)."""
 
 from repro.kernels.skip_lora.ops import (  # noqa: F401
     skip_lora_fused,
     skip_lora_fused_int8,
+    skip_lora_grouped,
+    skip_lora_grouped_int8,
 )

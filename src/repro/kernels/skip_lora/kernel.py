@@ -13,6 +13,12 @@ it (out index_map ignores l -> block revisited, initialised at l == 0).
 Backward grid (L, m_tiles): per-layer gA (D, R) / gB (R, D) blocks stay
 resident while row tiles stream (accumulated over m, initialised at m == 0).
 
+Grouped (multi-tenant serving) variants take a stacked adapter *pool*
+(N, L, D, R) plus a per-row-tile slot index delivered by scalar prefetch:
+rows are pre-grouped by adapter so each tile gathers exactly one (A, B)
+layer block from the pool per grid step (BGMV-style). The int8 grouped
+variant keeps the pool int8 in HBM and dequantises gathered blocks in VMEM.
+
 VMEM budget per step (bf16, TM=128, D=8192 worst case among assigned archs):
 x tile 2 MB + fp32 out tile 4 MB + A/B/z < 1.5 MB << 16 MB/core.
 """
@@ -135,6 +141,120 @@ def skip_lora_bwd(
 # int8 forward: x[l] = q[l] * scale[l][:, None], dequant fused into the
 # A-projection so the int8 cache never round-trips through HBM as bf16.
 # ---------------------------------------------------------------------------
+
+
+def _grouped_fwd_kernel(g_ref, x_ref, a_ref, b_ref, o_ref):
+    del g_ref  # consumed by the index_maps; the body sees gathered blocks
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0]                        # (TM, D)
+    a = a_ref[0, 0].astype(x.dtype)     # (D, R)
+    b = b_ref[0, 0].astype(x.dtype)     # (R, D)
+    z = jnp.dot(x, a, preferred_element_type=jnp.float32).astype(x.dtype)
+    o_ref[...] += jnp.dot(z, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def skip_lora_grouped_fwd(
+    x: jax.Array,            # (L, M, D) rows pre-grouped by adapter
+    a_pool: jax.Array,       # (N, L, D, R) stacked adapter pool
+    b_pool: jax.Array,       # (N, L, R, D)
+    tile_adapter: jax.Array,  # (M // TM,) int32 adapter slot per row tile
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """BGMV-style grouped forward: out[m] = sum_l x[l,m] @ A[g,l] @ B[g,l]
+    where g = tile_adapter[m // TM]. The caller groups rows so every row
+    tile maps to exactly ONE adapter slot; the tile->slot map rides in as a
+    scalar-prefetch operand so each (A, B) layer block is gathered from the
+    pool into VMEM once per tile — HBM traffic is the *active* adapters'
+    blocks, never the whole pool (DESIGN.md §6)."""
+    lnum, m, d = x.shape
+    n, _, _, r = a_pool.shape
+    assert m % TM == 0, f"rows {m} must be padded to a multiple of {TM}"
+    grid = (m // TM, lnum)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TM, d), lambda mi, li, g: (li, mi, 0)),
+            pl.BlockSpec((1, 1, d, r), lambda mi, li, g: (g[mi], li, 0, 0)),
+            pl.BlockSpec((1, 1, r, d), lambda mi, li, g: (g[mi], li, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TM, d), lambda mi, li, g: (mi, 0)),
+    )
+    out = pl.pallas_call(
+        _grouped_fwd_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(tile_adapter, x, a_pool, b_pool)
+    return out.astype(x.dtype)
+
+
+def _grouped_fwd_int8_kernel(g_ref, x_ref, qa_ref, sa_ref, qb_ref, sb_ref, o_ref):
+    del g_ref
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0]                                             # (TM, D)
+    a = (qa_ref[0, 0].astype(jnp.float32) * sa_ref[0, 0][:, None]).astype(x.dtype)
+    b = (qb_ref[0, 0].astype(jnp.float32) * sb_ref[0, 0][:, None]).astype(x.dtype)
+    z = jnp.dot(x, a, preferred_element_type=jnp.float32).astype(x.dtype)
+    o_ref[...] += jnp.dot(z, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def skip_lora_grouped_fwd_int8(
+    x: jax.Array,             # (L, M, D) rows pre-grouped by adapter
+    qa: jax.Array,            # (N, L, D, R) int8 pool payload
+    sa: jax.Array,            # (N, L, D) fp32 rowwise scales for A
+    qb: jax.Array,            # (N, L, R, D) int8
+    sb: jax.Array,            # (N, L, R) fp32 rowwise scales for B
+    tile_adapter: jax.Array,  # (M // TM,) int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped forward over an int8-compressed adapter pool. The pool stays
+    int8 in HBM (4x the resident tenants of bf16); dequant happens on the
+    gathered per-tile blocks in VMEM, so the full-precision adapters are
+    never materialised outside the kernel."""
+    lnum, m, d = x.shape
+    n, _, _, r = qa.shape
+    assert m % TM == 0
+    grid = (m // TM, lnum)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TM, d), lambda mi, li, g: (li, mi, 0)),
+            pl.BlockSpec((1, 1, d, r), lambda mi, li, g: (g[mi], li, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda mi, li, g: (g[mi], li, 0)),
+            pl.BlockSpec((1, 1, r, d), lambda mi, li, g: (g[mi], li, 0, 0)),
+            pl.BlockSpec((1, 1, r), lambda mi, li, g: (g[mi], li, 0)),
+        ],
+        out_specs=pl.BlockSpec((TM, d), lambda mi, li, g: (mi, 0)),
+    )
+    out = pl.pallas_call(
+        _grouped_fwd_int8_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(tile_adapter, x, qa, sa, qb, sb)
+    return out.astype(x.dtype)
 
 
 def _fwd_int8_kernel(q_ref, s_ref, a_ref, b_ref, o_ref):

@@ -115,3 +115,134 @@ def skip_lora_fused_int8(
     sr = scale.reshape(l, bsz * s)
     out = _skip_lora_rows_int8(qr, sr, a, b)
     return out.reshape(bsz, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Grouped multi-adapter serving path (BGMV-style)
+# ---------------------------------------------------------------------------
+#
+# The kernel wants rows pre-grouped so every TM-row tile maps to exactly one
+# adapter slot. Group sizes are data-dependent (whatever mix of tenants the
+# batch carries), so the wrapper sorts rows by slot and pads each group to a
+# tile boundary inside a statically-sized buffer. A batch of M rows touches
+# at most G = min(N, M) distinct slots, and sum_g ceil(c_g/TM)*TM
+# <= M + G*(TM-1), so capacity ceil(M/TM)*TM + G*TM always fits — the
+# padded buffer scales with the *batch's* possible group count, never the
+# pool size. Padding rows are zero (contribute zero output) and are never
+# gathered back.
+
+
+def _grouping_plan(idx: jax.Array, n_adapters: int, m: int):
+    """Row permutation + tile->slot map for grouped dispatch (all jittable).
+
+    Returns (dest_orig (M,) padded-buffer position per original row,
+    tile_adapter (m_pad//TM,) int32, m_pad)."""
+    tm = K.TM
+    m_pad = (m + tm - 1) // tm * tm + min(n_adapters, m) * tm
+    counts = jnp.bincount(idx, length=n_adapters)             # (N,)
+    counts_cum_ex = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]]
+    )
+    padded = (counts + tm - 1) // tm * tm                     # (N,) tile-aligned
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), padded.dtype), jnp.cumsum(padded)[:-1]]
+    )
+    order = jnp.argsort(idx)                                  # stable
+    g_sorted = idx[order]
+    within = jnp.arange(m) - counts_cum_ex[g_sorted]
+    dest_sorted = starts[g_sorted] + within                   # (M,)
+    dest_orig = jnp.zeros((m,), dest_sorted.dtype).at[order].set(dest_sorted)
+    tile_cum = jnp.cumsum(padded // tm)
+    tile_adapter = jnp.searchsorted(
+        tile_cum, jnp.arange(m_pad // tm), side="right"
+    )
+    # Slack tiles past the last group alias slot N-1; their rows are zero.
+    tile_adapter = jnp.clip(tile_adapter, 0, n_adapters - 1).astype(jnp.int32)
+    return dest_orig, tile_adapter, m_pad
+
+
+def _grouped_rows(x: jax.Array, a_pool: jax.Array, b_pool: jax.Array, idx: jax.Array) -> jax.Array:
+    l, m, d = x.shape
+    n = a_pool.shape[0]
+    dest, tile_adapter, m_pad = _grouping_plan(idx, n, m)
+    xg = jnp.zeros((l, m_pad, d), x.dtype).at[:, dest].set(x)
+    out = K.skip_lora_grouped_fwd(
+        xg, a_pool, b_pool, tile_adapter, interpret=_interpret()
+    )
+    return out[dest]
+
+
+def _grouped_rows_int8(
+    x: jax.Array, qa: jax.Array, sa: jax.Array, qb: jax.Array, sb: jax.Array,
+    idx: jax.Array,
+) -> jax.Array:
+    l, m, d = x.shape
+    n = qa.shape[0]
+    dest, tile_adapter, m_pad = _grouping_plan(idx, n, m)
+    xg = jnp.zeros((l, m_pad, d), x.dtype).at[:, dest].set(x)
+    out = K.skip_lora_grouped_fwd_int8(
+        xg, qa, sa, qb, sb, tile_adapter, interpret=_interpret()
+    )
+    return out[dest]
+
+
+def skip_lora_grouped(
+    acts: jax.Array, a_pool: jax.Array, b_pool: jax.Array, idx: jax.Array,
+    *, use_kernel: bool = True,
+) -> jax.Array:
+    """Multi-tenant fused skip-sum: row b gets its own adapter stack.
+
+    acts: (L, B, S, D); a_pool: (N, L, D, R); b_pool: (N, L, R, D);
+    idx: (B,) int32 slot per batch row -> (B, S, D).
+    ``use_kernel=False`` routes to the per-row jnp oracle (same layout and
+    stop_gradient contract — this is the only wrapper for both paths).
+
+    Serve-only: the pool is a registry of *already fine-tuned* tenants, so
+    every input is wrapped in ``stop_gradient`` — adapter-pool gathers are
+    non-differentiable constants at serve time (tested).
+    """
+    from repro.kernels.skip_lora import ref as R
+
+    acts = jax.lax.stop_gradient(acts)
+    a_pool = jax.lax.stop_gradient(a_pool)
+    b_pool = jax.lax.stop_gradient(b_pool)
+    l, bsz, s, d = acts.shape
+    x = acts.reshape(l, bsz * s, d)
+    row_idx = jnp.repeat(idx, s)
+    if use_kernel:
+        out = _grouped_rows(x, a_pool, b_pool, row_idx)
+    else:
+        out = R.skip_lora_grouped_ref(x, a_pool, b_pool, row_idx)
+    return out.reshape(bsz, s, d)
+
+
+def skip_lora_grouped_int8(
+    acts: jax.Array,
+    qa: jax.Array,
+    sa: jax.Array,
+    qb: jax.Array,
+    sb: jax.Array,
+    idx: jax.Array,
+    *,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Multi-tenant skip-sum over an int8-compressed adapter pool.
+
+    acts: (L, B, S, D) live activations (float); qa/sa, qb/sb: rowwise-
+    quantised pool payloads + scales (see ``AdapterPool``); idx: (B,) int32.
+    Dequant happens on gathered blocks inside the kernel
+    (``use_kernel=False``: the dequantise-then-oracle jnp path). Serve-only.
+    """
+    from repro.kernels.skip_lora import ref as R
+
+    acts = jax.lax.stop_gradient(acts)
+    sa = jax.lax.stop_gradient(sa)
+    sb = jax.lax.stop_gradient(sb)
+    l, bsz, s, d = acts.shape
+    x = acts.reshape(l, bsz * s, d)
+    row_idx = jnp.repeat(idx, s)
+    if use_kernel:
+        out = _grouped_rows_int8(x, qa, sa, qb, sb, row_idx)
+    else:
+        out = R.skip_lora_grouped_int8_ref(x, qa, sa, qb, sb, row_idx)
+    return out.reshape(bsz, s, d)

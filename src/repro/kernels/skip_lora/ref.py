@@ -40,6 +40,41 @@ def skip_lora_bwd_ref(
     return ga.astype(jnp.float32), gb.astype(jnp.float32)
 
 
+def skip_lora_grouped_ref(
+    x: jnp.ndarray, a_pool: jnp.ndarray, b_pool: jnp.ndarray, idx: jnp.ndarray
+) -> jnp.ndarray:
+    """Per-row multi-adapter oracle: out[m] = sum_l x[l,m] @ A[idx[m],l] @ B[idx[m],l].
+
+    x: (L, M, D); a_pool: (N, L, D, R); b_pool: (N, L, R, D); idx: (M,) int32
+    -> (M, D) in x.dtype. Materialises the per-row adapter gather (fine for
+    tests; the kernel gathers per tile instead)."""
+    a_r = a_pool[idx].astype(x.dtype)   # (M, L, D, R)
+    b_r = b_pool[idx].astype(x.dtype)   # (M, L, R, D)
+    z = jnp.einsum("lmd,mldr->mlr", x, a_r, preferred_element_type=jnp.float32)
+    out = jnp.einsum(
+        "mlr,mlrd->md", z.astype(x.dtype), b_r, preferred_element_type=jnp.float32
+    )
+    return out.astype(x.dtype)
+
+
+def skip_lora_grouped_int8_ref(
+    x: jnp.ndarray,
+    qa: jnp.ndarray,
+    sa: jnp.ndarray,
+    qb: jnp.ndarray,
+    sb: jnp.ndarray,
+    idx: jnp.ndarray,
+) -> jnp.ndarray:
+    """int8-pool oracle: dequantise the whole pool, then the float oracle.
+
+    qa: (N, L, D, R) int8 with sa (N, L, D) scales; qb: (N, L, R, D) int8
+    with sb (N, L, R) scales (rowwise over the last axis, matching
+    ``core.lm_skiplora.quantize_int8``)."""
+    a_pool = qa.astype(jnp.float32) * sa[..., None]
+    b_pool = qb.astype(jnp.float32) * sb[..., None]
+    return skip_lora_grouped_ref(x, a_pool, b_pool, idx)
+
+
 def skip_lora_int8_fwd_ref(
     q: jnp.ndarray, scale: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, dtype=jnp.bfloat16
 ) -> jnp.ndarray:

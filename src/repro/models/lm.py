@@ -9,6 +9,9 @@ Entry points:
     log-softmax run per sequence chunk inside a rematerialised scan (critical
     for vocab 256k at seq 4k+).
   - ``init_serve_caches``: per-layer KV/state caches for serving.
+  - ``serve_prefill`` / ``serve_decode`` (+ ``_grouped`` multi-tenant
+    variants) and ``decode_scan``: the whole generation as one ``lax.scan``
+    dispatch with sampling folded into the carry (DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -217,3 +220,132 @@ def serve_decode(
     )
     logits = readout(params, cfg, out["h"])
     return logits, out["caches"]
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant (grouped) serving: per-row adapter slots from a stacked pool
+# ---------------------------------------------------------------------------
+
+
+def serve_prefill_grouped(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    caches: Params,
+    pools: dict[str, jax.Array],   # AdapterPool.pools() layout (float or int8)
+    idx: jax.Array,                # (B,) int32 slot per batch row
+    *,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, Params]:
+    """Prefill with per-row adapters. The backbone runs adapter-free (the
+    skip term never feeds back into the blocks — DESIGN.md §2), activations
+    are collected, and one grouped skip-sum over the *last* position yields
+    the per-tenant logits. Returns (last-position logits, caches)."""
+    from repro.core.adapter_pool import grouped_skip_sum
+
+    out = lm_forward(
+        params, cfg, tokens, mode="prefill", caches=caches, collect_acts=True
+    )
+    y_last = out["y_base"][:, -1:]
+    skip = grouped_skip_sum(
+        out["acts"][:, :, -1:], pools, idx, use_kernel=use_kernel
+    )
+    logits = readout(params, cfg, y_last + skip.astype(y_last.dtype))
+    return logits, out["caches"]
+
+
+def serve_decode_grouped(
+    params: Params,
+    cfg: ModelConfig,
+    token: jax.Array,              # (B, 1) int32
+    pos: jax.Array,                # scalar int32
+    caches: Params,
+    pools: dict[str, jax.Array],
+    idx: jax.Array,                # (B,) int32
+    *,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, Params]:
+    """One grouped decode step: per-row adapters via one fused gather-and-
+    sum over the (L, B, 1, D) collected block inputs."""
+    from repro.core.adapter_pool import grouped_skip_sum
+
+    out = lm_forward(
+        params, cfg, token, mode="decode", caches=caches, pos=pos, collect_acts=True
+    )
+    skip = grouped_skip_sum(out["acts"], pools, idx, use_kernel=use_kernel)
+    y = out["y_base"] + skip.astype(out["y_base"].dtype)
+    logits = readout(params, cfg, y)
+    return logits, out["caches"]
+
+
+# ---------------------------------------------------------------------------
+# Scan-fused decode: the whole generation as ONE lax.scan dispatch
+# ---------------------------------------------------------------------------
+
+
+def sample_token(
+    logits: jax.Array,             # (B, 1, V)
+    key: jax.Array,
+    temperature: float,            # static
+) -> tuple[jax.Array, jax.Array]:
+    """Greedy / temperature sampling. Returns (tok (B, 1) int32, next key).
+
+    The (B, 1) shape is invariant across both branches (scan carries depend
+    on it), and the PRNG key is split-and-carried so every step of a scanned
+    generation draws from a fresh subkey."""
+    if temperature > 0:
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(sub, logits[:, 0] / temperature)[:, None]
+    else:
+        tok = jnp.argmax(logits, axis=-1)
+    return tok.astype(jnp.int32), key
+
+
+def decode_scan(
+    params: Params,
+    cfg: ModelConfig,
+    tok0: jax.Array,               # (B, 1) int32 first generated token
+    start_pos: jax.Array,          # scalar int32 position of tok0
+    caches: Params,
+    key: jax.Array,                # PRNG key (carried even for greedy)
+    *,
+    max_new: int,
+    temperature: float = 0.0,
+    adapters: Optional[Params] = None,
+    pools: Optional[dict[str, jax.Array]] = None,
+    idx: Optional[jax.Array] = None,
+    use_kernel: bool = True,
+    unroll: int = 1,
+) -> tuple[jax.Array, Params]:
+    """Generate ``max_new`` tokens as one ``lax.scan`` dispatch.
+
+    Sampling is folded into the carry (tok, pos, caches, key), so the whole
+    generation is a single XLA computation: 1 dispatch instead of ``max_new``
+    Python round-trips, and the KV caches can be donated by the caller's jit
+    instead of round-tripping per token. ``pools``/``idx`` select the
+    multi-tenant grouped path; ``adapters`` the single-stack path.
+    ``unroll`` fuses that many decode steps per while-loop iteration — XLA
+    then optimises across step boundaries, which on dispatch-bound backends
+    cuts the residual per-step loop overhead severalfold (compile time
+    grows with it; ``max_new`` need not be a multiple).
+    Returns (tokens (B, max_new) — tok0 first, matching the loop path —
+    and the final caches)."""
+
+    def body(carry, _):
+        tok, pos, caches, key = carry
+        if pools is not None:
+            logits, caches = serve_decode_grouped(
+                params, cfg, tok, pos, caches, pools, idx, use_kernel=use_kernel
+            )
+        else:
+            logits, caches = serve_decode(
+                params, cfg, tok, pos, caches, adapters=adapters
+            )
+        nxt, key = sample_token(logits, key, temperature)
+        return (nxt, pos + 1, caches, key), tok
+
+    (_, _, caches, _), toks = jax.lax.scan(
+        body, (tok0, start_pos, caches, key), None, length=max_new,
+        unroll=min(unroll, max_new),
+    )
+    return jnp.swapaxes(toks[..., 0], 0, 1), caches

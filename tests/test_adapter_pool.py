@@ -1,0 +1,147 @@
+"""Adapter pool registry: slots, LRU eviction, int8 layout, grouped sum."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core import lm_skiplora as SL
+from repro.core.adapter_pool import ZERO_SLOT, AdapterPool, grouped_skip_sum
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduce_config(get_config("stablelm-1.6b"))
+
+
+def make_adapters(cfg, rank, seed):
+    sl = SL.SkipLoRAConfig(rank=rank)
+    ad = SL.init_adapters(jax.random.key(seed), cfg, sl)
+    ad["B"] = jax.random.normal(jax.random.key(seed + 100), ad["B"].shape) * 0.05
+    return ad
+
+
+class TestRegistry:
+    def test_register_lookup_roundtrip(self, cfg):
+        pool = AdapterPool(4, cfg, rank=4)
+        ad = make_adapters(cfg, 4, seed=0)
+        slot = pool.register("u0", ad)
+        assert slot != ZERO_SLOT
+        assert pool.has("u0") and len(pool) == 1
+        idx = pool.lookup([None, "u0"])
+        assert idx.tolist() == [ZERO_SLOT, slot]
+        np.testing.assert_allclose(
+            np.asarray(pool.pools()["A"][slot]), np.asarray(ad["A"]), atol=1e-6
+        )
+
+    def test_zero_slot_is_pinned_zeros(self, cfg):
+        pool = AdapterPool(3, cfg, rank=4)
+        for t in range(5):  # overflow capacity repeatedly
+            pool.register(f"u{t}", make_adapters(cfg, 4, seed=t))
+        p = pool.pools()
+        assert float(jnp.max(jnp.abs(p["A"][ZERO_SLOT]))) == 0.0
+        assert float(jnp.max(jnp.abs(p["B"][ZERO_SLOT]))) == 0.0
+
+    def test_lru_eviction_order(self, cfg):
+        pool = AdapterPool(3, cfg, rank=4)  # 2 usable slots
+        pool.register("a", make_adapters(cfg, 4, seed=1))
+        pool.register("b", make_adapters(cfg, 4, seed=2))
+        pool.lookup(["a"])  # touch a -> b is now LRU
+        pool.register("c", make_adapters(cfg, 4, seed=3))
+        assert pool.has("a") and pool.has("c") and not pool.has("b")
+        assert pool.stats.evictions == 1
+
+    def test_reregister_overwrites_in_place(self, cfg):
+        pool = AdapterPool(3, cfg, rank=4)
+        s1 = pool.register("u", make_adapters(cfg, 4, seed=4))
+        ad2 = make_adapters(cfg, 4, seed=5)
+        s2 = pool.register("u", ad2)
+        assert s1 == s2 and len(pool) == 1
+        np.testing.assert_allclose(
+            np.asarray(pool.pools()["A"][s1]), np.asarray(ad2["A"]), atol=1e-6
+        )
+
+    def test_unknown_tenant_raises(self, cfg):
+        pool = AdapterPool(2, cfg, rank=4)
+        with pytest.raises(KeyError):
+            pool.lookup(["ghost"])
+        assert pool.stats.misses == 1
+
+    def test_shape_mismatch_raises(self, cfg):
+        pool = AdapterPool(2, cfg, rank=4)
+        bad = make_adapters(cfg, 8, seed=6)  # wrong rank
+        with pytest.raises(ValueError):
+            pool.register("u", bad)
+
+
+class TestInt8Pool:
+    def test_raw_layout_and_footprint(self, cfg):
+        fp = AdapterPool(4, cfg, rank=8)
+        q8 = AdapterPool(4, cfg, rank=8, compress="int8")
+        assert set(q8.pools()) == {"qa", "sa", "qb", "sb"}
+        assert q8.pools()["qa"].dtype == jnp.int8
+        # int8 payload + fp32 scales approach 4x smaller than the fp32
+        # pool; at the reduced config's tiny D the scale vectors take a
+        # proportionally larger bite, so just over 3x here.
+        assert fp.nbytes() / q8.nbytes() > 3.0
+
+    def test_int8_roundtrip_close_to_float(self, cfg):
+        pool = AdapterPool(3, cfg, rank=4, compress="int8")
+        ad = make_adapters(cfg, 4, seed=7)
+        slot = pool.register("u", ad)
+        p = pool.pools()
+        deq = p["qa"][slot].astype(jnp.float32) * p["sa"][slot][..., None]
+        err = jnp.max(jnp.abs(deq - ad["A"])) / jnp.max(jnp.abs(ad["A"]))
+        assert float(err) < 0.02  # rowwise int8: <2% relative error
+
+
+class TestGroupedSkipSum:
+    def test_kernel_and_ref_paths_agree(self, cfg):
+        l, d = cfg.n_layers, cfg.d_model
+        pool = AdapterPool(4, cfg, rank=4)
+        for t in range(3):
+            pool.register(f"u{t}", make_adapters(cfg, 4, seed=10 + t))
+        idx = pool.lookup([None, "u0", "u2", "u0"])
+        acts = jax.random.normal(jax.random.key(20), (l, 4, 9, d), jnp.float32)
+        out_k = grouped_skip_sum(acts, pool.pools(), idx, use_kernel=True)
+        out_r = grouped_skip_sum(acts, pool.pools(), idx, use_kernel=False)
+        np.testing.assert_allclose(
+            np.asarray(out_k), np.asarray(out_r), atol=1e-4, rtol=1e-4
+        )
+        # Zero-slot row contributes exactly nothing.
+        assert float(jnp.max(jnp.abs(out_k[0]))) < 1e-6
+
+    def test_ref_path_pool_is_serve_time_constant(self, cfg):
+        """The jnp oracle path must honour the same non-differentiable-pool
+        invariant as the kernel path (float pool and int8 scales alike)."""
+        l, d = cfg.n_layers, cfg.d_model
+        acts = jax.random.normal(jax.random.key(40), (l, 2, 5, d), jnp.float32)
+        idx = jnp.array([1, 0], jnp.int32)
+        for compress in (None, "int8"):
+            pool = AdapterPool(3, cfg, rank=4, compress=compress)
+            pool.register("u", make_adapters(cfg, 4, seed=41))
+            pools = pool.pools()
+            diffable = {
+                k: v for k, v in pools.items()
+                if jnp.issubdtype(v.dtype, jnp.floating)
+            }
+            g = jax.grad(
+                lambda p: jnp.sum(
+                    grouped_skip_sum(acts, {**pools, **p}, idx, use_kernel=False) ** 2
+                )
+            )(diffable)
+            for k, gv in g.items():
+                assert float(jnp.max(jnp.abs(gv))) == 0.0, (compress, k)
+
+    def test_int8_pool_feeds_kernel_raw(self, cfg):
+        l, d = cfg.n_layers, cfg.d_model
+        pool = AdapterPool(3, cfg, rank=4, compress="int8")
+        pool.register("u", make_adapters(cfg, 4, seed=30))
+        idx = pool.lookup(["u", None])
+        acts = jax.random.normal(jax.random.key(31), (l, 2, 5, d), jnp.float32)
+        out_k = grouped_skip_sum(acts, pool.pools(), idx, use_kernel=True)
+        out_r = grouped_skip_sum(acts, pool.pools(), idx, use_kernel=False)
+        np.testing.assert_allclose(
+            np.asarray(out_k), np.asarray(out_r), atol=1e-4, rtol=1e-4
+        )

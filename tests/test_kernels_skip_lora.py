@@ -10,7 +10,13 @@ import pytest
 
 from repro.kernels.skip_lora import kernel as K
 from repro.kernels.skip_lora import ref as R
-from repro.kernels.skip_lora.ops import skip_lora_fused, skip_lora_fused_int8
+from repro.kernels.skip_lora.ops import (
+    _grouped_rows,
+    skip_lora_fused,
+    skip_lora_fused_int8,
+    skip_lora_grouped,
+    skip_lora_grouped_int8,
+)
 
 
 def make_inputs(l, m, d, r, dtype, seed=0):
@@ -189,6 +195,114 @@ class TestInt8:
         b = jnp.ones((l, r, d)) * 0.01
         out = skip_lora_fused_int8(q, scale, a, b)
         assert out.shape == (bsz, s, d)
+
+
+def make_pool(n, l, d, r, seed=0):
+    ka, kb = jax.random.split(jax.random.key(seed))
+    a_pool = (jax.random.normal(ka, (n, l, d, r)) / np.sqrt(d)).astype(jnp.float32)
+    b_pool = (jax.random.normal(kb, (n, l, r, d)) * 0.1).astype(jnp.float32)
+    return a_pool, b_pool
+
+
+def ragged_idx(n, m, seed=1):
+    """Group sizes deliberately ragged: empty groups, singletons, and runs
+    crossing the TM=128 tile boundary all occur for the tested (n, m)."""
+    idx = jax.random.randint(jax.random.key(seed), (m,), 0, n)
+    # Force an empty group (no rows for slot n-1 unless n == 1) and a
+    # singleton (exactly one row of slot 0 at position 0 when n > 1).
+    if n > 2:
+        idx = jnp.where(idx == n - 1, 0, idx)
+    return idx.astype(jnp.int32)
+
+
+class TestGrouped:
+    """Grouped multi-adapter kernel vs the per-row jnp oracle (DESIGN.md §7)."""
+
+    @pytest.mark.parametrize("n", [1, 4, 8])
+    @pytest.mark.parametrize("m", [128, 300])
+    def test_grouped_matches_oracle_float(self, n, m):
+        l, d, r = 3, 128, 8
+        x = jax.random.normal(jax.random.key(0), (l, m, d), jnp.float32)
+        a_pool, b_pool = make_pool(n, l, d, r)
+        idx = ragged_idx(n, m)
+        out = _grouped_rows(x, a_pool, b_pool, idx)
+        ref = R.skip_lora_grouped_ref(x, a_pool, b_pool, idx)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4
+        )
+
+    @pytest.mark.parametrize("n", [1, 4, 8])
+    def test_grouped_matches_oracle_int8(self, n):
+        from repro.core.lm_skiplora import quantize_int8
+
+        l, m, d, r = 2, 300, 128, 4
+        acts = jax.random.normal(jax.random.key(3), (l, 6, 50, d), jnp.float32)
+        a_pool, b_pool = make_pool(n, l, d, r, seed=4)
+        qa, sa = quantize_int8(a_pool)
+        qb, sb = quantize_int8(b_pool)
+        idx = ragged_idx(n, 6, seed=5)
+        out = skip_lora_grouped_int8(acts, qa, sa, qb, sb, idx)
+        ref = R.skip_lora_grouped_int8_ref(
+            acts.reshape(l, m, d), qa, sa, qb, sb, jnp.repeat(idx, 50)
+        ).reshape(6, 50, d)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4
+        )
+
+    def test_single_adapter_degenerates_to_fused(self):
+        """n_adapters=1 with every row on slot 0 == the single-stack fused
+        kernel (the grouped path is a strict generalisation)."""
+        l, bsz, s, d, r = 3, 2, 96, 128, 8
+        acts = jax.random.normal(jax.random.key(6), (l, bsz, s, d), jnp.float32)
+        a_pool, b_pool = make_pool(1, l, d, r, seed=7)
+        idx = jnp.zeros((bsz,), jnp.int32)
+        out = skip_lora_grouped(acts, a_pool, b_pool, idx)
+        ref = skip_lora_fused(acts, a_pool[0], b_pool[0])
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4
+        )
+
+    def test_pool_gathers_are_serve_time_constants(self):
+        """jax.grad through the grouped op: adapter-pool gathers are
+        non-differentiable constants at serve time — zero cotangents for
+        the pool AND the activations, float or int8 pool."""
+        from repro.core.lm_skiplora import quantize_int8
+
+        l, bsz, s, d, r, n = 2, 3, 40, 128, 4, 4
+        acts = jax.random.normal(jax.random.key(8), (l, bsz, s, d), jnp.float32)
+        a_pool, b_pool = make_pool(n, l, d, r, seed=9)
+        idx = jnp.array([0, 3, 1], jnp.int32)
+
+        g = jax.grad(
+            lambda p, x: jnp.sum(skip_lora_grouped(x, p["A"], p["B"], idx) ** 2),
+            argnums=(0, 1),
+        )({"A": a_pool, "B": b_pool}, acts)
+        assert float(jnp.max(jnp.abs(g[0]["A"]))) == 0.0
+        assert float(jnp.max(jnp.abs(g[0]["B"]))) == 0.0
+        assert float(jnp.max(jnp.abs(g[1]))) == 0.0
+
+        qa, sa = quantize_int8(a_pool)
+        qb, sb = quantize_int8(b_pool)
+        gs = jax.grad(
+            lambda scales: jnp.sum(
+                skip_lora_grouped_int8(acts, qa, scales["sa"], qb, scales["sb"], idx)
+            )
+        )({"sa": sa, "sb": sb})
+        assert float(jnp.max(jnp.abs(gs["sa"]))) == 0.0
+        assert float(jnp.max(jnp.abs(gs["sb"]))) == 0.0
+
+    def test_grad_of_reference_flows_without_stop_gradient(self):
+        """Control for the constants test: the *oracle* (no stop_gradient)
+        does propagate pool gradients — so the zero above is the serve
+        wrapper's doing, not an artefact of the topology."""
+        l, m, d, r, n = 2, 64, 128, 4, 3
+        x = jax.random.normal(jax.random.key(10), (l, m, d), jnp.float32)
+        a_pool, b_pool = make_pool(n, l, d, r, seed=11)
+        idx = ragged_idx(n, m, seed=12)
+        g = jax.grad(
+            lambda p: jnp.sum(R.skip_lora_grouped_ref(x, p["A"], p["B"], idx) ** 2)
+        )({"A": a_pool, "B": b_pool})
+        assert float(jnp.max(jnp.abs(g["A"]))) > 0.0
 
 
 class TestIntegrationWithCachedStep:

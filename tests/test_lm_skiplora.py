@@ -51,6 +51,16 @@ class TestAdapters:
         for j in range(len(cfg.remainder_pattern)):
             assert float(stack["remainder"][j]["A"][0, 0]) == n_per * period + j
 
+    def test_stack_to_adapters_inverts_adapters_to_stack(self):
+        # The serve-time handoff: flat -> periodic -> flat is the identity
+        # (incl. remainder layers), so a fine-tuned stack registers into an
+        # AdapterPool slot losslessly.
+        cfg, sl, _, adapters = setup_arch("gemma3-27b")  # has remainder layers
+        adapters["B"] = jax.random.normal(jax.random.key(5), adapters["B"].shape)
+        back = SL.stack_to_adapters(SL.adapters_to_stack(adapters, cfg), cfg)
+        np.testing.assert_array_equal(np.asarray(back["A"]), np.asarray(adapters["A"]))
+        np.testing.assert_array_equal(np.asarray(back["B"]), np.asarray(adapters["B"]))
+
     def test_skip_sum_matches_stack_forward(self):
         """The cached-path skip aggregation must equal the in-stack tap."""
         cfg, sl, params, adapters = setup_arch()
