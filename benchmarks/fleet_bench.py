@@ -1,0 +1,124 @@
+"""Fleet fine-tuning benchmark: tenants/sec, sequential vs grouped.
+
+The orchestration claim of DESIGN.md §8, measured: fine-tuning N tenants by
+looping single-tenant ``finetune()``-style runs costs N populate dispatches
+(whose backbone forwards run at per-tenant batch size) plus N cached-epoch
+scans per epoch, each with its own cache allocation and per-call pytree
+dispatch; the fleet trainer runs ONE populate and ONE cached scan per epoch
+whose fleet batches restore arithmetic density. The measured workload is
+the *whole* fine-tune — populate epoch + cached epochs — at the paper's
+operating point: each tenant owns a tiny on-device fine-tune set (the
+Skip2-LoRA premise), which is exactly the regime where per-run overhead
+dominates and sequential serving of a fleet falls behind.
+
+Both sides run the XLA-compiled jnp paths (single-stack einsum vs the
+blocked fleet einsum) — interpret-mode Pallas timing on CPU is
+correctness-grade only (see ``lm_bench.kernel_vs_einsum``); the kernel's
+HBM-traffic win is a TPU story argued in DESIGN.md §6.
+
+Reported per tenant count: full-fine-tune wall time per strategy,
+``tenants_per_s`` (tenants fully fine-tuned per second), and the speedup.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.core import fleet_finetune as FF
+from repro.core import lm_skiplora as SL
+from repro.models.lm import init_lm
+from repro.optim.optimizers import adamw
+
+
+def _time(fn, repeats: int) -> float:
+    jax.block_until_ready(fn())  # compile / warm — and finish before timing
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats
+
+
+def fleet_vs_sequential(
+    arch: str = "stablelm-1.6b",
+    tenant_counts: tuple[int, ...] = (1, 4, 8),
+    *,
+    quick: bool = False,
+) -> list[tuple[str, float]]:
+    cfg = reduce_config(get_config(arch))
+    sl = SL.SkipLoRAConfig(rank=8, mode="full", cache_dtype="float32")
+    # Tiny per-tenant fine-tune sets over several epochs: the paper's
+    # on-device regime, where a fleet's worth of sequential runs is
+    # overhead-bound and grouping actually pays.
+    n_per, seq, bpt, epochs = 8, 8, 2, 4
+    repeats = 1 if quick else 3
+    if quick:
+        tenant_counts = tuple(t for t in tenant_counts if t <= 4)
+    params = init_lm(jax.random.key(0), cfg)
+    opt = adamw(1e-3)
+    rows = []
+
+    for n_t in tenant_counts:
+        tokens = jax.random.randint(
+            jax.random.key(1), (n_t, n_per, seq), 0, cfg.vocab_size
+        )
+        stacked = FF.init_fleet_adapters(jax.random.key(3), cfg, sl, n_t)
+        row_tenant = FF.fleet_row_tenant(n_t, bpt)
+        idx = [
+            jnp.asarray(FF.fleet_index_matrix(e, n_t, n_per, bpt))
+            for e in range(epochs)
+        ]
+
+        # Fleet: one populate + one cached scan per epoch for ALL tenants.
+        pop_n = FF.make_fleet_populate_epoch(
+            cfg, sl, opt, n_t, use_kernel=False, donate=False
+        )
+        cch_n = FF.make_fleet_cached_epoch(
+            cfg, sl, opt, n_t, use_kernel=False, donate=False
+        )
+
+        def fleet():
+            cache = SL.init_lm_cache(n_t * n_per, cfg, sl, seq)
+            st, os_ = stacked, opt.init(stacked)
+            st, os_, cache, ls = pop_n(
+                params, st, os_, cache,
+                tokens.reshape(-1, seq), tokens.reshape(-1, seq),
+                idx[0], row_tenant,
+            )
+            for e in range(1, epochs):
+                st, os_, ls = cch_n(params, st, os_, cache, idx[e], row_tenant)
+            return ls
+
+        # Sequential: the whole single-tenant Algorithm-1 run, N times.
+        pop_1 = SL.make_populate_epoch(cfg, sl, opt, donate=False)
+        cch_1 = SL.make_cached_epoch(cfg, sl, opt, donate=False)
+
+        def sequential():
+            ls = None
+            for t in range(n_t):
+                cache = SL.init_lm_cache(n_per, cfg, sl, seq)
+                tr, static = SL.split_trainable(FF.tenant_adapters(stacked, t), sl)
+                os_ = opt.init(tr)
+                im = [i[:, t * bpt:(t + 1) * bpt] - t * n_per for i in idx]
+                tr, os_, cache, ls = pop_1(
+                    params, tr, static, os_, cache, tokens[t], tokens[t], im[0]
+                )
+                for e in range(1, epochs):
+                    tr, os_, ls = cch_1(params, tr, static, os_, cache, im[e])
+            return ls
+
+        t_seq = _time(sequential, repeats)
+        t_fleet = _time(fleet, repeats)
+
+        rows += [
+            (f"fleet/{arch}/t{n_t}/sequential_finetune_ms", t_seq * 1e3),
+            (f"fleet/{arch}/t{n_t}/fleet_finetune_ms", t_fleet * 1e3),
+            (f"fleet/{arch}/t{n_t}/sequential_tenants_per_s", n_t / t_seq),
+            (f"fleet/{arch}/t{n_t}/fleet_tenants_per_s", n_t / t_fleet),
+            (f"fleet/{arch}/t{n_t}/speedup_x", t_seq / t_fleet),
+        ]
+    return rows

@@ -19,13 +19,14 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="substring filter on sections")
     args = ap.parse_args()
 
-    from benchmarks import lm_bench, paper_tables, serve_bench
+    from benchmarks import fleet_bench, lm_bench, paper_tables, serve_bench
 
     sections = [
         ("serve_decode", lambda: serve_bench.decode_dispatch(
             gen=16 if args.quick else 64)),
         ("serve_grouped", lambda: serve_bench.grouped_adapters(
             gen=8 if args.quick else 32)),
+        ("fleet", lambda: fleet_bench.fleet_vs_sequential(quick=args.quick)),
         ("table2", lambda: paper_tables.table2_breakdown()),
         ("headline", lambda: paper_tables.headline_reduction()),
         ("table67", lambda: paper_tables.tables_6_7_time()),

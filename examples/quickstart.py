@@ -73,13 +73,13 @@ def main() -> None:
     print("=== 5. fused epoch loop (DESIGN.md §2): whole epochs in one dispatch")
     # At paper scale the per-batch step is dominated by Python dispatch, not
     # arithmetic; the lax.scan epoch loop amortises it away.
-    from repro.core.finetune import _epoch_index_matrix, make_skip2_epoch_fns
+    from repro.core.finetune import epoch_index_matrix, make_skip2_epoch_fns
 
     trainable, frozen = M.init_method(jax.random.key(3), cfg, bb, "skip2_lora")
     cache = C.cache_for_mlp(len(ds.x_ft), cfg.dims)
     # donate=False: timeit() re-invokes the epoch on the same carry arrays.
     populate_epoch, cached_epoch = make_skip2_epoch_fns(cfg, donate=False)
-    idx_mat = _epoch_index_matrix(jax.random.key(5), len(ds.x_ft), 20)
+    idx_mat = epoch_index_matrix(jax.random.key(5), len(ds.x_ft), 20)
     trainable, cache, ls = populate_epoch(
         trainable, frozen, cache, ds.x_ft, ds.y_ft, idx_mat, 0.05)  # compile
     jax.block_until_ready(ls)

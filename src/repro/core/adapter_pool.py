@@ -144,6 +144,22 @@ class AdapterPool:
             self._a = _set_slot(self._a, s, a.astype(self._a.dtype))
             self._b = _set_slot(self._b, s, b.astype(self._b.dtype))
 
+    def _assign_slot(self, tenant) -> int:
+        """Control-plane half of registration: LRU bookkeeping only.
+        Re-registration keeps the tenant's slot; a full pool evicts the
+        least-recently-served tenant."""
+        if tenant in self._lru:
+            slot = self._lru[tenant]
+            self._lru.move_to_end(tenant)
+        else:
+            if not self._free:
+                victim, slot = self._lru.popitem(last=False)
+                self.stats.evictions += 1
+            else:
+                slot = self._free.pop()
+            self._lru[tenant] = slot
+        return slot
+
     def register(self, tenant, adapters: Params) -> int:
         """Install a tenant's fine-tuned {"A": (L,D,R), "B": (L,R,D)} stack.
 
@@ -156,19 +172,52 @@ class AdapterPool:
         registration and never register mid-flight of a computation that
         still holds the old arrays.
         """
-        if tenant in self._lru:
-            slot = self._lru[tenant]
-            self._lru.move_to_end(tenant)
-        else:
-            if not self._free:
-                victim, slot = self._lru.popitem(last=False)
-                self.stats.evictions += 1
-            else:
-                slot = self._free.pop()
-            self._lru[tenant] = slot
+        slot = self._assign_slot(tenant)
         self._write_slot(slot, adapters)
         self.stats.registrations += 1
         return slot
+
+    def register_many(self, tenants, stacked: Params) -> list[int]:
+        """Batched registration of a fleet-trained stack: tenant
+        ``tenants[i]`` gets ``{"A": stacked["A"][i], "B": stacked["B"][i]}``
+        installed via ONE donated scatter per pool array (the fleet
+        trainer's write-back path — an in-place O(T*L*D*R) write, never a
+        full-pool copy, same donation caveats as ``register``). Returns the
+        assigned slots, LRU/eviction semantics identical to T sequential
+        ``register`` calls."""
+        tenants = list(tenants)
+        if len(set(tenants)) != len(tenants):
+            raise ValueError("duplicate tenants in batched registration")
+        if len(tenants) > self.n_slots - 1:
+            raise ValueError(
+                f"{len(tenants)} tenants exceed pool capacity {self.n_slots - 1}"
+            )
+        a = jnp.asarray(stacked["A"], jnp.float32)
+        b = jnp.asarray(stacked["B"], jnp.float32)
+        if (
+            a.shape != (len(tenants),) + self._shape_a
+            or b.shape != (len(tenants),) + self._shape_b
+        ):
+            raise ValueError(
+                f"stacked shapes {a.shape}/{b.shape} != "
+                f"{(len(tenants),) + self._shape_a}/{(len(tenants),) + self._shape_b}"
+            )
+        slots = [self._assign_slot(t) for t in tenants]
+        sv = jnp.asarray(slots, jnp.int32)
+        if self.compress == "int8":
+            # Rowwise (last-axis) quantisation is per-slot independent, so
+            # quantising the whole stack at once matches per-slot writes.
+            qa, sa = quantize_int8(a)
+            qb, sb = quantize_int8(b)
+            self._qa = _set_slot(self._qa, sv, qa)
+            self._sa = _set_slot(self._sa, sv, sa)
+            self._qb = _set_slot(self._qb, sv, qb)
+            self._sb = _set_slot(self._sb, sv, sb)
+        else:
+            self._a = _set_slot(self._a, sv, a.astype(self._a.dtype))
+            self._b = _set_slot(self._b, sv, b.astype(self._b.dtype))
+        self.stats.registrations += len(tenants)
+        return slots
 
     def evict(self, tenant) -> None:
         slot = self._lru.pop(tenant)

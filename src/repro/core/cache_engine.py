@@ -460,6 +460,20 @@ class TieredCacheEngine:
                 self.prefetch(idx_np[i + 1])
             yield idx_np[i], vals
 
+    def tenant_view(self, tenant: int, samples_per_tenant: int) -> "TenantView":
+        """Per-tenant window for fleet partitioning (DESIGN.md §8): tenant
+        ``t`` owns the contiguous global id range
+        ``[t * samples_per_tenant, (t+1) * samples_per_tenant)``. Views
+        share this engine's tiers, LRU and stats — the partition is an id
+        convention, not a data split, so a fleet batch mixing every
+        tenant's rows is still one engine read."""
+        if (tenant + 1) * samples_per_tenant > self.num_samples:
+            raise ValueError(
+                f"tenant {tenant} x {samples_per_tenant} rows exceeds "
+                f"engine size {self.num_samples}"
+            )
+        return TenantView(self, tenant, samples_per_tenant)
+
     def export_skipcache(self) -> SkipCache:
         """Materialise an id-indexed ``SkipCache`` over all present samples
         (logical layout). This is the scan fast path: when the whole set fits
@@ -475,3 +489,44 @@ class TieredCacheEngine:
             vals = self.read(jnp.asarray(chunk))
             out = cache_write(out, jnp.asarray(chunk), vals)
         return out
+
+
+# ---------------------------------------------------------------------------
+# Fleet partitioning: per-tenant views over one engine
+# ---------------------------------------------------------------------------
+
+
+class TenantView:
+    """A tenant's cache partition: local ids ``0..samples_per_tenant-1``
+    offset into the owning engine's global id space. The fleet trainer
+    (``core.fleet_finetune``) populates per tenant through views and reads
+    fleet batches (all tenants at once) through the engine directly."""
+
+    def __init__(self, engine: TieredCacheEngine, tenant: int, samples_per_tenant: int):
+        self.engine = engine
+        self.tenant = tenant
+        self.samples_per_tenant = samples_per_tenant
+        self.offset = tenant * samples_per_tenant
+
+    def global_ids(self, idx) -> np.ndarray:
+        local = np.asarray(idx)
+        if local.size and (local.min() < 0 or local.max() >= self.samples_per_tenant):
+            raise IndexError(
+                f"local ids outside tenant partition of {self.samples_per_tenant}"
+            )
+        return local + self.offset
+
+    def write(self, idx, values) -> None:
+        self.engine.write(self.global_ids(idx), values)
+
+    def read(self, idx):
+        return self.engine.read(self.global_ids(idx))
+
+    def read_raw(self, idx):
+        return self.engine.read_raw(self.global_ids(idx))
+
+    def prefetch(self, idx) -> None:
+        self.engine.prefetch(self.global_ids(idx))
+
+    def has(self, sample_id: int) -> bool:
+        return self.engine.has(int(sample_id) + self.offset)

@@ -51,7 +51,7 @@ class FinetuneResult:
         return predict
 
 
-def _epoch_index_matrix(key, n: int, batch_size: int) -> jax.Array:
+def epoch_index_matrix(key, n: int, batch_size: int) -> jax.Array:
     """Pre-permuted batch indices, shape (steps, batch). The whole epoch's
     visitation order is decided up front so the epoch can run as one scan.
 
@@ -66,6 +66,11 @@ def _epoch_index_matrix(key, n: int, batch_size: int) -> jax.Array:
     if pad:
         perm = jnp.concatenate([perm, perm[:pad]])
     return perm.reshape(steps, bs)
+
+
+#: Back-compat alias (pre-fleet name); the fleet trainer and benchmarks
+#: made the epoch-order helper part of the public surface.
+_epoch_index_matrix = epoch_index_matrix
 
 
 @functools.cache
@@ -111,7 +116,7 @@ def finetune(
     rng = lkey
     for _ in range(epochs):
         rng, sk = jax.random.split(rng)
-        idx_mat = _epoch_index_matrix(sk, n, batch_size)
+        idx_mat = epoch_index_matrix(sk, n, batch_size)
         t0 = time.perf_counter()
         trainable, ls = epoch_fn(trainable, frozen, x_ft, y_ft, idx_mat, lr)
         jax.block_until_ready(ls)
@@ -306,7 +311,7 @@ def finetune_skip2_lora(
     rng = lkey
     for e in range(epochs):
         rng, sk = jax.random.split(rng)
-        idx_mat = _epoch_index_matrix(sk, n, batch_size)
+        idx_mat = epoch_index_matrix(sk, n, batch_size)
         t0 = time.perf_counter()
         if e == 0:
             trainable, cache, ls = populate_epoch(

@@ -5,4 +5,6 @@ from repro.kernels.skip_lora.ops import (  # noqa: F401
     skip_lora_fused_int8,
     skip_lora_grouped,
     skip_lora_grouped_int8,
+    skip_lora_grouped_train,
+    skip_lora_grouped_train_int8,
 )

@@ -257,6 +257,146 @@ def skip_lora_grouped_fwd_int8(
     return out.astype(x.dtype)
 
 
+def _grouped_fwd_actint8_kernel(g_ref, q_ref, s_ref, a_ref, b_ref, o_ref):
+    del g_ref
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (TM, D)
+    s = s_ref[0][:, None]                         # (TM, 1) fp32
+    x = (q * s).astype(jnp.bfloat16)
+    a = a_ref[0, 0].astype(jnp.bfloat16)          # (D, R) gathered from pool
+    b = b_ref[0, 0].astype(jnp.bfloat16)          # (R, D)
+    z = jnp.dot(x, a, preferred_element_type=jnp.float32).astype(jnp.bfloat16)
+    o_ref[...] += jnp.dot(z, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def skip_lora_grouped_fwd_actint8(
+    q: jax.Array,             # (L, M, D) int8 rows pre-grouped by adapter
+    scale: jax.Array,         # (L, M) fp32 per-row dequant scales
+    a_pool: jax.Array,        # (N, L, D, R) float adapter pool
+    b_pool: jax.Array,        # (N, L, R, D)
+    tile_adapter: jax.Array,  # (M // TM,) int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped forward over an int8-compressed *activation* cache (the
+    training-side mirror of ``skip_lora_grouped_fwd_int8``, whose int8 side
+    is the pool). Rows stay int8 in HBM; dequant is fused into the
+    A-projection per gathered tile, so the raw cache payload feeds the fleet
+    trainer without ever materialising bf16 activations outside the kernel."""
+    lnum, m, d = q.shape
+    n, _, _, r = a_pool.shape
+    assert m % TM == 0
+    grid = (m // TM, lnum)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TM, d), lambda mi, li, g: (li, mi, 0)),
+            pl.BlockSpec((1, TM), lambda mi, li, g: (li, mi)),
+            pl.BlockSpec((1, 1, d, r), lambda mi, li, g: (g[mi], li, 0, 0)),
+            pl.BlockSpec((1, 1, r, d), lambda mi, li, g: (g[mi], li, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TM, d), lambda mi, li, g: (mi, 0)),
+    )
+    out = pl.pallas_call(
+        _grouped_fwd_actint8_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(tile_adapter, q, scale, a_pool, b_pool)
+    return out.astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Grouped backward: per-adapter gA[n] / gB[n] via the same sort-by-slot
+# segment tiling as the forward. Rows are pre-grouped so ``tile_adapter`` is
+# non-decreasing; for a fixed layer each (slot, layer) output block is
+# therefore visited in exactly ONE contiguous run of row tiles — it stays
+# VMEM-resident across the run (zero-initialised on first visit, detected by
+# comparing the tile's slot with its predecessor's) and flushes once when
+# the slot changes. Slots with no rows are never visited; the ops wrapper
+# masks their (uninitialised) blocks to zero.
+# ---------------------------------------------------------------------------
+
+
+def _grouped_bwd_kernel(g_ref, x_ref, a_ref, b_ref, gy_ref, ga_ref, gb_ref):
+    mi = pl.program_id(1)
+    cur = g_ref[mi]
+    prev = g_ref[jnp.maximum(mi - 1, 0)]
+    first_visit = jnp.logical_or(mi == 0, cur != prev)
+
+    @pl.when(first_visit)
+    def _init():
+        ga_ref[...] = jnp.zeros_like(ga_ref)
+        gb_ref[...] = jnp.zeros_like(gb_ref)
+
+    x = x_ref[0]                        # (TM, D)
+    gy = gy_ref[...].astype(x.dtype)    # (TM, D)
+    a = a_ref[0, 0].astype(x.dtype)     # (D, R)
+    b = b_ref[0, 0].astype(x.dtype)     # (R, D)
+    z = jnp.dot(x, a, preferred_element_type=jnp.float32).astype(x.dtype)     # (TM, R)
+    gz = jnp.dot(gy, b.T, preferred_element_type=jnp.float32).astype(x.dtype)  # (TM, R)
+    ga_ref[0, 0] += jnp.dot(x.T, gz, preferred_element_type=jnp.float32)
+    gb_ref[0, 0] += jnp.dot(z.T, gy, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def skip_lora_grouped_bwd(
+    x: jax.Array,             # (L, M, D) rows pre-grouped by adapter
+    a_pool: jax.Array,        # (N, L, D, R)
+    b_pool: jax.Array,        # (N, L, R, D)
+    g: jax.Array,             # (M, D) output cotangent, grouped row layout
+    tile_adapter: jax.Array,  # (M // TM,) int32, non-decreasing
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fleet backward: gA[n,l] = sum_{m in group n} x[l,m]^T (g[m] B[n,l]^T),
+    gB[n,l] = (x[l,m] A[n,l])^T g[m]. Grid (L, m_tiles) with the row axis
+    inner so each per-(slot, layer) gradient block accumulates VMEM-resident
+    over its contiguous tile run (rows sorted by slot). Empty slots are never
+    visited — callers mask them (``ops._grouped_rows_train``)."""
+    lnum, m, d = x.shape
+    n, _, _, r = a_pool.shape
+    assert m % TM == 0
+    grid = (lnum, m // TM)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TM, d), lambda li, mi, g: (li, mi, 0)),
+            pl.BlockSpec((1, 1, d, r), lambda li, mi, g: (g[mi], li, 0, 0)),
+            pl.BlockSpec((1, 1, r, d), lambda li, mi, g: (g[mi], li, 0, 0)),
+            pl.BlockSpec((TM, d), lambda li, mi, g: (mi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, d, r), lambda li, mi, g: (g[mi], li, 0, 0)),
+            pl.BlockSpec((1, 1, r, d), lambda li, mi, g: (g[mi], li, 0, 0)),
+        ],
+    )
+    ga, gb = pl.pallas_call(
+        _grouped_bwd_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, lnum, d, r), jnp.float32),
+            jax.ShapeDtypeStruct((n, lnum, r, d), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")
+        ),
+        interpret=interpret,
+    )(tile_adapter, x, a_pool, b_pool, g)
+    return ga, gb
+
+
 def _fwd_int8_kernel(q_ref, s_ref, a_ref, b_ref, o_ref):
     l = pl.program_id(1)
 

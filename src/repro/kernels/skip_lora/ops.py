@@ -12,6 +12,7 @@ DCE); only (gA, gB) are ever computed — exactly the paper's Table-1
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -213,6 +214,181 @@ def skip_lora_grouped(
         out = _grouped_rows(x, a_pool, b_pool, row_idx)
     else:
         out = R.skip_lora_grouped_ref(x, a_pool, b_pool, row_idx)
+    return out.reshape(bsz, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Trainable grouped path (fleet fine-tuning)
+# ---------------------------------------------------------------------------
+#
+# The serve wrappers above pin every input with stop_gradient — correct for a
+# registry of already-trained tenants, fatal for training them. The train
+# wrappers wire a jax.custom_vjp whose backward reuses the forward's
+# sort-by-slot/segment tiling: cotangent rows are scattered into the same
+# padded layout and the grouped backward kernel accumulates per-(slot, layer)
+# gA/gB blocks over each slot's contiguous tile run. Activations stay data
+# (symbolic-zero cotangent, the paper's frozen-backbone contract); slots with
+# no rows in the batch get exact-zero grads (their kernel output blocks are
+# never visited, so the wrapper masks them by group count).
+
+
+def _live_slot_mask(idx: jax.Array, n: int) -> jax.Array:
+    """(N,) bool: slots that own at least one row of the batch."""
+    return jnp.bincount(idx, length=n) > 0
+
+
+def _mask_slots(grad: jax.Array, live: jax.Array) -> jax.Array:
+    return jnp.where(live[:, None, None, None], grad, jnp.zeros_like(grad))
+
+
+@jax.custom_vjp
+def _grouped_rows_train(x: jax.Array, a_pool: jax.Array, b_pool: jax.Array, idx: jax.Array) -> jax.Array:
+    """x: (L, M, D), pools (N, L, D, R)/(N, L, R, D), idx: (M,) -> (M, D).
+    Differentiable in the pools; x and idx are data."""
+    return _grouped_rows(x, a_pool, b_pool, idx)
+
+
+def _grouped_train_fwd(x, a_pool, b_pool, idx):
+    return _grouped_rows_train(x, a_pool, b_pool, idx), (x, a_pool, b_pool, idx)
+
+
+def _grouped_train_bwd(res, g):
+    x, a_pool, b_pool, idx = res
+    l, m, d = x.shape
+    n = a_pool.shape[0]
+    dest, tile_adapter, m_pad = _grouping_plan(idx, n, m)
+    xg = jnp.zeros((l, m_pad, d), x.dtype).at[:, dest].set(x)
+    gg = jnp.zeros((m_pad, d), x.dtype).at[dest].set(g.astype(x.dtype))
+    ga, gb = K.skip_lora_grouped_bwd(
+        xg, a_pool, b_pool, gg, tile_adapter, interpret=_interpret()
+    )
+    live = _live_slot_mask(idx, n)
+    ga = _mask_slots(ga, live).astype(a_pool.dtype)
+    gb = _mask_slots(gb, live).astype(b_pool.dtype)
+    return (
+        jnp.zeros_like(x),                      # cached activations are data
+        ga,
+        gb,
+        np.zeros(idx.shape, jax.dtypes.float0),  # int row->slot map
+    )
+
+
+_grouped_rows_train.defvjp(_grouped_train_fwd, _grouped_train_bwd)
+
+
+@jax.custom_vjp
+def _grouped_rows_train_int8(
+    q: jax.Array, s: jax.Array, a_pool: jax.Array, b_pool: jax.Array, idx: jax.Array
+) -> jax.Array:
+    """Raw-int8-activation rows -> (M, D) bf16; differentiable in the pools."""
+    l, m, d = q.shape
+    n = a_pool.shape[0]
+    dest, tile_adapter, m_pad = _grouping_plan(idx, n, m)
+    qg = jnp.zeros((l, m_pad, d), q.dtype).at[:, dest].set(q)
+    sg = jnp.zeros((l, m_pad), s.dtype).at[:, dest].set(s)
+    out = K.skip_lora_grouped_fwd_actint8(
+        qg, sg, a_pool, b_pool, tile_adapter, interpret=_interpret()
+    )
+    return out[dest]
+
+
+def _grouped_train_int8_fwd(q, s, a_pool, b_pool, idx):
+    return _grouped_rows_train_int8(q, s, a_pool, b_pool, idx), (q, s, a_pool, b_pool, idx)
+
+
+def _grouped_train_int8_bwd(res, g):
+    q, s, a_pool, b_pool, idx = res
+    # The forward never materialises the dequantised rows (dequant is fused);
+    # the adapter grads need them once — this is the only bf16 copy.
+    x = (q.astype(jnp.float32) * s[..., None]).astype(jnp.bfloat16)
+    _, ga, gb, _ = _grouped_train_bwd((x, a_pool, b_pool, idx), g)
+    return (
+        np.zeros(q.shape, jax.dtypes.float0),
+        jnp.zeros_like(s),
+        ga,
+        gb,
+        np.zeros(idx.shape, jax.dtypes.float0),
+    )
+
+
+_grouped_rows_train_int8.defvjp(_grouped_train_int8_fwd, _grouped_train_int8_bwd)
+
+
+def freeze_pool_slots(pool: jax.Array, freeze_mask: jax.Array) -> jax.Array:
+    """Detach the given slots from autodiff (forward value unchanged).
+
+    freeze_mask: (N,) bool — True slots get exact-zero grads through ANY
+    downstream use (kernel or oracle path). This is how the pinned zero
+    slot stays zero when base-model rows ride a fleet-training batch."""
+    mask = freeze_mask.reshape((-1,) + (1,) * (pool.ndim - 1))
+    return jnp.where(mask, jax.lax.stop_gradient(pool), pool)
+
+
+def skip_lora_grouped_train(
+    acts: jax.Array,
+    a_pool: jax.Array,
+    b_pool: jax.Array,
+    idx: jax.Array,
+    *,
+    use_kernel: bool = True,
+    freeze_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Trainable multi-tenant skip-sum: same contract as
+    ``skip_lora_grouped`` but differentiable in the pools — the fleet
+    fine-tuning primitive (one batch, N tenants' adapters, per-slot grads).
+
+    acts: (L, B, S, D) cached activations (data: zero cotangent);
+    a_pool: (N, L, D, R); b_pool: (N, L, R, D); idx: (B,) int32 slot per
+    batch row; freeze_mask: optional (N,) bool of slots whose grads must be
+    exactly zero (e.g. ``AdapterPool``'s pinned zero slot). Slots with no
+    rows in the batch always get exact-zero grads. ``use_kernel=False``
+    routes to the per-row jnp oracle, differentiable by plain autodiff —
+    the gradient-equivalence baseline for the kernel VJP."""
+    from repro.kernels.skip_lora import ref as R
+
+    acts = jax.lax.stop_gradient(acts)
+    if freeze_mask is not None:
+        a_pool = freeze_pool_slots(a_pool, freeze_mask)
+        b_pool = freeze_pool_slots(b_pool, freeze_mask)
+    l, bsz, s, d = acts.shape
+    x = acts.reshape(l, bsz * s, d)
+    row_idx = jnp.repeat(idx, s)
+    if use_kernel:
+        out = _grouped_rows_train(x, a_pool, b_pool, row_idx)
+    else:
+        out = R.skip_lora_grouped_ref(x, a_pool, b_pool, row_idx)
+    return out.reshape(bsz, s, d)
+
+
+def skip_lora_grouped_train_int8(
+    acts_q: jax.Array,
+    acts_scale: jax.Array,
+    a_pool: jax.Array,
+    b_pool: jax.Array,
+    idx: jax.Array,
+    *,
+    use_kernel: bool = True,
+    freeze_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Trainable grouped skip-sum over a raw int8 activation cache.
+
+    acts_q: (L, B, S, D) int8 payload; acts_scale: (L, B, S) fp32 — the
+    ``SkipLoRAConfig(mode="int8")`` cache layout, handed over raw (dequant
+    fused into the kernel's A-projection). Pools are float (live weights).
+    Backward dequantises rows once, then shares the float grouped tiling."""
+    from repro.kernels.skip_lora import ref as R
+
+    if freeze_mask is not None:
+        a_pool = freeze_pool_slots(a_pool, freeze_mask)
+        b_pool = freeze_pool_slots(b_pool, freeze_mask)
+    l, bsz, s, d = acts_q.shape
+    q = acts_q.reshape(l, bsz * s, d)
+    sc = jax.lax.stop_gradient(acts_scale).reshape(l, bsz * s)
+    row_idx = jnp.repeat(idx, s)
+    if use_kernel:
+        out = _grouped_rows_train_int8(q, sc, a_pool, b_pool, row_idx)
+    else:
+        out = R.skip_lora_grouped_actint8_ref(q, sc, a_pool, b_pool, row_idx)
     return out.reshape(bsz, s, d)
 
 

@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -73,6 +74,59 @@ def skip_lora_grouped_int8_ref(
     a_pool = qa.astype(jnp.float32) * sa[..., None]
     b_pool = qb.astype(jnp.float32) * sb[..., None]
     return skip_lora_grouped_ref(x, a_pool, b_pool, idx)
+
+
+def skip_lora_grouped_bwd_ref(
+    x: jnp.ndarray,
+    a_pool: jnp.ndarray,
+    b_pool: jnp.ndarray,
+    g: jnp.ndarray,
+    idx: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-adapter grads for the grouped skip-sum. Returns
+    (gA (N,L,D,R), gB (N,L,R,D)) fp32; slots with no rows get exact zeros.
+
+    gB[n,l] = sum_{m: idx[m]=n} (x[l,m] A[n,l])^T g[m];
+    gA[n,l] = sum_{m: idx[m]=n} x[l,m]^T (g[m] B[n,l]^T).
+    x: (L, M, D); pools (N, L, D, R)/(N, L, R, D); g: (M, D); idx: (M,).
+    No gx: cached activations are frozen-backbone constants."""
+    n = a_pool.shape[0]
+    a_r = a_pool[idx].astype(x.dtype)        # (M, L, D, R)
+    b_r = b_pool[idx].astype(x.dtype)        # (M, L, R, D)
+    z = jnp.einsum(
+        "lmd,mldr->mlr", x, a_r, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    gz = jnp.einsum(
+        "md,mlrd->mlr", g.astype(x.dtype), b_r, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    # Per-row outer products, then segment-sum rows into their slots.
+    ga_rows = jnp.einsum(
+        "lmd,mlr->mldr", x, gz, preferred_element_type=jnp.float32
+    )
+    gb_rows = jnp.einsum(
+        "mlr,md->mlrd", z, g.astype(x.dtype), preferred_element_type=jnp.float32
+    )
+    onehot = jax.nn.one_hot(idx, n, dtype=jnp.float32)       # (M, N)
+    ga = jnp.einsum("mn,mldr->nldr", onehot, ga_rows)
+    gb = jnp.einsum("mn,mlrd->nlrd", onehot, gb_rows)
+    return ga.astype(jnp.float32), gb.astype(jnp.float32)
+
+
+def skip_lora_grouped_actint8_ref(
+    q: jnp.ndarray,
+    scale: jnp.ndarray,
+    a_pool: jnp.ndarray,
+    b_pool: jnp.ndarray,
+    idx: jnp.ndarray,
+    dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    """int8-activation grouped oracle: dequantise rows, then the float
+    grouped oracle (pool stays float — the training-side layout, where the
+    adapters are live weights and the *cache* is compressed).
+
+    q: (L, M, D) int8; scale: (L, M) fp32."""
+    x = (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+    return skip_lora_grouped_ref(x, a_pool.astype(dtype), b_pool.astype(dtype), idx)
 
 
 def skip_lora_int8_fwd_ref(

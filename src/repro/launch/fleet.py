@@ -1,0 +1,200 @@
+"""Sharded fleet fine-tuning launcher: tenant-axis data parallelism.
+
+Trains N tenants' Skip2-LoRA adapters in one dispatch per epoch
+(``core.fleet_finetune``), with the tenant axis split across devices via
+``shard_map`` (DESIGN.md §8): the frozen backbone is *replicated* (it is
+tenant-independent), while the stacked adapters, their optimizer moments,
+each tenant's cache partition, and the fleet batch columns are sharded on
+the mesh's ``data`` axis. Tenants never exchange data — the only cross-
+device value is the replicated backbone — so the sharded epoch reproduces
+the single-device epoch per shard (to XLA-fusion float tolerance),
+verified by ``--check-parity``.
+
+CPU verification (no hardware needed): the device count is forced *before*
+jax import, exactly like ``launch/dryrun.py``:
+
+  PYTHONPATH=src python -m repro.launch.fleet --arch stablelm-1.6b \
+      --reduced --tenants 4 --devices 2 --samples 8 --batch-per-tenant 4 \
+      --seq 16 --epochs 3 --check-parity
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def _parse_args(argv=None) -> argparse.Namespace:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="tenant-parallel devices (forced on CPU via XLA_FLAGS)")
+    ap.add_argument("--samples", type=int, default=8, help="samples per tenant")
+    ap.add_argument("--batch-per-tenant", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--rank", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--mode", default="full", choices=["full", "int8"])
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="grouped Pallas kernel (interpret mode off-TPU)")
+    ap.add_argument("--check-parity", action="store_true",
+                    help="compare sharded losses against the single-device "
+                         "fleet trainer")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> dict:
+    args = _parse_args(argv)
+    if args.devices > 1 and "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        # Must land before the first jax import (same trick as dryrun.py).
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_config, reduce_config
+    from repro.core import fleet_finetune as FF
+    from repro.core import lm_skiplora as SL
+    from repro.optim.optimizers import adamw
+
+    if args.tenants % args.devices:
+        raise SystemExit(
+            f"--tenants {args.tenants} must divide over --devices {args.devices}"
+        )
+    if len(jax.devices()) < args.devices:
+        raise SystemExit(
+            f"need {args.devices} devices, have {len(jax.devices())} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count before jax "
+            "imports, or let this CLI do it by running it first)"
+        )
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    sl = SL.SkipLoRAConfig(rank=args.rank, mode=args.mode, cache_dtype="float32",
+                           use_fused_kernel=args.use_kernel)
+
+    n_t, n_per, seq = args.tenants, args.samples, args.seq
+    bpt = min(args.batch_per_tenant, n_per)  # fleet_index_matrix clamp
+    n_local = n_t // args.devices
+    samples_per_device = n_local * n_per
+
+    from repro.models.lm import init_lm
+
+    params = init_lm(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (n_t, n_per, seq), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.key(2), (n_t, n_per, seq), 0, cfg.vocab_size)
+
+    opt = adamw(args.lr)
+    stacked = FF.init_fleet_adapters(jax.random.key(3), cfg, sl, n_t)
+    opt_state = opt.init(stacked)
+    row_tenant = FF.fleet_row_tenant(n_t, bpt)
+    tokens_flat = tokens.reshape(n_t * n_per, seq)
+    labels_flat = labels.reshape(n_t * n_per, seq)
+    cache = SL.init_lm_cache(n_t * n_per, cfg, sl, seq)
+
+    # ---- sharded epoch builders (per-shard bodies are the unjitted fleet
+    # epochs over n_local tenants; jit wraps the sharded call) -------------
+    mesh = jax.make_mesh((args.devices,), ("data",))
+    populate_raw = FF.make_fleet_populate_epoch(
+        cfg, sl, opt, n_local, use_kernel=args.use_kernel, jit=False
+    )
+    cached_raw = FF.make_fleet_cached_epoch(
+        cfg, sl, opt, n_local, use_kernel=args.use_kernel, jit=False
+    )
+
+    def _localize(idx, row_t):
+        dev = jax.lax.axis_index("data")
+        return idx - dev * samples_per_device, row_t - dev * n_local
+
+    def populate_body(params, stacked, opt_state, cache, tokens, labels, idx_mat, row_t):
+        idx_local, rt_local = _localize(idx_mat, row_t)
+        return populate_raw(
+            params, stacked, opt_state, cache, tokens, labels, idx_local, rt_local
+        )
+
+    def cached_body(params, stacked, opt_state, cache, idx_mat, row_t):
+        idx_local, rt_local = _localize(idx_mat, row_t)
+        return cached_raw(params, stacked, opt_state, cache, idx_local, rt_local)
+
+    # Spec prefixes: replicated backbone, tenant-axis sharding everywhere a
+    # leading tenant/sample axis exists, replicated scalar step counter.
+    s_params = P()
+    s_stack = P("data")
+    s_opt = type(opt_state)(step=P(), mu=P("data"), nu=P("data"))
+    s_cache = P("data")
+    s_idx = P(None, "data")
+    s_rt = P("data")
+    s_losses = P(None, "data")
+
+    # Donation matches the single-device epoch builders: adapters/opt-state
+    # always; the cache only where it is carried out (populate). Off-CPU
+    # this keeps one copy of the fleet activation cache live, not two.
+    from repro.core import donate_argnums
+
+    populate_sharded = jax.jit(shard_map(
+        populate_body, mesh=mesh,
+        in_specs=(s_params, s_stack, s_opt, s_cache, P("data"), P("data"), s_idx, s_rt),
+        out_specs=(s_stack, s_opt, s_cache, s_losses),
+        check_rep=False,
+    ), donate_argnums=donate_argnums(1, 2, 3))
+    cached_sharded = jax.jit(shard_map(
+        cached_body, mesh=mesh,
+        in_specs=(s_params, s_stack, s_opt, s_cache, s_idx, s_rt),
+        out_specs=(s_stack, s_opt, s_losses),
+        check_rep=False,
+    ), donate_argnums=donate_argnums(1, 2))
+
+    losses, times = [], []
+    for e in range(args.epochs):
+        idx_mat = jnp.asarray(FF.fleet_index_matrix(e, n_t, n_per, bpt))
+        t0 = time.perf_counter()
+        if e == 0:
+            stacked, opt_state, cache, ls = populate_sharded(
+                params, stacked, opt_state, cache,
+                tokens_flat, labels_flat, idx_mat, row_tenant,
+            )
+        else:
+            stacked, opt_state, ls = cached_sharded(
+                params, stacked, opt_state, cache, idx_mat, row_tenant
+            )
+        jax.block_until_ready(ls)
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        losses.append(np.asarray(ls))
+        kind = "populate" if e == 0 else "cached  "
+        print(f"epoch {e} [{kind}] mean loss {float(np.mean(ls)):.4f} "
+              f"time {dt:.2f}s ({n_t / dt:.1f} tenants/s/epoch)")
+
+    losses = np.stack(losses)  # (epochs, steps, n_tenants)
+    out = {"losses": losses, "epoch_times": times, "devices": args.devices}
+
+    if args.check_parity:
+        ref = FF.fleet_finetune(
+            jax.random.key(3), cfg, sl, params, tokens, labels,
+            epochs=args.epochs, batch_per_tenant=bpt, optimizer=adamw(args.lr),
+            use_kernel=args.use_kernel,
+        )
+        diff = float(np.max(np.abs(ref.losses - losses)))
+        print(f"parity_max_abs_diff={diff:.3e}")
+        out["parity_max_abs_diff"] = diff
+        if diff > 1e-5:
+            # The CI verification step must FAIL on divergence, not just
+            # print it (XLA fusion differences stay well below this).
+            raise SystemExit(f"sharded/single-device parity broken: {diff:.3e}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -104,15 +104,21 @@ def readout(params: Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
     return logits
 
 
-def lm_loss(
+def lm_loss_rows(
     params: Params,
     cfg: ModelConfig,
     h: jax.Array,                       # (B, S, D) final hidden (pre-norm)
     labels: jax.Array,                  # (B, S) int32; -1 = masked
     *,
     chunk: int = 512,
-) -> jax.Array:
-    """Mean next-token CE with chunked readout (never materialises B,S,V)."""
+) -> tuple[jax.Array, jax.Array]:
+    """Per-row next-token log-likelihood sums with chunked readout.
+
+    Returns (ll (B,) fp32 summed log-likelihood per row, count (B,) fp32
+    unmasked-token count per row) — the pre-reduction form ``lm_loss``
+    averages over, exposed so multi-tenant callers can reduce per *tenant*
+    (contiguous row groups) instead of per batch (``core.fleet_finetune``).
+    The (B, S, vocab) logits tensor is never materialised."""
     from repro.models.layers import apply_norm
 
     b, s, d = h.shape
@@ -122,10 +128,15 @@ def lm_loss(
     )
     table = (params["head"] if not cfg.tie_embeddings else params["embed"])["table"]
     chunk = min(chunk, s)
-    n_chunks = max(1, s // chunk)
-    usable = n_chunks * chunk
-    hn = hn[:, :usable].reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
-    lab = labels[:, :usable].reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    n_chunks = -(-s // chunk)  # ceil: a ragged tail must still count
+    padded = n_chunks * chunk
+    if padded > s:
+        # Pad the tail chunk with masked positions (label -1 contributes
+        # zero log-likelihood and zero count) instead of dropping it.
+        hn = jnp.pad(hn, ((0, 0), (0, padded - s), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, padded - s)), constant_values=-1)
+    hn = hn.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    lab = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
 
     @jax.checkpoint
     def chunk_loss(hc, lc):
@@ -138,7 +149,7 @@ def lm_loss(
         logp = jax.nn.log_softmax(logits, axis=-1)
         mask = (lc >= 0).astype(jnp.float32)
         ll = jnp.take_along_axis(logp, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
-        return jnp.sum(ll * mask), jnp.sum(mask)
+        return jnp.sum(ll * mask, axis=-1), jnp.sum(mask, axis=-1)
 
     def body(carry, xs):
         tot, cnt = carry
@@ -148,9 +159,25 @@ def lm_loss(
     from repro.models.blocks import _SCAN_UNROLL
 
     (total, count), _ = jax.lax.scan(
-        body, (0.0, 0.0), (hn, lab), unroll=n_chunks if _SCAN_UNROLL.get() else 1
+        body,
+        (jnp.zeros((b,), jnp.float32), jnp.zeros((b,), jnp.float32)),
+        (hn, lab),
+        unroll=n_chunks if _SCAN_UNROLL.get() else 1,
     )
-    return -total / jnp.maximum(count, 1.0)
+    return total, count
+
+
+def lm_loss(
+    params: Params,
+    cfg: ModelConfig,
+    h: jax.Array,                       # (B, S, D) final hidden (pre-norm)
+    labels: jax.Array,                  # (B, S) int32; -1 = masked
+    *,
+    chunk: int = 512,
+) -> jax.Array:
+    """Mean next-token CE with chunked readout (never materialises B,S,V)."""
+    total, count = lm_loss_rows(params, cfg, h, labels, chunk=chunk)
+    return -jnp.sum(total) / jnp.maximum(jnp.sum(count), 1.0)
 
 
 # ---------------------------------------------------------------------------

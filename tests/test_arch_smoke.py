@@ -11,6 +11,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+# Full 10-arch forward/train/decode sweep (~4 min) -> nightly/full tier.
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_config, list_archs, reduce_config
 from repro.models.lm import (
     init_lm,

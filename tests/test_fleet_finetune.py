@@ -1,0 +1,376 @@
+"""Fleet trainer: grouped multi-tenant fine-tuning vs the single-tenant
+paths, cache partitioning, engine streaming, and pool write-back."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# LM-scale fleet training epochs (+ a subprocess CLI run) -> nightly/full
+# tier; the quick tier covers the grouped VJP via test_grouped_grads.py and
+# the fleet benchmark smoke.
+pytestmark = pytest.mark.slow
+
+from repro.configs import get_config, reduce_config
+from repro.core import fleet_finetune as FF
+from repro.core import lm_skiplora as SL
+from repro.core.adapter_pool import AdapterPool
+from repro.core.cache_engine import TieredCacheEngine
+from repro.models.lm import init_lm
+from repro.optim.optimizers import adamw
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduce_config(get_config("stablelm-1.6b"))
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_lm(jax.random.key(0), cfg)
+
+
+def make_data(cfg, n_tenants, n_per, seq, seed=1):
+    tokens = jax.random.randint(
+        jax.random.key(seed), (n_tenants, n_per, seq), 0, cfg.vocab_size
+    )
+    labels = jax.random.randint(
+        jax.random.key(seed + 1), (n_tenants, n_per, seq), 0, cfg.vocab_size
+    )
+    return tokens, labels
+
+
+class TestSingleTenantEquivalence:
+    """Acceptance criterion: the fleet trainer at n_tenants=1 reproduces the
+    single-tenant Algorithm-1 trajectory step for step."""
+
+    @pytest.mark.parametrize("use_kernel", [True, False])
+    def test_losses_and_adapters_match_single_tenant(self, cfg, params, use_kernel):
+        sl = SL.SkipLoRAConfig(
+            rank=4, mode="full", cache_dtype="float32", use_fused_kernel=use_kernel
+        )
+        n_per, seq, bpt, epochs, lr = 8, 16, 4, 3, 1e-2
+        tokens, labels = make_data(cfg, 1, n_per, seq)
+
+        res = FF.fleet_finetune(
+            jax.random.key(3), cfg, sl, params, tokens, labels,
+            epochs=epochs, batch_per_tenant=bpt, lr=lr, use_kernel=use_kernel,
+        )
+
+        # Single-tenant reference: same init key stream, same permutations,
+        # the PR-1 populate/cached scan loops.
+        keys = jax.random.split(jax.random.key(3), 1)
+        trainable, static = SL.split_trainable(
+            SL.init_adapters(keys[0], cfg, sl), sl
+        )
+        opt = adamw(lr)
+        opt_state = opt.init(trainable)
+        cache = SL.init_lm_cache(n_per, cfg, sl, seq)
+        pop = SL.make_populate_epoch(cfg, sl, opt)
+        cch = SL.make_cached_epoch(cfg, sl, opt)
+        ref = []
+        for e in range(epochs):
+            idx_mat = jnp.asarray(FF.fleet_index_matrix(e, 1, n_per, bpt))
+            if e == 0:
+                trainable, opt_state, cache, ls = pop(
+                    params, trainable, static, opt_state, cache,
+                    tokens[0], labels[0], idx_mat,
+                )
+            else:
+                trainable, opt_state, ls = cch(
+                    params, trainable, static, opt_state, cache, idx_mat
+                )
+            ref.append(np.asarray(ls))
+
+        np.testing.assert_allclose(
+            res.losses[:, :, 0], np.stack(ref), atol=1e-5, rtol=1e-6
+        )
+        # The kernel path shares the exact tiling with the single-stack
+        # fused kernel, so adapters match to fp32 identity; the jnp-oracle
+        # path reorders einsum contractions, whose ~1e-7 grad differences
+        # Adam amplifies over steps — compared at step-drift tolerance.
+        tol = (
+            dict(atol=1e-6, rtol=1e-6)
+            if use_kernel
+            else dict(atol=5e-4, rtol=1e-3)
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.adapters["A"][0]), np.asarray(trainable["A"]), **tol
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.adapters["B"][0]), np.asarray(trainable["B"]), **tol
+        )
+
+
+class TestTenantDecoupling:
+    def test_fleet_tenant_equals_training_alone(self, cfg, params):
+        """Tenant t's cached-epoch trajectory inside a 2-tenant fleet ==
+        tenant t trained alone from the same init (the per-tenant loss
+        reduction decouples tenants exactly)."""
+        sl = SL.SkipLoRAConfig(rank=4, mode="full", cache_dtype="float32",
+                               use_fused_kernel=True)
+        n_t, n_per, seq, bpt = 2, 8, 16, 4
+        tokens, labels = make_data(cfg, n_t, n_per, seq, seed=5)
+        stacked0 = FF.init_fleet_adapters(jax.random.key(7), cfg, sl, n_t)
+        opt = adamw(1e-2)
+
+        # Populate the fleet cache with a zero-step epoch (no updates): run
+        # the populate forward only by using the cached path after manual
+        # population via the populate epoch with lr=0 optimizer.
+        from repro.optim.optimizers import sgd
+
+        opt0 = sgd(0.0)
+        pop = FF.make_fleet_populate_epoch(cfg, sl, opt0, n_t, use_kernel=True)
+        idx0 = jnp.asarray(FF.fleet_index_matrix(0, n_t, n_per, bpt))
+        row_tenant = FF.fleet_row_tenant(n_t, bpt)
+        cache = SL.init_lm_cache(n_t * n_per, cfg, sl, seq)
+        stacked, _, cache, _ = pop(
+            params, jax.tree.map(jnp.copy, stacked0), opt0.init(stacked0),
+            cache, tokens.reshape(-1, seq), labels.reshape(-1, seq),
+            idx0, row_tenant,
+        )
+        np.testing.assert_array_equal(  # lr=0: populate must not move them
+            np.asarray(stacked["A"]), np.asarray(stacked0["A"])
+        )
+
+        # Fleet cached epoch over both tenants.
+        cched = FF.make_fleet_cached_epoch(cfg, sl, opt, n_t, use_kernel=True)
+        idx1 = jnp.asarray(FF.fleet_index_matrix(1, n_t, n_per, bpt))
+        fleet_stacked, _, fleet_losses = cched(
+            params, jax.tree.map(jnp.copy, stacked0), opt.init(stacked0),
+            cache, idx1, row_tenant,
+        )
+
+        # Each tenant alone, from the same initial adapters and cache rows.
+        for t in range(n_t):
+            solo = FF.make_fleet_cached_epoch(cfg, sl, opt, 1, use_kernel=True)
+            init_t = FF.tenant_adapters(stacked0, t)
+            stacked_t = jax.tree.map(lambda x: x[None], init_t)
+            idx_t = idx1[:, t * bpt:(t + 1) * bpt]
+            out_t, _, losses_t = solo(
+                params, stacked_t, opt.init(stacked_t), cache, idx_t,
+                jnp.zeros((bpt,), jnp.int32),
+            )
+            np.testing.assert_allclose(
+                np.asarray(fleet_losses[:, t]), np.asarray(losses_t[:, 0]),
+                atol=1e-6, rtol=1e-6,
+            )
+            np.testing.assert_allclose(
+                np.asarray(fleet_stacked["A"][t]), np.asarray(out_t["A"][0]),
+                atol=1e-6, rtol=1e-6,
+            )
+
+
+class TestFleetModes:
+    def test_non_dividing_batch_covers_every_row(self, cfg, params):
+        """bpt not dividing samples_per_tenant: the index matrix wraps (like
+        the single-tenant loop), so epoch 0 populates EVERY row and cached
+        epochs never read an unwritten cache row."""
+        per_tenant = 10  # not divisible by bpt=4
+        idx0 = FF.fleet_index_matrix(0, 2, per_tenant, 4)
+        assert idx0.shape == (3, 8)  # ceil(10/4) steps
+        for t in range(2):
+            block = idx0[:, t * 4:(t + 1) * 4].ravel()
+            assert set(block) == set(range(t * per_tenant, (t + 1) * per_tenant))
+        sl = SL.SkipLoRAConfig(rank=4, mode="full", cache_dtype="float32",
+                               use_fused_kernel=True)
+        tokens, labels = make_data(cfg, 2, per_tenant, 16, seed=27)
+        layout = SL.lm_cache_layout(cfg, sl, 16)
+        engine = TieredCacheEngine(2 * per_tenant, layout, capacity=8)
+        res = FF.fleet_finetune(  # KeyError here before the wrap fix
+            jax.random.key(29), cfg, sl, params, tokens, labels,
+            epochs=3, batch_per_tenant=4, lr=1e-2, use_kernel=True,
+            engine=engine,
+        )
+        assert np.all(np.isfinite(res.losses))
+
+    def test_int8_mode_learns(self, cfg, params):
+        sl = SL.SkipLoRAConfig(rank=4, mode="int8", cache_dtype="float32",
+                               use_fused_kernel=True)
+        tokens, labels = make_data(cfg, 2, 8, 16, seed=9)
+        res = FF.fleet_finetune(
+            jax.random.key(11), cfg, sl, params, tokens, labels,
+            epochs=3, batch_per_tenant=4, lr=1e-2, use_kernel=True,
+        )
+        assert res.losses.shape == (3, 2, 2)
+        assert np.all(np.isfinite(res.losses))
+        assert res.losses[-1].mean() < res.losses[0].mean() + 0.05
+
+    def test_freeze_a_mode_rejected(self, cfg):
+        sl = SL.SkipLoRAConfig(rank=4, mode="freeze_a")
+        with pytest.raises(ValueError):
+            FF.make_fleet_populate_epoch(cfg, sl, adamw(1e-3), 2)
+
+
+class TestEnginePartition:
+    def test_engine_streaming_matches_scan_path(self, cfg, params):
+        """Cached epochs through a spilling TieredCacheEngine (per-tenant
+        partitions, LRU spill + prefetch) reproduce the fused-scan path."""
+        sl = SL.SkipLoRAConfig(rank=4, mode="full", cache_dtype="float32",
+                               use_fused_kernel=True)
+        n_t, n_per, seq, bpt, epochs = 2, 8, 16, 4, 3
+        tokens, labels = make_data(cfg, n_t, n_per, seq, seed=13)
+        ref = FF.fleet_finetune(
+            jax.random.key(15), cfg, sl, params, tokens, labels,
+            epochs=epochs, batch_per_tenant=bpt, lr=1e-2, use_kernel=True,
+        )
+        layout = SL.lm_cache_layout(cfg, sl, seq)
+        engine = TieredCacheEngine(
+            n_t * n_per, layout, capacity=n_t * n_per // 2  # force spills
+        )
+        res = FF.fleet_finetune(
+            jax.random.key(15), cfg, sl, params, tokens, labels,
+            epochs=epochs, batch_per_tenant=bpt, lr=1e-2, use_kernel=True,
+            engine=engine,
+        )
+        np.testing.assert_allclose(res.losses, ref.losses, atol=1e-6, rtol=1e-6)
+        assert engine.stats.spills > 0  # the budget actually bit
+
+    def test_tenant_view_offsets_and_bounds(self, cfg):
+        layout = {"v": ((3,), jnp.float32)}
+        engine = TieredCacheEngine(8, layout, capacity=8)
+        v0 = engine.tenant_view(0, 4)
+        v1 = engine.tenant_view(1, 4)
+        v0.write(np.array([0, 1]), {"v": jnp.ones((2, 3))})
+        v1.write(np.array([0, 1]), {"v": 2 * jnp.ones((2, 3))})
+        np.testing.assert_allclose(np.asarray(v0.read([0])["v"]), 1.0)
+        np.testing.assert_allclose(np.asarray(v1.read([0])["v"]), 2.0)
+        assert engine.has(4) and not engine.has(2)
+        assert v1.has(0) and not v0.has(2)
+        with pytest.raises(IndexError):
+            v0.read([5])
+        with pytest.raises(ValueError):
+            engine.tenant_view(2, 4)  # past the engine's id space
+
+
+class TestWriteBack:
+    def test_mixed_batch_serving_after_fleet_write_back(self, cfg, params):
+        """The train-while-serving handoff: fleet-train, write trained slots
+        into the pool in place (batched donated write), and immediately
+        serve a mixed batch — every row must match per-row single-adapter
+        serving, including the pinned zero slot."""
+        from repro.models.lm import (
+            init_serve_caches,
+            serve_decode,
+            serve_decode_grouped,
+            serve_prefill,
+            serve_prefill_grouped,
+        )
+
+        sl = SL.SkipLoRAConfig(rank=4, mode="full", cache_dtype="float32",
+                               use_fused_kernel=True)
+        n_t = 2
+        tokens, labels = make_data(cfg, n_t, 8, 16, seed=17)
+        res = FF.fleet_finetune(
+            jax.random.key(19), cfg, sl, params, tokens, labels,
+            epochs=2, batch_per_tenant=4, lr=5e-2, use_kernel=True,
+        )
+        assert float(jnp.max(jnp.abs(res.adapters["B"]))) > 0  # actually trained
+
+        pool = AdapterPool(4, cfg, rank=4)
+        tenants = [f"tenant-{t}" for t in range(n_t)]
+        slots = FF.write_back_to_pool(pool, tenants, res.adapters)
+        assert len(set(slots)) == n_t and 0 not in slots
+
+        b, s = 4, 8
+        toks = jax.random.randint(jax.random.key(21), (b, s + 1), 0, cfg.vocab_size)
+        who = [None, "tenant-0", "tenant-1", "tenant-0"]
+        idx = pool.lookup(who)
+        caches = init_serve_caches(cfg, b, s + 2)
+        logits_p, caches = serve_prefill_grouped(
+            params, cfg, toks[:, :s], caches, pool.pools(), idx
+        )
+        logits_d, _ = serve_decode_grouped(
+            params, cfg, toks[:, s:s + 1], jnp.asarray(s, jnp.int32), caches,
+            pool.pools(), idx,
+        )
+        for row, tenant in enumerate(who):
+            stack = None
+            if tenant is not None:
+                t = tenants.index(tenant)
+                stack = SL.adapters_to_stack(
+                    FF.tenant_adapters(res.adapters, t), cfg
+                )
+            c1 = init_serve_caches(cfg, 1, s + 2)
+            ref_p, c1 = serve_prefill(
+                params, cfg, toks[row:row + 1, :s], c1, adapters=stack
+            )
+            ref_d, _ = serve_decode(
+                params, cfg, toks[row:row + 1, s:s + 1],
+                jnp.asarray(s, jnp.int32), c1, adapters=stack,
+            )
+            np.testing.assert_allclose(
+                np.asarray(logits_p[row]), np.asarray(ref_p[0]),
+                atol=2e-4, rtol=2e-4,
+            )
+            np.testing.assert_allclose(
+                np.asarray(logits_d[row]), np.asarray(ref_d[0]),
+                atol=2e-4, rtol=2e-4,
+            )
+
+    def test_register_many_matches_sequential_register(self, cfg):
+        sl = SL.SkipLoRAConfig(rank=4)
+        stacked = FF.init_fleet_adapters(jax.random.key(23), cfg, sl, 3)
+        stacked["B"] = jax.random.normal(
+            jax.random.key(24), stacked["B"].shape
+        ) * 0.05
+        for compress in (None, "int8"):
+            p_batch = AdapterPool(5, cfg, rank=4, compress=compress)
+            p_seq = AdapterPool(5, cfg, rank=4, compress=compress)
+            tenants = ["u0", "u1", "u2"]
+            slots_b = p_batch.register_many(tenants, stacked)
+            slots_s = [
+                p_seq.register(t, FF.tenant_adapters(stacked, i))
+                for i, t in enumerate(tenants)
+            ]
+            assert slots_b == slots_s
+            for k, vb in p_batch.pools().items():
+                np.testing.assert_array_equal(
+                    np.asarray(vb), np.asarray(p_seq.pools()[k]), err_msg=k
+                )
+            assert p_batch.tenants() == p_seq.tenants()
+
+    def test_register_many_validation(self, cfg):
+        sl = SL.SkipLoRAConfig(rank=4)
+        stacked = FF.init_fleet_adapters(jax.random.key(25), cfg, sl, 3)
+        pool = AdapterPool(3, cfg, rank=4)  # 2 usable slots
+        with pytest.raises(ValueError):
+            pool.register_many(["a", "b", "c"], stacked)
+        with pytest.raises(ValueError):
+            pool.register_many(
+                ["a", "a"], jax.tree.map(lambda x: x[:2], stacked)
+            )
+        with pytest.raises(ValueError):
+            pool.register_many(["a", "b"], stacked)  # shape/count mismatch
+
+
+class TestShardedFleetCLI:
+    def test_sharded_parity_on_forced_devices(self):
+        """launch/fleet.py over 2 forced CPU host devices: tenant-axis
+        shard_map must reproduce the single-device fleet trainer (the only
+        cross-device value is the replicated backbone; XLA may fuse the
+        sharded program differently, so parity is float-level, not bitwise)."""
+        import os
+        import subprocess
+        import sys
+
+        env = dict(os.environ)
+        env["JAX_PLATFORMS"] = "cpu"
+        env["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=2 "
+            + env.get("XLA_FLAGS", "")
+        )
+        env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.fleet",
+             "--tenants", "2", "--devices", "2", "--samples", "4",
+             "--batch-per-tenant", "2", "--seq", "8", "--epochs", "2",
+             "--check-parity"],
+            capture_output=True, text=True, timeout=600, env=env,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        assert out.returncode == 0, out.stderr[-2000:]
+        parity = [l for l in out.stdout.splitlines()
+                  if l.startswith("parity_max_abs_diff=")]
+        assert parity, out.stdout
+        assert float(parity[0].split("=")[1]) <= 1e-5

@@ -1,0 +1,209 @@
+"""Gradient sweep for the trainable grouped skip-LoRA custom VJP.
+
+The fleet-training primitive (``skip_lora_grouped_train[_int8]``) must
+produce per-adapter grads that match (a) plain autodiff of the per-row jnp
+oracle and (b) per-tenant ``skip_lora_fused`` grads computed tenant by
+tenant — for ragged groups, float and raw-int8 activations, with exact
+zeros for slots owning no rows and for frozen slots (the pinned zero slot).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lm_skiplora import quantize_int8
+from repro.kernels.skip_lora import ref as R
+from repro.kernels.skip_lora.ops import (
+    skip_lora_fused,
+    skip_lora_grouped_train,
+    skip_lora_grouped_train_int8,
+)
+
+L, S, D, RANK = 2, 12, 128, 4
+
+
+def make_case(n, b, seed=0):
+    k = jax.random.key(seed)
+    acts = jax.random.normal(k, (L, b, S, D), jnp.float32)
+    a = jax.random.normal(jax.random.fold_in(k, 1), (n, L, D, RANK)) / np.sqrt(D)
+    bp = jax.random.normal(jax.random.fold_in(k, 2), (n, L, RANK, D)) * 0.1
+    tgt = jax.random.normal(jax.random.fold_in(k, 3), (b, S, D))
+    # Ragged on purpose: last slot left empty when n > 2, uneven group sizes.
+    idx = jax.random.randint(jax.random.fold_in(k, 4), (b,), 0, n)
+    if n > 2:
+        idx = jnp.where(idx == n - 1, 0, idx)
+    return acts, a, bp, tgt, idx.astype(jnp.int32)
+
+
+def kernel_grads(acts, a, bp, tgt, idx):
+    def loss(p):
+        out = skip_lora_grouped_train(acts, p["A"], p["B"], idx)
+        return jnp.mean((out - tgt) ** 2)
+
+    return jax.grad(loss)({"A": a, "B": bp})
+
+
+@pytest.mark.parametrize("n", [1, 4, 8])
+class TestFloatGrads:
+    def test_matches_oracle_autodiff(self, n):
+        """Kernel custom-VJP grads == jax.grad of the per-row jnp oracle."""
+        acts, a, bp, tgt, idx = make_case(n, b=6, seed=n)
+        gk = kernel_grads(acts, a, bp, tgt, idx)
+
+        def loss_ref(p):
+            out = skip_lora_grouped_train(
+                acts, p["A"], p["B"], idx, use_kernel=False
+            )
+            return jnp.mean((out - tgt) ** 2)
+
+        gr = jax.grad(loss_ref)({"A": a, "B": bp})
+        np.testing.assert_allclose(np.asarray(gk["A"]), np.asarray(gr["A"]),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(gk["B"]), np.asarray(gr["B"]),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_matches_hand_written_oracle_bwd(self, n):
+        """Cotangent-level check against ``skip_lora_grouped_bwd_ref``."""
+        acts, a, bp, _, idx = make_case(n, b=5, seed=10 + n)
+        m = 5 * S
+        x = acts.reshape(L, m, D)
+        row_idx = jnp.repeat(idx, S)
+        g = jax.random.normal(jax.random.key(99), (m, D), jnp.float32)
+
+        def inner(p):
+            out = skip_lora_grouped_train(acts, p["A"], p["B"], idx)
+            return jnp.sum(out.reshape(m, D) * g)
+
+        gk = jax.grad(inner)({"A": a, "B": bp})
+        ga_ref, gb_ref = R.skip_lora_grouped_bwd_ref(x, a, bp, g, row_idx)
+        np.testing.assert_allclose(np.asarray(gk["A"]), np.asarray(ga_ref),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(gk["B"]), np.asarray(gb_ref),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_matches_per_tenant_fused_grads(self, n):
+        """Grouped grads for slot t == single-stack ``skip_lora_fused``
+        grads computed on t's rows alone (the fleet == per-tenant story)."""
+        acts, a, bp, tgt, idx = make_case(n, b=6, seed=20 + n)
+        gk = kernel_grads(acts, a, bp, tgt, idx)
+        for t in range(n):
+            rows = np.where(np.asarray(idx) == t)[0]
+            if rows.size == 0:
+                assert float(jnp.max(jnp.abs(gk["A"][t]))) == 0.0
+                assert float(jnp.max(jnp.abs(gk["B"][t]))) == 0.0
+                continue
+
+            def loss_t(p):
+                # The grouped loss is a mean over the FULL batch's b*S*D
+                # elements; tenant t's share is its rows' squared error
+                # under the same normaliser.
+                out = skip_lora_fused(acts[:, rows], p["A"], p["B"])
+                return jnp.sum((out - tgt[rows]) ** 2) / (6 * S * D)
+
+            gt = jax.grad(loss_t)({"A": a[t], "B": bp[t]})
+            np.testing.assert_allclose(np.asarray(gk["A"][t]), np.asarray(gt["A"]),
+                                       atol=1e-5, rtol=1e-4)
+            np.testing.assert_allclose(np.asarray(gk["B"][t]), np.asarray(gt["B"]),
+                                       atol=1e-5, rtol=1e-4)
+
+    def test_acts_cotangent_is_zero(self, n):
+        acts, a, bp, _, idx = make_case(n, b=4, seed=30 + n)
+        g = jax.grad(
+            lambda x: jnp.sum(skip_lora_grouped_train(x, a, bp, idx))
+        )(acts)
+        assert float(jnp.max(jnp.abs(g))) == 0.0
+
+
+@pytest.mark.parametrize("n", [1, 4, 8])
+class TestInt8Grads:
+    def test_matches_oracle_autodiff(self, n):
+        """Raw-int8-activation grouped VJP == autodiff of the dequantise-
+        then-oracle path (shared quantisation error on both sides)."""
+        acts, a, bp, tgt, idx = make_case(n, b=6, seed=40 + n)
+        q, sc = quantize_int8(acts)
+
+        def loss(p, use_kernel):
+            out = skip_lora_grouped_train_int8(
+                q, sc, p["A"], p["B"], idx, use_kernel=use_kernel
+            )
+            return jnp.mean((out.astype(jnp.float32) - tgt) ** 2)
+
+        gk = jax.grad(lambda p: loss(p, True))({"A": a, "B": bp})
+        gr = jax.grad(lambda p: loss(p, False))({"A": a, "B": bp})
+        # bf16 dequant on the kernel side: bf16-grade tolerance.
+        np.testing.assert_allclose(np.asarray(gk["A"]), np.asarray(gr["A"]),
+                                   atol=5e-3, rtol=5e-2)
+        np.testing.assert_allclose(np.asarray(gk["B"]), np.asarray(gr["B"]),
+                                   atol=5e-3, rtol=5e-2)
+
+    def test_empty_slot_grads_exactly_zero(self, n):
+        acts, a, bp, tgt, idx = make_case(n, b=6, seed=50 + n)
+        if n <= 2:
+            pytest.skip("every slot occupied at n <= 2")
+        q, sc = quantize_int8(acts)
+        g = jax.grad(
+            lambda p: jnp.mean(
+                skip_lora_grouped_train_int8(q, sc, p["A"], p["B"], idx)
+                .astype(jnp.float32) ** 2
+            )
+        )({"A": a, "B": bp})
+        assert float(jnp.max(jnp.abs(g["A"][n - 1]))) == 0.0
+        assert float(jnp.max(jnp.abs(g["B"][n - 1]))) == 0.0
+
+
+class TestFrozenZeroSlot:
+    """The pinned zero slot (``AdapterPool.ZERO_SLOT``) must stay pinned:
+    with rows actively riding slot 0, its grads are exactly zero under a
+    freeze mask — kernel and oracle paths, float and int8."""
+
+    @pytest.mark.parametrize("use_kernel", [True, False])
+    def test_float_frozen_slot0(self, use_kernel):
+        n = 4
+        acts, a, bp, tgt, idx = make_case(n, b=6, seed=60)
+        idx = idx.at[0].set(0)  # guarantee slot-0 traffic
+        freeze = jnp.arange(n) == 0
+
+        def loss(p):
+            out = skip_lora_grouped_train(
+                acts, p["A"], p["B"], idx,
+                use_kernel=use_kernel, freeze_mask=freeze,
+            )
+            return jnp.mean((out - tgt) ** 2)
+
+        g = jax.grad(loss)({"A": a, "B": bp})
+        assert float(jnp.max(jnp.abs(g["A"][0]))) == 0.0
+        assert float(jnp.max(jnp.abs(g["B"][0]))) == 0.0
+        # ...while a live slot still trains.
+        live = int(idx[1]) if int(idx[1]) != 0 else int(jnp.max(idx))
+        if live != 0:
+            assert float(jnp.max(jnp.abs(g["A"][live]))) > 0.0
+
+    @pytest.mark.parametrize("use_kernel", [True, False])
+    def test_int8_frozen_slot0(self, use_kernel):
+        n = 4
+        acts, a, bp, tgt, idx = make_case(n, b=6, seed=61)
+        idx = idx.at[0].set(0)
+        q, sc = quantize_int8(acts)
+        freeze = jnp.arange(n) == 0
+
+        def loss(p):
+            out = skip_lora_grouped_train_int8(
+                q, sc, p["A"], p["B"], idx,
+                use_kernel=use_kernel, freeze_mask=freeze,
+            )
+            return jnp.mean(out.astype(jnp.float32) ** 2)
+
+        g = jax.grad(loss)({"A": a, "B": bp})
+        assert float(jnp.max(jnp.abs(g["A"][0]))) == 0.0
+        assert float(jnp.max(jnp.abs(g["B"][0]))) == 0.0
+
+    def test_frozen_slot_forward_unchanged(self):
+        """Freezing only detaches autodiff; forward values are identical."""
+        n = 3
+        acts, a, bp, _, idx = make_case(n, b=4, seed=62)
+        out_f = skip_lora_grouped_train(
+            acts, a, bp, idx, freeze_mask=jnp.arange(n) == 0
+        )
+        out = skip_lora_grouped_train(acts, a, bp, idx)
+        np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out))

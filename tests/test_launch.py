@@ -176,6 +176,7 @@ SPEC_PROG = textwrap.dedent(
 )
 
 
+@pytest.mark.slow  # forces a fresh multi-device subprocess: ~8 min alone
 class TestShardingSpecsMultiDevice:
     def test_param_specs_subprocess(self):
         env = dict(os.environ)

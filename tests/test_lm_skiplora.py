@@ -78,6 +78,33 @@ class TestAdapters:
         assert jnp.allclose(skip_in_stack, skip_ref, atol=1e-4)
 
 
+class TestLossChunking:
+    def test_ragged_tail_chunk_still_counts(self):
+        """s > chunk with s % chunk != 0: the tail positions must contribute
+        to the loss (they were silently dropped before the masked pad)."""
+        from repro.models.lm import lm_loss, lm_loss_rows
+
+        cfg, sl, params, _ = setup_arch()
+        b, s = 2, 10
+        h = jax.random.normal(jax.random.key(11), (b, s, cfg.d_model))
+        labels = jax.random.randint(jax.random.key(12), (b, s), 0, cfg.vocab_size)
+        full = lm_loss(params, cfg, h, labels, chunk=512)  # single chunk
+        ragged = lm_loss(params, cfg, h, labels, chunk=4)  # 3 chunks, pad 2
+        assert abs(float(full) - float(ragged)) < 1e-5
+        _, cnt = lm_loss_rows(params, cfg, h, labels, chunk=4)
+        np.testing.assert_allclose(np.asarray(cnt), float(s))  # all s counted
+
+    def test_masked_labels_excluded_per_row(self):
+        from repro.models.lm import lm_loss_rows
+
+        cfg, sl, params, _ = setup_arch()
+        h = jax.random.normal(jax.random.key(13), (2, 6, cfg.d_model))
+        labels = jax.random.randint(jax.random.key(14), (2, 6), 0, cfg.vocab_size)
+        labels = labels.at[0, :3].set(-1)
+        _, cnt = lm_loss_rows(params, cfg, h, labels, chunk=4)
+        np.testing.assert_allclose(np.asarray(cnt), [3.0, 6.0])
+
+
 class TestQuantisation:
     def test_int8_roundtrip_error(self):
         x = jax.random.normal(jax.random.key(0), (3, 5, 64))

@@ -11,6 +11,8 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -87,6 +89,7 @@ SUBPROCESS_PROG = textwrap.dedent(
 )
 
 
+@pytest.mark.slow  # forces a fresh multi-device subprocess: ~8 min alone
 class TestPipelineMultiDevice:
     def test_pipeline_matches_sequential_subprocess(self):
         env = dict(os.environ)

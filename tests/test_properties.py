@@ -180,3 +180,122 @@ class TestDataPipelineProperties:
         for _ in range(2):  # two consecutive epochs
             seen = np.concatenate([s.next_ids() for _ in range(n // batch)])
             assert sorted(seen.tolist()) == list(range(n))
+
+
+class TestGroupingPlanProperties:
+    """Invariants of the sort/pad wrapper behind the grouped kernels
+    (``ops._grouping_plan``): the padded buffer is statically bounded, the
+    row scatter is a bijection into slot-owned tiles, and the whole
+    sort/pad/gather pipeline is row-permutation equivariant — outputs
+    permute with the rows, pool grads don't move at all."""
+
+    @given(
+        n=st.integers(1, 9),
+        m=st.integers(1, 300),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(**SETTINGS)
+    def test_plan_bijection_and_capacity_bound(self, n, m, seed):
+        from repro.kernels.skip_lora import kernel as K
+        from repro.kernels.skip_lora.ops import _grouping_plan
+
+        tm = K.TM
+        idx = jax.random.randint(jax.random.key(seed), (m,), 0, n).astype(jnp.int32)
+        dest, tile_adapter, m_pad = _grouping_plan(idx, n, m)
+        # Static capacity: batch rows tile-padded plus at most min(pool,
+        # batch) partially-filled group tiles — never scales with the pool.
+        assert m_pad == -(-m // tm) * tm + min(n, m) * tm
+        d = np.asarray(dest)
+        assert len(np.unique(d)) == m  # injective scatter
+        assert d.min() >= 0 and d.max() < m_pad
+        # Occupied padded region fits the static buffer.
+        counts = np.bincount(np.asarray(idx), minlength=n)
+        occupied = int(sum(-(-c // tm) * tm for c in counts))
+        assert occupied <= m_pad
+        # Every row lands in a tile owned by its own slot; the tile->slot
+        # map is non-decreasing (the contiguous-run contract the grouped
+        # backward's first-visit init relies on).
+        ta = np.asarray(tile_adapter)
+        assert np.all(np.diff(ta) >= 0)
+        assert np.all(ta[d // tm] == np.asarray(idx))
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=5, deadline=None)
+    def test_row_permutation_equivariance_outputs_and_grads(self, seed):
+        """Permuting batch rows (and their slot map) permutes the grouped
+        output and leaves the per-slot grads unchanged — the grouping plan
+        is an implementation detail, not part of the function."""
+        from repro.kernels.skip_lora.ops import skip_lora_grouped_train
+
+        l, b, s, d, r, n = 2, 5, 8, 128, 4, 3
+        k = jax.random.key(seed)
+        acts = jax.random.normal(k, (l, b, s, d), jnp.float32)
+        a = jax.random.normal(jax.random.fold_in(k, 1), (n, l, d, r)) / np.sqrt(d)
+        bp = jax.random.normal(jax.random.fold_in(k, 2), (n, l, r, d)) * 0.1
+        tgt = jax.random.normal(jax.random.fold_in(k, 3), (b, s, d))
+        idx = jax.random.randint(jax.random.fold_in(k, 4), (b,), 0, n).astype(jnp.int32)
+        perm = jax.random.permutation(jax.random.fold_in(k, 5), b)
+
+        def loss(p, acts_, idx_, tgt_):
+            out = skip_lora_grouped_train(acts_, p["A"], p["B"], idx_)
+            return jnp.mean((out - tgt_) ** 2), out
+
+        (_, out), g = jax.value_and_grad(loss, has_aux=True)(
+            {"A": a, "B": bp}, acts, idx, tgt
+        )
+        (_, out_p), g_p = jax.value_and_grad(loss, has_aux=True)(
+            {"A": a, "B": bp}, acts[:, perm], idx[perm], tgt[perm]
+        )
+        np.testing.assert_allclose(
+            np.asarray(out[perm]), np.asarray(out_p), atol=1e-5, rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(g["A"]), np.asarray(g_p["A"]), atol=1e-5, rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(g["B"]), np.asarray(g_p["B"]), atol=1e-5, rtol=1e-5
+        )
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=5, deadline=None)
+    def test_row_permutation_invariance_int8(self, seed):
+        from repro.kernels.skip_lora.ops import skip_lora_grouped_train_int8
+
+        l, b, s, d, r, n = 2, 4, 8, 128, 4, 3
+        k = jax.random.key(seed)
+        acts = jax.random.normal(k, (l, b, s, d), jnp.float32)
+        q, sc = SL.quantize_int8(acts)
+        a = jax.random.normal(jax.random.fold_in(k, 1), (n, l, d, r)) / np.sqrt(d)
+        bp = jax.random.normal(jax.random.fold_in(k, 2), (n, l, r, d)) * 0.1
+        idx = jax.random.randint(jax.random.fold_in(k, 4), (b,), 0, n).astype(jnp.int32)
+        perm = jax.random.permutation(jax.random.fold_in(k, 5), b)
+        out = skip_lora_grouped_train_int8(q, sc, a, bp, idx)
+        out_p = skip_lora_grouped_train_int8(
+            q[:, perm], sc[:, perm], a, bp, idx[perm]
+        )
+        np.testing.assert_allclose(
+            np.asarray(out[perm], np.float32), np.asarray(out_p, np.float32),
+            atol=5e-2, rtol=5e-2,
+        )
+
+
+class TestAdapterStackRoundTrip:
+    """``stack_to_adapters`` is the exact inverse of ``adapters_to_stack``
+    (the fine-tune -> serve handoff must be lossless, remainder layers
+    included)."""
+
+    @given(
+        arch=st.sampled_from(["stablelm-1.6b", "gemma2-9b", "jamba-1.5-large-398b"]),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=6, deadline=None)
+    def test_roundtrip_identity(self, arch, seed):
+        from repro.configs import get_config, reduce_config
+
+        cfg = reduce_config(get_config(arch))
+        sl = SL.SkipLoRAConfig(rank=4)
+        ad = SL.init_adapters(jax.random.key(seed), cfg, sl)
+        ad["B"] = jax.random.normal(jax.random.key(seed + 1), ad["B"].shape)
+        back = SL.stack_to_adapters(SL.adapters_to_stack(ad, cfg), cfg)
+        np.testing.assert_array_equal(np.asarray(back["A"]), np.asarray(ad["A"]))
+        np.testing.assert_array_equal(np.asarray(back["B"]), np.asarray(ad["B"]))

@@ -4,6 +4,10 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+# LM-scale serving integration: prefill/decode scans and CLI fine-tunes
+# dominate suite wall time -> nightly/full tier (ci.yml).
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_config, reduce_config
 from repro.core import lm_skiplora as SL
 from repro.models.lm import (
@@ -236,3 +240,55 @@ class TestMixedBatchGrouped:
         # base model exactly; the adapted row reproduces single-stack serving.
         assert jnp.array_equal(grouped[0], base[0])
         assert jnp.array_equal(grouped[1], adapted[1])
+
+
+class TestTemperaturePRNGAdvance:
+    """The temperature branch's PRNG handling inside the fused scan: the
+    key is split-and-carried per step, so draws are a deterministic stream
+    — prefix-stable in ``max_new`` — and the greedy branch must ignore the
+    key entirely (same shapes, no accidental consumption)."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        from repro.configs import get_config, reduce_config
+
+        cfg = reduce_config(get_config("stablelm-1.6b"))
+        params = init_lm(jax.random.key(0), cfg)
+        prompts = jax.random.randint(jax.random.key(1), (2, 9), 0, cfg.vocab_size)
+        return cfg, params, prompts
+
+    def test_temperature_draws_are_prefix_stable(self, setup):
+        """Same rng, different max_new: the first k tokens agree — each scan
+        step advances the carried key identically regardless of how many
+        steps follow (the PRNG advance is per-step, not per-call)."""
+        from repro.launch.serve import generate
+
+        cfg, params, prompts = setup
+        long = generate(params, cfg, prompts, max_new=8, temperature=0.8,
+                        rng=jax.random.key(42))
+        short = generate(params, cfg, prompts, max_new=4, temperature=0.8,
+                         rng=jax.random.key(42))
+        assert jnp.array_equal(long[:, :4], short)
+
+    def test_greedy_ignores_rng(self, setup):
+        from repro.launch.serve import generate
+
+        cfg, params, prompts = setup
+        a = generate(params, cfg, prompts, max_new=5, temperature=0.0,
+                     rng=jax.random.key(1))
+        b = generate(params, cfg, prompts, max_new=5, temperature=0.0,
+                     rng=jax.random.key(2))
+        assert jnp.array_equal(a, b)
+
+    def test_unroll_preserves_temperature_stream(self, setup):
+        """Fusing k decode steps per scan iteration must not change the
+        sampled stream: the key advance is part of the carry, not the loop
+        structure."""
+        from repro.launch.serve import generate
+
+        cfg, params, prompts = setup
+        base = generate(params, cfg, prompts, max_new=6, temperature=0.7,
+                        rng=jax.random.key(3), unroll=1)
+        fused = generate(params, cfg, prompts, max_new=6, temperature=0.7,
+                         rng=jax.random.key(3), unroll=3)
+        assert jnp.array_equal(base, fused)
