@@ -1,6 +1,10 @@
 """Benchmark harness: one section per paper table + LM-scale extensions.
 
 Prints ``name,value,derived`` CSV rows (value units embedded in the name).
+The ``runtime`` section additionally writes its rows machine-readably to
+``BENCH_runtime.json`` (``--json-out``) — serve tok/s, routed-vs-direct
+overhead, interleaved session tenant-rounds/sec, cache hit rates — so the
+bench trajectory is trackable across commits without CSV scraping.
 
   PYTHONPATH=src python -m benchmarks.run          # full (~5 min on CPU)
   PYTHONPATH=src python -m benchmarks.run --quick  # reduced trials
@@ -9,6 +13,7 @@ Prints ``name,value,derived`` CSV rows (value units embedded in the name).
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -17,15 +22,24 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None, help="substring filter on sections")
+    ap.add_argument("--json-out", default="BENCH_runtime.json",
+                    help="where the runtime section's metrics land")
     args = ap.parse_args()
 
-    from benchmarks import fleet_bench, lm_bench, paper_tables, serve_bench
+    from benchmarks import (
+        fleet_bench,
+        lm_bench,
+        paper_tables,
+        runtime_bench,
+        serve_bench,
+    )
 
     sections = [
         ("serve_decode", lambda: serve_bench.decode_dispatch(
             gen=16 if args.quick else 64)),
         ("serve_grouped", lambda: serve_bench.grouped_adapters(
             gen=8 if args.quick else 32)),
+        ("runtime", lambda: runtime_bench.runtime_session(quick=args.quick)),
         ("fleet", lambda: fleet_bench.fleet_vs_sequential(quick=args.quick)),
         ("table2", lambda: paper_tables.table2_breakdown()),
         ("headline", lambda: paper_tables.headline_reduction()),
@@ -50,7 +64,14 @@ def main() -> None:
             rows = fn()
             for key, val in rows:
                 print(f"{key},{val:.4f},")
-            print(f"_section/{name}/wall_s,{time.time() - t0:.1f},")
+            wall = time.time() - t0
+            print(f"_section/{name}/wall_s,{wall:.1f},")
+            if name == "runtime" and args.json_out:
+                payload = {key: val for key, val in rows}
+                payload["_wall_s"] = wall
+                with open(args.json_out, "w") as f:
+                    json.dump(payload, f, indent=2, sort_keys=True)
+                print(f"_section/runtime/json,{0.0},{args.json_out}")
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"_section/{name}/ERROR,{0.0},{type(e).__name__}:{e}")

@@ -1,0 +1,132 @@
+"""Session-runtime benchmarks: routed-serve overhead + interleaved session.
+
+Two claims of the unified runtime (DESIGN.md §9), measured:
+
+- **Routed decode overhead**: ``SessionRuntime.serve`` routes a mixed
+  batch through the *same* compiled decode-scan entries as calling
+  ``generate_grouped`` directly (the shared compiled-fn cache), so the
+  runtime may add only a pool lookup and Python routing. The §9 bar is
+  runtime-routed throughput within 10% of the direct PR 2 path on the same
+  shapes; ``routed_overhead_x`` is the measured ratio.
+- **Interleaved session throughput**: the full continual loop — serve,
+  ingest (populate forward + logits back), grouped adapt, serve again —
+  in tenant-rounds/sec, with the engine/pool counters that show the cache
+  tiers and path selection doing their jobs.
+
+Oracle (jnp) kernel path on CPU, like the other benches — interpret-mode
+Pallas timing is correctness-grade only (see ``lm_bench.kernel_vs_einsum``).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.core import lm_skiplora as SL
+from repro.core.runtime import SessionRuntime, generate_grouped
+from repro.models.lm import init_lm
+
+
+def _time(fn, repeats: int = 5) -> float:
+    jax.block_until_ready(fn())  # compile / warm caches
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _session(cfg, sl, params, n_tenants: int, spt: int, seq: int) -> SessionRuntime:
+    return SessionRuntime(
+        cfg, sl, params, max_tenants=n_tenants, samples_per_tenant=spt,
+        seq=seq, lr=1e-2, use_kernel=False,
+    )
+
+
+def runtime_session(
+    arch: str = "stablelm-1.6b",
+    *,
+    b: int = 4,
+    prompt: int = 16,
+    gen: int = 32,
+    n_tenants: int = 3,
+    rank: int = 8,
+    n_per: int = 8,
+    seq: int = 16,
+    adapt_epochs: int = 2,
+    unroll: int = 8,
+    quick: bool = False,
+) -> list[tuple[str, float]]:
+    if quick:
+        gen, adapt_epochs = 8, 1
+    cfg = reduce_config(get_config(arch))
+    sl = SL.SkipLoRAConfig(rank=rank, mode="full", cache_dtype="float32")
+    params = init_lm(jax.random.key(0), cfg)
+    prompts = jax.random.randint(
+        jax.random.key(1), (b, prompt), 0, cfg.vocab_size
+    )
+
+    # -- routed serve vs direct generate_grouped on identical shapes --------
+    rt = _session(cfg, sl, params, n_tenants, n_per, seq)
+    names = [f"u{t}" for t in range(n_tenants)]
+    for t, name in enumerate(names):
+        ad = SL.init_adapters(jax.random.key(10 + t), cfg, sl)
+        ad["B"] = jax.random.normal(jax.random.key(20 + t), ad["B"].shape) * 0.02
+        rt.pool.register(name, ad)
+    who = [None] + [names[i % n_tenants] for i in range(1, b)]
+    idx = rt.pool.lookup(who)
+    pools = rt.pool.pools()
+
+    t_direct = _time(lambda: generate_grouped(
+        params, cfg, prompts, pools, idx, max_new=gen, use_kernel=False,
+        unroll=unroll,
+    ))
+    t_routed = _time(lambda: rt.serve(
+        who, prompts, max_new=gen, unroll=unroll,
+    ))
+    toks = b * gen
+
+    # -- interleaved session: serve -> ingest -> adapt -> serve -------------
+    rt2 = _session(cfg, sl, params, n_tenants, n_per, seq)
+    rng = jax.random.key(2)
+
+    def session():
+        # One continual round per tenant: serve, ingest (first trip fills
+        # the partition; ingest cost then lives in session_cold_s), grouped
+        # adapt, serve the freshly written-back slots.
+        nonlocal rng
+        rt2.serve([None] * b, prompts, max_new=gen, unroll=unroll)
+        for name in names:
+            if name in rt2._tenants and rt2.tenant(name).n_ingested >= n_per:
+                continue
+            rng, k1, k2 = jax.random.split(rng, 3)
+            toks_in = jax.random.randint(k1, (n_per, seq), 0, cfg.vocab_size)
+            labs = jax.random.randint(k2, (n_per, seq), 0, cfg.vocab_size)
+            rt2.ingest(name, toks_in, labs)
+        out = rt2.adapt(names, epochs=adapt_epochs, batch_per_tenant=4,
+                        key=jax.random.key(3))
+        rt2.serve([None] + who[1:], prompts, max_new=gen, unroll=unroll)
+        return out["losses"][names[0]]
+
+    t0 = time.perf_counter()
+    session()  # compile + populate trip
+    t_cold = time.perf_counter() - t0
+    t_warm = _time(session, repeats=3)
+
+    st = rt2.engine.stats
+    return [
+        (f"runtime/{arch}/direct_grouped_tok_s", toks / t_direct),
+        (f"runtime/{arch}/routed_serve_tok_s", toks / t_routed),
+        (f"runtime/{arch}/routed_overhead_x", t_routed / t_direct),
+        (f"runtime/{arch}/session_cold_s", t_cold),
+        (f"runtime/{arch}/session_tenant_rounds_per_s", n_tenants / t_warm),
+        (f"runtime/{arch}/cache_hbm_hit_rate", st.hbm_hit_rate()),
+        (f"runtime/{arch}/cache_spills", float(st.spills)),
+        (f"runtime/{arch}/pool_tenants", float(len(rt2.pool))),
+        (f"runtime/{arch}/pool_MiB", rt2.pool.nbytes() / 2**20),
+        (f"runtime/{arch}/adapt_epochs", float(adapt_epochs)),
+    ]

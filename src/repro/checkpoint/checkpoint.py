@@ -133,6 +133,58 @@ def restore_checkpoint(
     return treedef.unflatten(restored), manifest
 
 
+# ---------------------------------------------------------------------------
+# Session checkpoints: one capture of a whole SessionRuntime
+# ---------------------------------------------------------------------------
+
+
+def save_runtime_session(directory: str, step: int, runtime, *,
+                         extra: Optional[dict] = None) -> str:
+    """Checkpoint a whole continual-learning session (``core.runtime``):
+    stacked fleet adapters + optimizer moments, the AdapterPool data plane
+    and slot table, and every present skip-cache row — so an elastic
+    restart resumes serve AND train without replaying ingestion. Atomic
+    like ``save_checkpoint`` (which it rides on); the session's control
+    plane travels in the manifest's ``extra["session"]``."""
+    arrays, meta = runtime.session_state()
+    return save_checkpoint(
+        directory, step, arrays, extra={"session": meta, **(extra or {})}
+    )
+
+
+def _load_dict_tree(path: str) -> tuple[dict, dict]:
+    """Rebuild the nested dict-of-arrays tree a session save flattened
+    (name components never contain "/" — session trees are all-dict with
+    plain slot/leaf names), applying the manifest's logical-dtype view-back
+    for ml_dtypes leaves."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "host_0.npz"))
+    tree: dict = {}
+    for name in data.files:
+        arr = data[name]
+        logical = manifest["leaves"][name]["dtype"]
+        if str(arr.dtype) != logical:
+            arr = arr.view(jnp.dtype(logical))
+        node = tree
+        parts = name.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return tree, manifest
+
+
+def restore_runtime_session(path: str, runtime) -> dict:
+    """Restore a session checkpoint into a *fresh* ``SessionRuntime`` of
+    identical configuration. Returns the manifest. Continuing the restored
+    session (further ingest / adapt / serve) reproduces the uninterrupted
+    run — the save -> restore -> continue equivalence is enforced by
+    ``tests/test_runtime.py``."""
+    tree, manifest = _load_dict_tree(path)
+    runtime.load_session_state(tree, manifest["extra"]["session"])
+    return manifest
+
+
 class CheckpointManager:
     """Keep-K rotation + convenience save/restore-latest."""
 

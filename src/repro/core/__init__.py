@@ -8,6 +8,10 @@
 - ``cache_engine``: tiered HBM/host cache placement (DESIGN.md §4).
 - ``adapter_pool``: slot-based multi-tenant adapter registry for serving
   (DESIGN.md §7); feeds the grouped Pallas kernel.
+- ``batch_plan``: the one epoch batch planner (wrap/mask tail semantics)
+  behind every trainer's index matrices.
+- ``runtime``: the session runtime — serve + ingest + fleet adapt
+  interleaved over one pool/engine/compiled-fn cache (DESIGN.md §9).
 """
 
 import jax

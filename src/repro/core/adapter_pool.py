@@ -101,6 +101,12 @@ class AdapterPool:
         # Slot 0 never enters the LRU / free list: it is the zero tenant.
         self._lru: OrderedDict[Any, int] = OrderedDict()
         self._free: list[int] = list(range(n_slots - 1, 0, -1))
+        self._pinned: set = set()
+        #: bumps whenever the tenant->slot map changes (new assignment,
+        #: eviction, restore) — NOT on LRU touches, which keep slots stable.
+        #: Callers may cache ``lookup`` results keyed on this (the session
+        #: runtime memoises its serve-batch index arrays against it).
+        self.version = 0
         self.stats = PoolStats()
 
     # -- capacity -----------------------------------------------------------
@@ -147,18 +153,47 @@ class AdapterPool:
     def _assign_slot(self, tenant) -> int:
         """Control-plane half of registration: LRU bookkeeping only.
         Re-registration keeps the tenant's slot; a full pool evicts the
-        least-recently-served tenant."""
+        least-recently-served *unpinned* tenant — a pinned slot (in-flight
+        training state, see ``pin``) is never an eviction victim."""
         if tenant in self._lru:
             slot = self._lru[tenant]
             self._lru.move_to_end(tenant)
         else:
             if not self._free:
-                victim, slot = self._lru.popitem(last=False)
+                victim = next(
+                    (t for t in self._lru if t not in self._pinned), None
+                )
+                if victim is None:
+                    raise RuntimeError(
+                        f"pool full and all {len(self._lru)} resident tenants "
+                        "pinned: cannot evict for a new registration"
+                    )
+                slot = self._lru.pop(victim)
                 self.stats.evictions += 1
             else:
                 slot = self._free.pop()
             self._lru[tenant] = slot
+            self.version += 1
         return slot
+
+    # -- session pinning ----------------------------------------------------
+
+    def pin(self, tenant) -> None:
+        """Exclude a registered tenant's slot from LRU eviction. The session
+        runtime pins every tenant with in-flight training state (adapters /
+        optimizer moments mid-``adapt``), so a serve-traffic burst can never
+        recycle a slot whose index is still baked into a queued fleet batch.
+        Idempotent; raises KeyError for unregistered tenants."""
+        if tenant not in self._lru:
+            raise KeyError(f"tenant {tenant!r} has no registered adapters to pin")
+        self._pinned.add(tenant)
+
+    def unpin(self, tenant) -> None:
+        """Re-admit a tenant's slot to LRU eviction (no-op if not pinned)."""
+        self._pinned.discard(tenant)
+
+    def pinned(self) -> set:
+        return set(self._pinned)
 
     def register(self, tenant, adapters: Params) -> int:
         """Install a tenant's fine-tuned {"A": (L,D,R), "B": (L,R,D)} stack.
@@ -220,8 +255,14 @@ class AdapterPool:
         return slots
 
     def evict(self, tenant) -> None:
+        if tenant in self._pinned:
+            raise ValueError(
+                f"tenant {tenant!r} is pinned (in-flight training state); "
+                "unpin before evicting"
+            )
         slot = self._lru.pop(tenant)
         self._free.append(slot)
+        self.version += 1
         self.stats.evictions += 1
 
     # -- lookup -------------------------------------------------------------
@@ -246,6 +287,14 @@ class AdapterPool:
                 raise KeyError(f"tenant {t!r} has no registered adapters")
         return jnp.asarray(slots, jnp.int32)
 
+    def touch(self, tenants) -> None:
+        """LRU-refresh only (no slot-index build): the runtime's memoised
+        serve path calls this on cache hits so recency still tracks real
+        serving traffic."""
+        for t in tenants:
+            if t is not None and t in self._lru:
+                self._lru.move_to_end(t)
+
     # -- data plane ---------------------------------------------------------
 
     def pools(self) -> dict[str, jax.Array]:
@@ -259,6 +308,38 @@ class AdapterPool:
         if self.compress == "int8":
             return {"qa": self._qa, "sa": self._sa, "qb": self._qb, "sb": self._sb}
         return {"A": self._a, "B": self._b}
+
+    # -- session state (checkpoint plane) ------------------------------------
+
+    def slot_table(self) -> dict:
+        """JSON-able control plane: LRU-ordered (tenant, slot) pairs, free
+        list, pinned tenants. Tenant ids must be JSON-serialisable for this
+        to round-trip through a checkpoint manifest."""
+        return {
+            "lru": [[t, s] for t, s in self._lru.items()],
+            "free": list(self._free),
+            "pinned": [t for t in self._lru if t in self._pinned],
+        }
+
+    def load_state(self, arrays: dict[str, jax.Array], table: dict) -> None:
+        """Restore the data plane (a ``pools()``-layout dict) and control
+        plane (a ``slot_table()`` dict) saved from a pool of identical
+        geometry — the checkpoint restore path."""
+        want = set(self.pools())
+        if set(arrays) != want:
+            raise ValueError(f"pool arrays {set(arrays)} != expected {want}")
+        for name, arr in arrays.items():
+            cur = self.pools()[name]
+            arr = jnp.asarray(arr, cur.dtype)
+            if arr.shape != cur.shape:
+                raise ValueError(
+                    f"pool array {name}: {arr.shape} != {cur.shape}"
+                )
+            setattr(self, "_" + name.lower(), arr)
+        self._lru = OrderedDict((t, int(s)) for t, s in table["lru"])
+        self._free = [int(s) for s in table["free"]]
+        self._pinned = set(table.get("pinned", ()))
+        self.version += 1
 
 
 def grouped_skip_sum(

@@ -1,0 +1,113 @@
+"""Shared epoch batch planner: one index-matrix helper for every trainer.
+
+The repo grew two copies of the same planning logic — the single-tenant
+``finetune.epoch_index_matrix`` (jax PRNG permutation, wrap tail) and the
+fleet ``fleet_finetune.fleet_index_matrix`` (numpy per-tenant streams, wrap
+tail, partition offsets). Both reduce to: *visit a permutation in batches,
+and decide what to do with a non-dividing tail*. This module is that one
+decision, with both tail semantics explicit:
+
+  - ``tail="wrap"``: the last batch wraps around to the front of the
+    permutation, so every row is visited at least once and every batch is
+    full. This is the populate-safe choice — dropping the remainder would
+    leave rows unpopulated in epoch 0 that a later epoch's different
+    permutation would then read back as garbage (or a KeyError on the
+    tiered-engine path). Wrapped rows are visited twice in that epoch.
+  - ``tail="mask"``: the tail is padded (with wrapped ids, so every gather
+    stays in-bounds) and a boolean validity mask flags the padding. Every
+    row is visited *exactly once*; callers that can mask per-row work
+    (e.g. ``lm_loss_rows`` with label ``-1``) use this to avoid the double
+    visit without silently dropping the tail.
+
+``core.finetune`` and ``core.fleet_finetune`` re-export their historical
+entry points as thin wrappers over this module; the session runtime
+(``core.runtime``) plans through it directly with explicit tenant
+partitions.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.data.pipeline import epoch_permutation
+
+
+def index_matrix(
+    perm, batch_size: int, *, tail: str = "wrap"
+) -> np.ndarray | tuple[np.ndarray, np.ndarray]:
+    """Batch a visitation order. ``perm``: (n,) row ids (any integer dtype).
+
+    ``tail="wrap"`` -> (steps, batch) ids;
+    ``tail="mask"`` -> ((steps, batch) ids, (steps, batch) bool validity).
+    ``batch_size`` is clamped to n; steps = ceil(n / batch).
+    """
+    if tail not in ("wrap", "mask"):
+        raise ValueError(f"unknown tail semantics {tail!r}")
+    perm = np.asarray(perm)
+    n = perm.shape[0]
+    if n == 0:
+        raise ValueError("empty permutation")
+    bs = min(batch_size, n)
+    steps = -(-n // bs)  # ceil
+    pad = steps * bs - n
+    ids = np.concatenate([perm, perm[:pad]]) if pad else perm
+    ids = ids.reshape(steps, bs)
+    if tail == "wrap":
+        return ids
+    valid = np.ones(steps * bs, bool)
+    if pad:
+        valid[n:] = False
+    return ids, valid.reshape(steps, bs)
+
+
+def fleet_index_matrix(
+    epoch: int,
+    n_tenants: int,
+    samples_per_tenant: int,
+    batch_per_tenant: int,
+    *,
+    seed: int = 0,
+    partitions: Optional[Sequence[int]] = None,
+    partition_stride: Optional[int] = None,
+    tail: str = "wrap",
+) -> np.ndarray | tuple[np.ndarray, np.ndarray]:
+    """(steps, N * bpt) global sample ids of a tenant-contiguous fleet epoch.
+
+    Column block g belongs to the tenant in fleet position g, who owns cache
+    partition ``partitions[g]`` (default: position g owns partition g, the
+    offline ``fleet_finetune`` convention). Each partition has its own RNG
+    stream (``seed + partition``), so a tenant sees the same visitation
+    order it would training alone regardless of who else is in the fleet —
+    the session runtime relies on this when an ``adapt`` group is a subset
+    (or reordering) of the ingested tenants.
+
+    ``samples_per_tenant`` is the *visited fill* (the rows each tenant has
+    actually ingested this epoch); ``partition_stride`` is the *allocated*
+    partition width in the global id space (default: equal to the fill, the
+    offline trainer's fully-packed layout). The runtime passes its fixed
+    allocation stride so partially-filled partitions still address their
+    own rows. Tail semantics per ``index_matrix``; ``tail="mask"``
+    additionally returns the stacked validity mask.
+    """
+    stride = partition_stride if partition_stride is not None else samples_per_tenant
+    if stride < samples_per_tenant:
+        raise ValueError(
+            f"partition stride {stride} < fill {samples_per_tenant}"
+        )
+    parts = list(partitions) if partitions is not None else list(range(n_tenants))
+    if len(parts) != n_tenants:
+        raise ValueError(f"{len(parts)} partitions for {n_tenants} tenants")
+    cols, masks = [], []
+    for part in parts:
+        perm = epoch_permutation(seed + part, epoch, samples_per_tenant)
+        planned = index_matrix(perm, batch_per_tenant, tail=tail)
+        if tail == "mask":
+            planned, valid = planned
+            masks.append(valid)
+        cols.append(part * stride + planned)
+    ids = np.concatenate(cols, axis=1)
+    if tail == "mask":
+        return ids, np.concatenate(masks, axis=1)
+    return ids

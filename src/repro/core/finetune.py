@@ -55,17 +55,15 @@ def epoch_index_matrix(key, n: int, batch_size: int) -> jax.Array:
     """Pre-permuted batch indices, shape (steps, batch). The whole epoch's
     visitation order is decided up front so the epoch can run as one scan.
 
-    Covers ALL n samples: when batch_size does not divide n, the last batch
-    wraps around to the front of the permutation. Dropping the remainder
-    would leave samples unpopulated in epoch 0, and a later epoch's
-    different permutation would then gather all-zero cache rows for them."""
-    perm = jax.random.permutation(key, n)
-    bs = min(batch_size, n)
-    steps = -(-n // bs)  # ceil
-    pad = steps * bs - n
-    if pad:
-        perm = jnp.concatenate([perm, perm[:pad]])
-    return perm.reshape(steps, bs)
+    Covers ALL n samples via the shared planner's ``tail="wrap"`` semantics
+    (``core.batch_plan.index_matrix``): a non-dividing last batch wraps
+    around to the front of the permutation. Dropping the remainder would
+    leave samples unpopulated in epoch 0, and a later epoch's different
+    permutation would then gather all-zero cache rows for them."""
+    from repro.core.batch_plan import index_matrix
+
+    perm = np.asarray(jax.random.permutation(key, n))
+    return jnp.asarray(index_matrix(perm, batch_size, tail="wrap"))
 
 
 #: Back-compat alias (pre-fleet name); the fleet trainer and benchmarks

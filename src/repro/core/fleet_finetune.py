@@ -47,7 +47,6 @@ import numpy as np
 from repro.core import donate_argnums
 from repro.core import lm_skiplora as SL
 from repro.core.skip_cache import SkipCache, cache_read, cache_write
-from repro.data.pipeline import epoch_permutation
 from repro.kernels.skip_lora.ops import (
     skip_lora_grouped_train,
     skip_lora_grouped_train_int8,
@@ -100,21 +99,17 @@ def fleet_index_matrix(
     pre-permuted epoch visitation (its own RNG stream, so tenant t sees the
     same order it would training alone), offset into its cache partition.
 
-    Covers ALL samples_per_tenant rows: a non-dividing batch size wraps the
-    last batch around to the front of the permutation (same contract as
-    ``finetune.epoch_index_matrix``) — dropping the remainder would leave
-    rows unpopulated in epoch 0 that a later epoch's different permutation
-    would then read as garbage (or a KeyError on the engine path)."""
-    bpt = min(batch_per_tenant, samples_per_tenant)
-    steps = -(-samples_per_tenant // bpt)  # ceil
-    pad = steps * bpt - samples_per_tenant
-    cols = []
-    for t in range(n_tenants):
-        perm = epoch_permutation(seed + t, epoch, samples_per_tenant)
-        if pad:
-            perm = np.concatenate([perm, perm[:pad]])
-        cols.append(t * samples_per_tenant + perm.reshape(steps, bpt))
-    return np.concatenate(cols, axis=1)
+    Thin wrapper over the shared planner (``core.batch_plan``) with the
+    offline convention: fleet position t owns cache partition t. Covers ALL
+    samples_per_tenant rows via ``tail="wrap"`` — dropping the remainder
+    would leave rows unpopulated in epoch 0 that a later epoch's different
+    permutation would then read as garbage (or a KeyError on the engine
+    path)."""
+    from repro.core import batch_plan
+
+    return batch_plan.fleet_index_matrix(
+        epoch, n_tenants, samples_per_tenant, batch_per_tenant, seed=seed
+    )
 
 
 def per_tenant_loss(

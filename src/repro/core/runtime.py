@@ -1,0 +1,708 @@
+"""Unified continual-learning runtime: serve + fleet fine-tune, one engine.
+
+The paper's deployment story is continual (DESIGN.md §9): a device serves
+with its adapter, accumulates new samples into the skip-cache, and
+periodically fine-tunes. After PR 2/3 the repo had three disjoint entry
+points (``launch/serve.py``, ``launch/finetune.py``, ``launch/fleet.py``)
+that each rebuilt their own compiled functions, cache views, and pool
+bookkeeping — serve and train could not interleave over one adapter pool.
+
+``SessionRuntime`` is the single engine behind all three launchers. It owns
+
+  - ONE ``AdapterPool`` (slot-based serving registry, now with session
+    pinning so LRU eviction can never drop in-flight training state),
+  - ONE ``TieredCacheEngine`` (every tenant's skip-cache partition), and
+  - ONE compiled-function cache (module-level ``compiled``; the serve
+    prefill/decode jits previously private to ``launch/serve.py`` live
+    here, alongside the fleet epoch/step jits),
+
+and processes an interleaved event stream:
+
+  - ``serve(tenants, prompts)``: scan-fused generation, routed per batch —
+    single-stack when every row is the base model, grouped (float or raw
+    int8 pool layout) otherwise. Same compiled entries as PR 2's
+    ``decode_scan`` benchmarks, so routing adds only a pool lookup.
+  - ``ingest(tenant, tokens, labels)``: populate-phase forward that writes
+    the tenant's skip-cache partition *and* returns last-position adapted
+    logits — ingestion doubles as serving (``models.lm.ingest_prefill``).
+  - ``adapt(tenants, epochs)``: cached-phase fleet epochs over the grouped
+    custom-VJP kernels, write-back through ``AdapterPool.register_many``.
+    Because the backbone is frozen, cached values equal the populate
+    epoch's in-flight activations bitwise (full mode, matching cache
+    dtype), so an interleaved serve -> ingest -> adapt session reproduces
+    the offline ``fleet_finetune`` adapters *bitwise* on the kernel path —
+    the §9 parity bar, enforced by ``tests/test_runtime.py``.
+
+Batch planning goes through ``core.batch_plan`` with explicit tenant
+partitions, so an ``adapt`` group that is a subset or reordering of the
+ingested tenants still replays each tenant's own RNG stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import donate_argnums
+from repro.core import batch_plan
+from repro.core import fleet_finetune as FF
+from repro.core import lm_skiplora as SL
+from repro.core.adapter_pool import AdapterPool
+from repro.core.cache_engine import TieredCacheEngine
+from repro.models.config import ModelConfig
+from repro.models.lm import (
+    decode_scan,
+    ingest_prefill,
+    init_serve_caches,
+    sample_token,
+    serve_decode,
+    serve_prefill,
+    serve_prefill_grouped,
+)
+from repro.optim.optimizers import OptState, adamw
+
+Params = Any
+
+# ---------------------------------------------------------------------------
+# Shared compiled-function cache (one per process, every engine routes here)
+# ---------------------------------------------------------------------------
+
+#: (name, cfg, extras) -> jitted callable. cfg is a frozen dataclass and
+#: hashes by value; jax.jit then keys compiled traces by argument shape
+#: below this cache, so repeated calls at a new (batch, seq) retrace but
+#: never rebuild the jit wrapper itself.
+_FN_CACHE: dict[tuple, Any] = {}
+
+
+def compiled(key: tuple, make: Callable[[], Any]):
+    """Fetch-or-build a jitted callable under a hashable key. The single
+    compiled-fn cache behind serve, ingest, and adapt — the per-launcher
+    caches of PR 2/3 collapsed here."""
+    fn = _FN_CACHE.get(key)
+    if fn is None:
+        fn = _FN_CACHE[key] = make()
+    return fn
+
+
+def _cached_fn(name: str, cfg, make, extras: tuple = ()):
+    return compiled((name, cfg, *extras), make)
+
+
+def _prefill_fn(cfg):
+    def make():
+        def f(params, tokens, caches, adapters):
+            return serve_prefill(params, cfg, tokens, caches, adapters=adapters)
+
+        return jax.jit(f)
+
+    return _cached_fn("prefill", cfg, make)
+
+
+def _prefill_grouped_fn(cfg, use_kernel: bool):
+    def make():
+        def f(params, tokens, caches, pools, idx):
+            return serve_prefill_grouped(
+                params, cfg, tokens, caches, pools, idx, use_kernel=use_kernel
+            )
+
+        return jax.jit(f)
+
+    return _cached_fn("prefill_grouped", cfg, make, (use_kernel,))
+
+
+def _decode_scan_fn(cfg, use_kernel: bool = True):
+    def make():
+        def f(params, tok0, pos0, caches, key, adapters, pools, idx,
+              max_new, temperature, unroll):
+            return decode_scan(
+                params, cfg, tok0, pos0, caches, key,
+                max_new=max_new, temperature=temperature, adapters=adapters,
+                pools=pools, idx=idx, use_kernel=use_kernel, unroll=unroll,
+            )
+
+        # Donate the KV caches: the scan's carry updates them in place
+        # (off-CPU; the CPU backend has no donation and would only warn).
+        return jax.jit(
+            f,
+            static_argnums=(8, 9, 10),
+            donate_argnums=donate_argnums(3),
+        )
+
+    return _cached_fn("decode_scan", cfg, make, (use_kernel,))
+
+
+def _decode_step_fn(cfg):
+    def make():
+        def f(params, tok, pos, caches, adapters):
+            return serve_decode(params, cfg, tok, pos, caches, adapters=adapters)
+
+        return jax.jit(f)
+
+    return _cached_fn("decode_step", cfg, make)
+
+
+def _ingest_fn(cfg, use_kernel: bool):
+    def make():
+        def f(params, tokens, pools, idx):
+            return ingest_prefill(
+                params, cfg, tokens, pools, idx, use_kernel=use_kernel
+            )
+
+        return jax.jit(f)
+
+    return _cached_fn("ingest", cfg, make, (use_kernel,))
+
+
+# ---------------------------------------------------------------------------
+# Generation entry points (moved from launch/serve.py; the CLI re-exports)
+# ---------------------------------------------------------------------------
+
+
+def generate(
+    params,
+    cfg,
+    tokens,
+    *,
+    max_new: int,
+    adapters_stack=None,
+    temperature: float = 0.0,
+    rng: Optional[jax.Array] = None,
+    unroll: int = 1,
+):
+    """Batched generation, scan-fused: 1 prefill dispatch + 1 decode-scan
+    dispatch for all ``max_new`` tokens. Returns (B, max_new) int32."""
+    b, s = tokens.shape
+    caches = init_serve_caches(cfg, b, s + max_new)
+    logits, caches = _prefill_fn(cfg)(params, tokens, caches, adapters_stack)
+    tok0, key = sample_token(
+        logits, rng if rng is not None else jax.random.key(0), temperature
+    )
+    toks, _ = _decode_scan_fn(cfg)(
+        params, tok0, jnp.asarray(s, jnp.int32), caches, key,
+        adapters_stack, None, None, max_new, float(temperature), unroll,
+    )
+    return toks
+
+
+def generate_grouped(
+    params,
+    cfg,
+    tokens,
+    pools: dict[str, jax.Array],
+    idx: jax.Array,
+    *,
+    max_new: int,
+    temperature: float = 0.0,
+    rng: Optional[jax.Array] = None,
+    use_kernel: bool = True,
+    unroll: int = 1,
+):
+    """Multi-tenant generation: batch row b decodes under adapter slot
+    idx[b] gathered from the stacked pool (float or raw-int8 layout, see
+    ``AdapterPool.pools()``). Same two-dispatch structure as ``generate``."""
+    b, s = tokens.shape
+    caches = init_serve_caches(cfg, b, s + max_new)
+    logits, caches = _prefill_grouped_fn(cfg, use_kernel)(
+        params, tokens, caches, pools, idx
+    )
+    tok0, key = sample_token(
+        logits, rng if rng is not None else jax.random.key(0), temperature
+    )
+    toks, _ = _decode_scan_fn(cfg, use_kernel)(
+        params, tok0, jnp.asarray(s, jnp.int32), caches, key,
+        None, pools, idx, max_new, float(temperature), unroll,
+    )
+    return toks
+
+
+def generate_loop(
+    params,
+    cfg,
+    tokens,
+    *,
+    max_new: int,
+    adapters_stack=None,
+    temperature: float = 0.0,
+    rng: Optional[jax.Array] = None,
+):
+    """Per-token Python decode loop (the pre-scan path, kept for the
+    loop-vs-scan benchmark): ``max_new`` dispatches, cached step jits."""
+    b, s = tokens.shape
+    caches = init_serve_caches(cfg, b, s + max_new)
+    prefill = _prefill_fn(cfg)
+    decode = _decode_step_fn(cfg)
+    logits, caches = prefill(params, tokens, caches, adapters_stack)
+    key = rng if rng is not None else jax.random.key(0)
+    tok, key = sample_token(logits, key, temperature)
+    out = []
+    for i in range(max_new):
+        out.append(tok)
+        logits, caches = decode(
+            params, tok, jnp.asarray(s + i, jnp.int32), caches, adapters_stack
+        )
+        tok, key = sample_token(logits, key, temperature)
+    return jnp.concatenate(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Session runtime
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TenantState:
+    """Per-tenant continual-learning state the runtime tracks between
+    events. ``adapters``/``opt_*`` are per-tenant slices of the stacked
+    fleet trees (flat {"A": (L,D,R), "B": (L,R,D)} layout)."""
+
+    partition: int                      # cache partition index
+    n_ingested: int = 0                 # rows written into the partition
+    epochs_done: int = 0                # planner epoch stream position
+    step: int = 0                       # optimizer step count
+    adapters: Optional[Params] = None
+    opt_mu: Optional[Params] = None
+    opt_nu: Optional[Params] = None
+
+    @property
+    def trained(self) -> bool:
+        return self.adapters is not None
+
+
+class SessionRuntime:
+    """One session engine for serve + ingest + adapt over a shared pool.
+
+    ``max_tenants`` bounds the cache partitions (``samples_per_tenant``
+    rows each, global id = partition * samples_per_tenant + local id — the
+    PR 3 fleet convention, so offline and interleaved training address
+    identical cache rows). The pool defaults to ``max_tenants + 1`` slots
+    (slot 0 pinned zero); the engine to fully HBM-resident — pass
+    ``cache_capacity`` / ``hbm_budget_bytes`` to force tiered placement,
+    which flips ``adapt`` from the fused-scan epoch to the streaming
+    prefetch path (DESIGN.md §9 path table).
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        sl: SL.SkipLoRAConfig,
+        params: Params,
+        *,
+        max_tenants: int,
+        samples_per_tenant: int,
+        seq: int,
+        lr: float = 1e-3,
+        optimizer=None,
+        pool_slots: Optional[int] = None,
+        pool_compress: Optional[str] = None,
+        cache_capacity: Optional[int] = None,
+        hbm_budget_bytes: Optional[int] = None,
+        cache_dir: Optional[str] = None,
+        use_kernel: bool = True,
+        seed: int = 0,
+    ):
+        if sl.mode not in ("full", "int8"):
+            raise ValueError(
+                f"the session runtime trains fleet modes 'full'/'int8', "
+                f"not {sl.mode!r}"
+            )
+        self.cfg, self.sl, self.params = cfg, sl, params
+        self.max_tenants = max_tenants
+        self.samples_per_tenant = samples_per_tenant
+        self.seq = seq
+        self.use_kernel = use_kernel
+        self.seed = seed
+        self.optimizer = optimizer if optimizer is not None else adamw(lr)
+        self._opt_key = ("adamw", lr) if optimizer is None else ("custom", id(optimizer))
+
+        num_samples = max_tenants * samples_per_tenant
+        if cache_capacity is None and hbm_budget_bytes is None:
+            cache_capacity = num_samples  # fully resident: fused-scan adapt
+        self.engine = TieredCacheEngine(
+            num_samples,
+            SL.lm_cache_layout(cfg, sl, seq),
+            capacity=cache_capacity,
+            hbm_budget_bytes=hbm_budget_bytes,
+            directory=cache_dir,
+        )
+        self.pool = AdapterPool(
+            pool_slots if pool_slots is not None else max_tenants + 1,
+            cfg, sl.rank, compress=pool_compress,
+        )
+        self._tenants: dict[Any, TenantState] = {}
+        self._free_partitions = list(range(max_tenants - 1, -1, -1))
+        self._export: Optional[Any] = None  # adapt's scan-path cache view
+        #: (tenant tuple, pool.version) -> device idx array. Repeated serve
+        #: batches skip the per-call host->device slot-index transfer; any
+        #: slot-map change bumps pool.version and invalidates naturally.
+        self._idx_cache: dict[tuple, jax.Array] = {}
+        self.counters = Counter()
+
+    # -- tenant bookkeeping --------------------------------------------------
+
+    def tenant(self, tenant) -> TenantState:
+        st = self._tenants.get(tenant)
+        if st is None:
+            raise KeyError(f"unknown tenant {tenant!r}")
+        return st
+
+    def _add_tenant(self, tenant) -> TenantState:
+        if not self._free_partitions:
+            raise RuntimeError(
+                f"session full: {self.max_tenants} cache partitions in use"
+            )
+        st = TenantState(partition=self._free_partitions.pop())
+        self._tenants[tenant] = st
+        return st
+
+    def release(self, tenant) -> None:
+        """Drop a tenant's training state and cache partition (its pool slot
+        — if any — stays registered but is unpinned, so normal LRU applies
+        again)."""
+        st = self._tenants.pop(tenant)
+        self._free_partitions.append(st.partition)
+        if self.pool.has(tenant):
+            self.pool.unpin(tenant)
+
+    # -- events --------------------------------------------------------------
+
+    def serve(
+        self,
+        tenants: Sequence,
+        prompts: jax.Array,
+        *,
+        max_new: int,
+        temperature: float = 0.0,
+        rng: Optional[jax.Array] = None,
+        unroll: int = 1,
+    ) -> jax.Array:
+        """Scan-fused generation for a mixed-tenant batch. Row b decodes
+        under ``tenants[b]``'s pool slot (``None`` -> base model). Routes
+        the single-stack path when the whole batch is base traffic, the
+        grouped (float/int8) path otherwise — always through the shared
+        compiled-fn cache, so the runtime adds only a pool lookup over
+        calling ``generate``/``generate_grouped`` directly."""
+        if len(tenants) != prompts.shape[0]:
+            raise ValueError(
+                f"{len(tenants)} tenants for batch {prompts.shape[0]}"
+            )
+        if all(t is None for t in tenants):
+            path = "serve/single/base"
+            toks = generate(
+                self.params, self.cfg, prompts, max_new=max_new,
+                temperature=temperature, rng=rng, unroll=unroll,
+            )
+        else:
+            key_ = (tuple(tenants), self.pool.version)
+            idx = self._idx_cache.get(key_)
+            if idx is None:
+                if len(self._idx_cache) > 256:
+                    self._idx_cache.clear()
+                idx = self._idx_cache[key_] = self.pool.lookup(tenants)
+            else:
+                self.pool.touch(tenants)  # recency still tracks traffic
+            variant = "int8" if self.pool.compress == "int8" else "float"
+            path = f"serve/grouped/{variant}"
+            toks = generate_grouped(
+                self.params, self.cfg, prompts, self.pool.pools(), idx,
+                max_new=max_new, temperature=temperature, rng=rng,
+                use_kernel=self.use_kernel, unroll=unroll,
+            )
+        self.counters[path] += 1
+        self.counters["serve/tokens"] += int(toks.size)
+        return toks
+
+    def ingest(self, tenant, tokens: jax.Array, labels: jax.Array) -> jax.Array:
+        """Populate-phase forward for new on-device samples: writes the
+        batch into the tenant's skip-cache partition AND returns the
+        last-position logits under the tenant's current adapters (zero slot
+        until the first ``adapt`` write-back) — ingestion doubles as
+        serving. Returns (B, 1, V) logits."""
+        # Validate BEFORE registering: a rejected batch must not leak a
+        # cache partition or leave a zombie tenant that poisons adapt().
+        st = self._tenants.get(tenant)
+        b, s = tokens.shape
+        if s != self.seq:
+            raise ValueError(f"seq {s} != session cache layout seq {self.seq}")
+        filled = st.n_ingested if st is not None else 0
+        if filled + b > self.samples_per_tenant:
+            raise ValueError(
+                f"tenant {tenant!r} partition full: {filled}+{b} > "
+                f"{self.samples_per_tenant}"
+            )
+        if st is None:
+            st = self._add_tenant(tenant)
+        who = [tenant if self.pool.has(tenant) else None] * b
+        idx = self.pool.lookup(who)
+        logits, acts, y_base = _ingest_fn(self.cfg, self.use_kernel)(
+            self.params, tokens, self.pool.pools(), idx
+        )
+        values = SL._encode_acts(acts, None, self.sl)
+        values["y_base"] = y_base
+        values["labels"] = labels
+        ids = np.arange(st.n_ingested, st.n_ingested + b) + (
+            st.partition * self.samples_per_tenant
+        )
+        self.engine.write(jnp.asarray(ids), values)
+        self._export = None  # new rows: invalidate adapt's exported view
+        st.n_ingested += b
+        self.counters["ingest/rows"] += b
+        return logits
+
+    def adapt(
+        self,
+        tenants: Optional[Sequence] = None,
+        *,
+        epochs: int = 1,
+        batch_per_tenant: int = 4,
+        key: Optional[jax.Array] = None,
+    ) -> dict:
+        """Cached-phase fleet fine-tune over the tenants' ingested
+        partitions: every epoch is grouped custom-VJP adapter steps with
+        ZERO backbone compute (the cache already holds what the populate
+        forward saw), then one batched donated write-back into the serving
+        pool (``register_many``) and a pin on every trained slot.
+
+        Tenants new to training draw initial adapters from ``key`` exactly
+        like ``fleet_finetune`` (``init_fleet_adapters`` row i -> i-th
+        tenant), and the planner replays each tenant's own RNG stream, so a
+        fresh session's first ``adapt`` reproduces the offline trainer
+        bitwise on the kernel path. Tenants are grouped by (optimizer step,
+        epoch position, partition fill) — only same-trajectory tenants can
+        share a stacked optimizer's scalar step counter.
+
+        Returns {"losses": {tenant: (epochs, steps) np.ndarray}, "groups":
+        [group tenant lists], "path": "scan" | "stream"}.
+        """
+        order = [t for t in self._tenants] if tenants is None else list(tenants)
+        if not order:
+            raise ValueError("no tenants to adapt")
+        for t in order:
+            if self.tenant(t).n_ingested == 0:
+                raise ValueError(f"tenant {t!r} has no ingested samples")
+
+        # Fresh tenants draw stacked inits from one key, in call order.
+        fresh = [t for t in order if not self.tenant(t).trained]
+        if fresh:
+            stacked0 = FF.init_fleet_adapters(
+                key if key is not None else jax.random.key(self.seed),
+                self.cfg, self.sl, len(fresh),
+            )
+            opt0 = self.optimizer.init(stacked0)
+            for i, t in enumerate(fresh):
+                st = self.tenant(t)
+                st.adapters = jax.tree.map(lambda x: x[i], stacked0)
+                st.opt_mu = _maybe_slice(opt0.mu, i)
+                st.opt_nu = _maybe_slice(opt0.nu, i)
+                st.step = 0
+
+        groups: dict[tuple, list] = {}
+        for t in order:
+            st = self.tenant(t)
+            groups.setdefault(
+                (st.step, st.epochs_done, st.n_ingested), []
+            ).append(t)
+
+        resident = self.engine.capacity >= self.engine.num_samples
+        losses: dict[Any, np.ndarray] = {}
+        for (step0, epoch0, spt), group in groups.items():
+            ls = self._adapt_group(
+                group, spt, epochs=epochs, epoch0=epoch0, step0=step0,
+                batch_per_tenant=batch_per_tenant, resident=resident,
+            )
+            for g, t in enumerate(group):
+                losses[t] = ls[:, :, g]
+        self.counters["adapt/epochs"] += epochs * len(groups)
+        return {
+            "losses": losses,
+            "groups": list(groups.values()),
+            "path": "scan" if resident else "stream",
+        }
+
+    def _adapt_group(
+        self, group, spt, *, epochs, epoch0, step0, batch_per_tenant, resident
+    ) -> np.ndarray:
+        n = len(group)
+        states = [self.tenant(t) for t in group]
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[st.adapters for st in states]
+        )
+        opt_state = OptState(
+            step=jnp.asarray(step0, jnp.int32),
+            mu=_maybe_stack([st.opt_mu for st in states]),
+            nu=_maybe_stack([st.opt_nu for st in states]),
+        )
+        bpt = min(batch_per_tenant, spt)
+        row_tenant = FF.fleet_row_tenant(n, bpt)
+        partitions = [st.partition for st in states]
+        fn_key = (self.cfg, self.sl, n, self.use_kernel, self._opt_key)
+
+        if resident:
+            epoch_fn = compiled(
+                ("fleet_cached_epoch", *fn_key),
+                lambda: FF.make_fleet_cached_epoch(
+                    self.cfg, self.sl, self.optimizer, n,
+                    use_kernel=self.use_kernel, donate=False,
+                ),
+            )
+            if self._export is None:
+                # Id-indexed view for the fused scan; reused across adapt
+                # calls until the next ingest writes new rows.
+                self._export = self.engine.export_skipcache()
+            cache = self._export
+        else:
+            step_fn = compiled(
+                ("fleet_cached_step", *fn_key),
+                lambda: jax.jit(FF.make_fleet_cached_step_from_vals(
+                    self.cfg, self.sl, self.optimizer, n,
+                    use_kernel=self.use_kernel,
+                )),
+            )
+
+        all_losses = []
+        for e in range(epochs):
+            idx_mat = batch_plan.fleet_index_matrix(
+                epoch0 + e, n, spt, bpt, seed=self.seed, partitions=partitions,
+                partition_stride=self.samples_per_tenant,
+            )
+            if resident:
+                stacked, opt_state, ls = epoch_fn(
+                    self.params, stacked, opt_state, cache,
+                    jnp.asarray(idx_mat), row_tenant,
+                )
+            else:
+                stacked, opt_state, ls = FF.fleet_cached_epoch_via_engine(
+                    step_fn, self.params, stacked, opt_state, self.engine,
+                    idx_mat, row_tenant,
+                )
+            all_losses.append(np.asarray(ls))
+
+        step_after = int(opt_state.step)
+        for g, (t, st) in enumerate(zip(group, states)):
+            st.adapters = jax.tree.map(lambda x: x[g], stacked)
+            st.opt_mu = _maybe_slice(opt_state.mu, g)
+            st.opt_nu = _maybe_slice(opt_state.nu, g)
+            st.step = step_after
+            st.epochs_done = epoch0 + epochs
+        self.pool.register_many(group, stacked)
+        for t in group:
+            self.pool.pin(t)  # in-flight session state: never LRU-evicted
+        return np.stack(all_losses)
+
+    # -- introspection -------------------------------------------------------
+
+    def stats(self) -> dict[str, float]:
+        out = {f"runtime/{k}": float(v) for k, v in sorted(self.counters.items())}
+        out.update(dict(self.engine.stats.as_rows()))
+        out.update(dict(self.pool.stats.as_rows()))
+        out["cache_engine/hbm_hit_rate"] = self.engine.stats.hbm_hit_rate()
+        return out
+
+    # -- checkpoint plane ----------------------------------------------------
+
+    def session_state(self) -> tuple[dict, dict]:
+        """(arrays, meta) for ``checkpoint.save_runtime_session``: stacked
+        trained adapters + optimizer moments (tenant order in meta), the
+        pool's data plane + slot table, and every present skip-cache row in
+        logical layout. Tenant ids must be JSON-serialisable."""
+        order = list(self._tenants)
+        trained = [t for t in order if self._tenants[t].trained]
+        arrays: dict[str, Any] = {}
+        if trained:
+            sts = [self._tenants[t] for t in trained]
+            arrays["adapters"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *[st.adapters for st in sts]
+            )
+            mu = _maybe_stack([st.opt_mu for st in sts])
+            nu = _maybe_stack([st.opt_nu for st in sts])
+            if mu is not None:
+                arrays["opt_mu"] = mu
+            if nu is not None:
+                arrays["opt_nu"] = nu
+        arrays["pool"] = dict(self.pool.pools())
+        present = sorted(self.engine._present)
+        if present:
+            chunk = max(1, self.engine.capacity)
+            parts = [
+                self.engine.read(jnp.asarray(present[lo:lo + chunk]))
+                for lo in range(0, len(present), chunk)
+            ]
+            arrays["cache"] = {
+                name: jnp.concatenate([p[name] for p in parts])
+                for name in parts[0]
+            }
+        meta = {
+            "tenants": [
+                {
+                    "id": t,
+                    "partition": self._tenants[t].partition,
+                    "n_ingested": self._tenants[t].n_ingested,
+                    "epochs_done": self._tenants[t].epochs_done,
+                    "step": self._tenants[t].step,
+                }
+                for t in order
+            ],
+            "trained": trained,
+            "pool_table": self.pool.slot_table(),
+            "present": present,
+            "layout": {"seq": self.seq, "rank": self.sl.rank,
+                       "mode": self.sl.mode,
+                       "samples_per_tenant": self.samples_per_tenant},
+        }
+        return arrays, meta
+
+    def load_session_state(self, arrays: dict, meta: dict) -> None:
+        """Restore a ``session_state`` capture into this (fresh) runtime.
+        Geometry (config shapes, seq, partition layout) must match the
+        saving session; the engine re-places cache rows under ITS budget
+        (placement is policy, the bytes are identical)."""
+        if self._tenants:
+            raise RuntimeError("restore requires a fresh runtime")
+        lay = meta["layout"]
+        if (lay["seq"], lay["rank"], lay["mode"], lay["samples_per_tenant"]) != (
+            self.seq, self.sl.rank, self.sl.mode, self.samples_per_tenant
+        ):
+            raise ValueError(f"session layout {lay} != runtime configuration")
+        for ent in meta["tenants"]:
+            st = TenantState(
+                partition=int(ent["partition"]),
+                n_ingested=int(ent["n_ingested"]),
+                epochs_done=int(ent["epochs_done"]),
+                step=int(ent["step"]),
+            )
+            self._tenants[ent["id"]] = st
+            self._free_partitions.remove(st.partition)
+        for i, t in enumerate(meta["trained"]):
+            st = self._tenants[t]
+            st.adapters = jax.tree.map(lambda x: jnp.asarray(x)[i], arrays["adapters"])
+            if "opt_mu" in arrays:
+                st.opt_mu = jax.tree.map(lambda x: jnp.asarray(x)[i], arrays["opt_mu"])
+            if "opt_nu" in arrays:
+                st.opt_nu = jax.tree.map(lambda x: jnp.asarray(x)[i], arrays["opt_nu"])
+        self.pool.load_state(arrays["pool"], meta["pool_table"])
+        present = [int(i) for i in meta["present"]]
+        if present:
+            chunk = max(1, self.engine.capacity)
+            for lo in range(0, len(present), chunk):
+                ids = present[lo:lo + chunk]
+                vals = {
+                    name: jnp.asarray(arr)[lo:lo + chunk]
+                    for name, arr in arrays["cache"].items()
+                }
+                self.engine.write(jnp.asarray(ids), vals)
+
+
+def _maybe_stack(trees: list) -> Optional[Params]:
+    if trees[0] is None:
+        return None
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _maybe_slice(tree: Optional[Params], i: int) -> Optional[Params]:
+    if tree is None:
+        return None
+    return jax.tree.map(lambda x: x[i], tree)

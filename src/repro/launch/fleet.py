@@ -96,6 +96,12 @@ def main(argv=None) -> dict:
     tokens = jax.random.randint(jax.random.key(1), (n_t, n_per, seq), 0, cfg.vocab_size)
     labels = jax.random.randint(jax.random.key(2), (n_t, n_per, seq), 0, cfg.vocab_size)
 
+    if args.devices == 1:
+        # Single-device fleets run through the session runtime (one pool,
+        # one cache engine, the shared compiled-fn cache) — the shard_map
+        # below is the multi-device escape hatch for the same epochs.
+        return _runtime_main(args, cfg, sl, params, tokens, labels, bpt)
+
     opt = adamw(args.lr)
     stacked = FF.init_fleet_adapters(jax.random.key(3), cfg, sl, n_t)
     opt_state = opt.init(stacked)
@@ -193,6 +199,71 @@ def main(argv=None) -> dict:
             # The CI verification step must FAIL on divergence, not just
             # print it (XLA fusion differences stay well below this).
             raise SystemExit(f"sharded/single-device parity broken: {diff:.3e}")
+    return out
+
+
+def _runtime_main(args, cfg, sl, params, tokens, labels, bpt) -> dict:
+    """Single-device fleet epochs as one interleaved runtime session:
+    ingest every tenant's samples (the populate forwards), then per-epoch
+    grouped ``adapt`` calls with pool write-back. Bitwise-identical to
+    ``fleet_finetune`` on the kernel path (DESIGN.md §9), which
+    ``--check-parity`` asserts at zero tolerance here."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core import fleet_finetune as FF
+    from repro.core.runtime import SessionRuntime
+    from repro.optim.optimizers import adamw
+
+    if args.check_parity and args.mode != "full":
+        raise SystemExit(
+            "--check-parity on the single-device runtime path requires "
+            "--mode full: int8 cached epochs intentionally train on the "
+            "quantised cache, while the offline populate epoch steps on "
+            "full-precision activations (DESIGN.md §9)"
+        )
+    n_t, n_per = args.tenants, args.samples
+    rt = SessionRuntime(
+        cfg, sl, params, max_tenants=n_t, samples_per_tenant=n_per,
+        seq=args.seq, lr=args.lr, use_kernel=args.use_kernel,
+    )
+    t0 = time.perf_counter()
+    for t in range(n_t):
+        for lo in range(0, n_per, bpt):
+            rt.ingest(t, tokens[t, lo:lo + bpt], labels[t, lo:lo + bpt])
+    ingest_s = time.perf_counter() - t0
+
+    losses, times = [], []
+    for e in range(args.epochs):
+        t0 = time.perf_counter()
+        out = rt.adapt(epochs=1, batch_per_tenant=bpt, key=jax.random.key(3))
+        ls = np.stack([out["losses"][t][0] for t in range(n_t)], axis=-1)
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        losses.append(ls)
+        kind = "populate" if e == 0 else "cached  "
+        extra = f" (+{ingest_s:.2f}s ingest)" if e == 0 else ""
+        print(f"epoch {e} [{kind}] mean loss {float(np.mean(ls)):.4f} "
+              f"time {dt:.2f}s{extra} ({n_t / dt:.1f} tenants/s/epoch)")
+
+    losses = np.stack(losses)  # (epochs, steps, n_tenants)
+    out = {"losses": losses, "epoch_times": times, "devices": 1}
+
+    if args.check_parity:
+        ref = FF.fleet_finetune(
+            jax.random.key(3), cfg, sl, params, tokens, labels,
+            epochs=args.epochs, batch_per_tenant=bpt, optimizer=adamw(args.lr),
+            use_kernel=args.use_kernel,
+        )
+        diff = float(np.max(np.abs(ref.losses - losses)))
+        print(f"parity_max_abs_diff={diff:.3e}")
+        out["parity_max_abs_diff"] = diff
+        if diff > 0.0:
+            # The interleaved session reproduces the offline trainer
+            # BITWISE on this path — hold it to exactly that.
+            raise SystemExit(f"runtime/offline parity broken: {diff:.3e}")
     return out
 
 

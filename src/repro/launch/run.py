@@ -1,0 +1,147 @@
+"""Interleaved continual-learning session CLI — the runtime's event loop.
+
+The paper's deployment story end to end (DESIGN.md §9): one
+``SessionRuntime`` processes an interleaved stream of serve, ingest, and
+adapt events over a shared adapter pool and skip-cache engine. Each round,
+every tenant (1) serves a mixed batch next to base-model traffic, (2)
+ingests freshly "collected" samples — the populate forward that writes its
+cache partition and returns logits, so ingestion is also a serving hit —
+and (3) runs a grouped cached ``adapt`` whose write-back immediately
+changes what the next serve returns.
+
+  PYTHONPATH=src python -m repro.launch.run --arch stablelm-1.6b \
+      --reduced --tenants 3 --rounds 2 --samples-per-round 4 --seq 16 \
+      --gen 8 --adapt-epochs 2
+
+Prints per-event wall times and the runtime's path/tier counters; --json
+dumps the same metrics machine-readably.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.core import lm_skiplora as SL
+from repro.core.runtime import SessionRuntime
+from repro.models.lm import init_lm
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--tenants", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--samples-per-round", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--adapt-epochs", type=int, default=1)
+    ap.add_argument("--batch-per-tenant", type=int, default=4)
+    ap.add_argument("--rank", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--mode", default="full", choices=["full", "int8"])
+    ap.add_argument("--pool-compress", choices=["int8"], default=None)
+    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--hbm-mb", type=float, default=0.0,
+                    help="cache HBM budget in MiB; 0 = fully device-resident")
+    ap.add_argument("--unroll", type=int, default=1)
+    ap.add_argument("--json", default=None, help="write metrics to this path")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    sl = SL.SkipLoRAConfig(rank=args.rank, mode=args.mode,
+                           cache_dtype="float32",
+                           use_fused_kernel=args.use_kernel)
+    params = init_lm(jax.random.key(0), cfg)
+    rt = SessionRuntime(
+        cfg, sl, params,
+        max_tenants=args.tenants,
+        samples_per_tenant=args.rounds * args.samples_per_round,
+        seq=args.seq, lr=args.lr, use_kernel=args.use_kernel,
+        pool_compress=args.pool_compress,
+        hbm_budget_bytes=(int(args.hbm_mb * 2**20) if args.hbm_mb > 0 else None),
+    )
+    names = [f"tenant-{t}" for t in range(args.tenants)]
+    prompts = jax.random.randint(
+        jax.random.key(1), (args.tenants + 1, args.prompt_len), 0, cfg.vocab_size
+    )
+    timings: dict[str, float] = {}
+
+    def timed(name, fn):
+        t0 = time.perf_counter()
+        out = fn()
+        for leaf in jax.tree.leaves(out):
+            if isinstance(leaf, jax.Array):
+                leaf.block_until_ready()
+        dt = time.perf_counter() - t0
+        timings[name] = timings.get(name, 0.0) + dt
+        return out, dt
+
+    # Round 0 serves base traffic for everyone (nothing registered yet).
+    _, dt = timed("serve", lambda: rt.serve(
+        [None] * (args.tenants + 1), prompts, max_new=args.gen,
+        unroll=args.unroll,
+    ))
+    print(f"serve  [base x{args.tenants + 1}]      {dt:6.2f}s")
+
+    rng = jax.random.key(2)
+    t_session0 = time.perf_counter()
+    for rnd in range(args.rounds):
+        for t, name in enumerate(names):
+            rng, k1, k2 = jax.random.split(rng, 3)
+            toks = jax.random.randint(
+                k1, (args.samples_per_round, args.seq), 0, cfg.vocab_size
+            )
+            labs = jax.random.randint(
+                k2, (args.samples_per_round, args.seq), 0, cfg.vocab_size
+            )
+            _, dt = timed("ingest", lambda: rt.ingest(name, toks, labs))
+            print(f"ingest [{name} round {rnd}]  {dt:6.2f}s "
+                  f"({args.samples_per_round} rows + logits back)")
+        out, dt = timed("adapt", lambda: rt.adapt(
+            names, epochs=args.adapt_epochs,
+            batch_per_tenant=args.batch_per_tenant, key=jax.random.key(3),
+        ))
+        mean_loss = float(jnp.mean(jnp.stack(
+            [jnp.asarray(out["losses"][n]) for n in names]
+        )))
+        print(f"adapt  [round {rnd}, {args.adapt_epochs} ep, {out['path']}] "
+              f"{dt:6.2f}s  mean loss {mean_loss:.4f}")
+        # Mixed post-adapt batch: base row + every tenant's fresh slot.
+        _, dt = timed("serve", lambda: rt.serve(
+            [None] + names, prompts, max_new=args.gen, unroll=args.unroll,
+        ))
+        print(f"serve  [mixed x{args.tenants + 1}]     {dt:6.2f}s")
+    session_s = time.perf_counter() - t_session0
+
+    stats = rt.stats()
+    metrics = {
+        **{f"time/{k}_s": v for k, v in timings.items()},
+        "session/tenants_per_s": args.tenants * args.rounds / session_s,
+        "session/wall_s": session_s,
+        **stats,
+    }
+    print(f"\nsession: {args.tenants} tenants x {args.rounds} rounds in "
+          f"{session_s:.2f}s ({metrics['session/tenants_per_s']:.2f} "
+          f"tenant-rounds/s)")
+    for k in sorted(stats):
+        print(f"  {k} = {stats[k]:.3f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return metrics
+
+
+if __name__ == "__main__":
+    main()

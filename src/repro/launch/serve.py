@@ -1,25 +1,18 @@
-"""Multi-tenant serving launcher: scan-fused decode + grouped adapters.
+"""Multi-tenant serving launcher — a thin CLI over ``core.runtime``.
 
-The deployment path after an on-device fine-tune (DESIGN.md §7): adapters
-are NOT mergeable into the backbone because the skip topology bypasses it,
-so serving applies a running skip-sum — and at fleet scale every batch row
-belongs to a *different* tenant, so the skip-sum becomes a grouped gather
-from a stacked adapter pool (``core.adapter_pool.AdapterPool`` + the
-grouped Pallas kernel).
-
-Two structural fixes over the old per-token loop:
-
-  - **Compiled-function cache**: prefill/decode jits are built once per
-    (config, path) and keyed here; jax.jit then keys traces by shape. The
-    old ``generate`` rebuilt ``jax.jit(lambda ...)`` closures per call —
-    a fresh trace + compile every invocation.
-  - **Scan-fused decode**: the whole ``max_new``-token generation is ONE
-    XLA dispatch (``models.lm.decode_scan``) with sampling folded into the
-    carry and KV caches donated, instead of ``max_new`` Python round-trips.
-    ``generate_loop`` keeps the per-token path alive for benchmarks.
+The serving engine itself (compiled-function cache, scan-fused decode,
+grouped adapter routing) lives in ``repro.core.runtime`` since the session
+runtime unified serve and fleet fine-tune over one adapter pool (DESIGN.md
+§9); this module re-exports the generation entry points for existing
+callers (benchmarks, examples, tests) and keeps the CLI:
 
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
       --reduced --batch 4 --prompt-len 32 --gen 16 --tenants 3
+
+The multi-tenant path routes through a ``SessionRuntime`` (pool lookup +
+path selection per batch); the single-stack path calls ``generate``
+directly. Both hit the same shared compiled-fn cache, so the runtime adds
+no retrace or rebuild over the PR 2 engine.
 """
 
 from __future__ import annotations
@@ -27,200 +20,39 @@ from __future__ import annotations
 import argparse
 import functools
 import time
-from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, reduce_config
-from repro.core import donate_argnums
 from repro.core import lm_skiplora as SL
-from repro.core.adapter_pool import AdapterPool
-from repro.models.lm import (
-    decode_scan,
-    init_lm,
-    init_serve_caches,
-    sample_token,
-    serve_decode,
-    serve_prefill,
-    serve_prefill_grouped,
+from repro.core.adapter_pool import AdapterPool  # noqa: F401 (re-export)
+from repro.core.runtime import (  # noqa: F401 (public re-exports)
+    _FN_CACHE,
+    _cached_fn,
+    _decode_scan_fn,
+    _decode_step_fn,
+    _prefill_fn,
+    _prefill_grouped_fn,
+    SessionRuntime,
+    generate,
+    generate_grouped,
+    generate_loop,
 )
-
-Params = Any
-
-#: (name, cfg, extras) -> jitted callable. cfg is a frozen dataclass and
-#: hashes by value; jax.jit keys compiled traces by argument shape below
-#: this cache, so repeated calls at a new (batch, seq) retrace but never
-#: rebuild the jit wrapper itself.
-_FN_CACHE: dict[tuple, Any] = {}
+from repro.models.lm import init_lm
 
 
-def _cached_fn(name: str, cfg, make, extras: tuple = ()):
-    key = (name, cfg, *extras)
-    fn = _FN_CACHE.get(key)
-    if fn is None:
-        fn = _FN_CACHE[key] = make()
-    return fn
-
-
-def _prefill_fn(cfg):
-    def make():
-        def f(params, tokens, caches, adapters):
-            return serve_prefill(params, cfg, tokens, caches, adapters=adapters)
-
-        return jax.jit(f)
-
-    return _cached_fn("prefill", cfg, make)
-
-
-def _prefill_grouped_fn(cfg, use_kernel: bool):
-    def make():
-        def f(params, tokens, caches, pools, idx):
-            return serve_prefill_grouped(
-                params, cfg, tokens, caches, pools, idx, use_kernel=use_kernel
-            )
-
-        return jax.jit(f)
-
-    return _cached_fn("prefill_grouped", cfg, make, (use_kernel,))
-
-
-def _decode_scan_fn(cfg, use_kernel: bool = True):
-    def make():
-        def f(params, tok0, pos0, caches, key, adapters, pools, idx,
-              max_new, temperature, unroll):
-            return decode_scan(
-                params, cfg, tok0, pos0, caches, key,
-                max_new=max_new, temperature=temperature, adapters=adapters,
-                pools=pools, idx=idx, use_kernel=use_kernel, unroll=unroll,
-            )
-
-        # Donate the KV caches: the scan's carry updates them in place
-        # (off-CPU; the CPU backend has no donation and would only warn).
-        return jax.jit(
-            f,
-            static_argnums=(8, 9, 10),
-            donate_argnums=donate_argnums(3),
-        )
-
-    return _cached_fn("decode_scan", cfg, make, (use_kernel,))
-
-
-def _decode_step_fn(cfg):
-    def make():
-        def f(params, tok, pos, caches, adapters):
-            return serve_decode(params, cfg, tok, pos, caches, adapters=adapters)
-
-        return jax.jit(f)
-
-    return _cached_fn("decode_step", cfg, make)
-
-
-# ---------------------------------------------------------------------------
-# Generation entry points
-# ---------------------------------------------------------------------------
-
-
-def generate(
-    params,
-    cfg,
-    tokens,
-    *,
-    max_new: int,
-    adapters_stack=None,
-    temperature: float = 0.0,
-    rng: Optional[jax.Array] = None,
-    unroll: int = 1,
-):
-    """Batched generation, scan-fused: 1 prefill dispatch + 1 decode-scan
-    dispatch for all ``max_new`` tokens. Returns (B, max_new) int32."""
-    b, s = tokens.shape
-    caches = init_serve_caches(cfg, b, s + max_new)
-    logits, caches = _prefill_fn(cfg)(params, tokens, caches, adapters_stack)
-    tok0, key = sample_token(
-        logits, rng if rng is not None else jax.random.key(0), temperature
-    )
-    toks, _ = _decode_scan_fn(cfg)(
-        params, tok0, jnp.asarray(s, jnp.int32), caches, key,
-        adapters_stack, None, None, max_new, float(temperature), unroll,
-    )
-    return toks
-
-
-def generate_grouped(
-    params,
-    cfg,
-    tokens,
-    pools: dict[str, jax.Array],
-    idx: jax.Array,
-    *,
-    max_new: int,
-    temperature: float = 0.0,
-    rng: Optional[jax.Array] = None,
-    use_kernel: bool = True,
-    unroll: int = 1,
-):
-    """Multi-tenant generation: batch row b decodes under adapter slot
-    idx[b] gathered from the stacked pool (float or raw-int8 layout, see
-    ``AdapterPool.pools()``). Same two-dispatch structure as ``generate``."""
-    b, s = tokens.shape
-    caches = init_serve_caches(cfg, b, s + max_new)
-    logits, caches = _prefill_grouped_fn(cfg, use_kernel)(
-        params, tokens, caches, pools, idx
-    )
-    tok0, key = sample_token(
-        logits, rng if rng is not None else jax.random.key(0), temperature
-    )
-    toks, _ = _decode_scan_fn(cfg, use_kernel)(
-        params, tok0, jnp.asarray(s, jnp.int32), caches, key,
-        None, pools, idx, max_new, float(temperature), unroll,
-    )
-    return toks
-
-
-def generate_loop(
-    params,
-    cfg,
-    tokens,
-    *,
-    max_new: int,
-    adapters_stack=None,
-    temperature: float = 0.0,
-    rng: Optional[jax.Array] = None,
-):
-    """Per-token Python decode loop (the pre-scan path, kept for the
-    loop-vs-scan benchmark): ``max_new`` dispatches, cached step jits."""
-    b, s = tokens.shape
-    caches = init_serve_caches(cfg, b, s + max_new)
-    prefill = _prefill_fn(cfg)
-    decode = _decode_step_fn(cfg)
-    logits, caches = prefill(params, tokens, caches, adapters_stack)
-    key = rng if rng is not None else jax.random.key(0)
-    tok, key = sample_token(logits, key, temperature)
-    out = []
-    for i in range(max_new):
-        out.append(tok)
-        logits, caches = decode(
-            params, tok, jnp.asarray(s + i, jnp.int32), caches, adapters_stack
-        )
-        tok, key = sample_token(logits, key, temperature)
-    return jnp.concatenate(out, axis=1)
-
-
-# ---------------------------------------------------------------------------
-# CLI
-# ---------------------------------------------------------------------------
-
-
-def _demo_pool(cfg, n_tenants: int, rank: int, compress) -> AdapterPool:
-    """Register ``n_tenants`` pretend on-device fine-tunes (B != 0)."""
-    pool = AdapterPool(n_tenants + 1, cfg, rank, compress=compress)
+def _demo_runtime(cfg, n_tenants: int, rank: int, compress, params) -> SessionRuntime:
+    """Session with ``n_tenants`` pretend on-device fine-tunes (B != 0)."""
     sl = SL.SkipLoRAConfig(rank=rank)
+    rt = SessionRuntime(
+        cfg, sl, params, max_tenants=n_tenants, samples_per_tenant=1, seq=8,
+        pool_compress=compress,
+    )
     for t in range(n_tenants):
         ad = SL.init_adapters(jax.random.key(100 + t), cfg, sl)
         ad["B"] = jax.random.normal(jax.random.key(200 + t), ad["B"].shape) * 0.02
-        pool.register(f"tenant-{t}", ad)
-    return pool
+        rt.pool.register(f"tenant-{t}", ad)
+    return rt
 
 
 def main() -> None:
@@ -254,22 +86,23 @@ def main() -> None:
         if args.loop:
             ap.error("--loop applies to single-stack serving; the grouped "
                      "multi-tenant path always uses the fused scan")
-        pool = _demo_pool(cfg, args.tenants, args.rank, args.pool_compress)
+        rt = _demo_runtime(cfg, args.tenants, args.rank, args.pool_compress,
+                           params)
         # Mixed batch: rows cycle through tenants; row 0 serves the base
         # model via the pinned zero slot.
         tenants = [None] + [
             f"tenant-{i % args.tenants}" for i in range(1, args.batch)
         ]
-        idx = pool.lookup(tenants)
         t0 = time.perf_counter()
-        toks = generate_grouped(
-            params, cfg, prompts, pool.pools(), idx,
-            max_new=args.gen, temperature=args.temperature, unroll=args.unroll,
+        toks = rt.serve(
+            tenants, prompts, max_new=args.gen,
+            temperature=args.temperature, unroll=args.unroll,
         )
         jax.block_until_ready(toks)
         dt = time.perf_counter() - t0
         print(f"[grouped x{args.tenants} tenants, pool "
-              f"{pool.nbytes() / 2**20:.1f} MiB, compress={args.pool_compress}]")
+              f"{rt.pool.nbytes() / 2**20:.1f} MiB, "
+              f"compress={args.pool_compress}]")
     else:
         adapters_stack = None
         if args.with_adapters:

@@ -305,6 +305,40 @@ def serve_decode_grouped(
     return logits, out["caches"]
 
 
+def ingest_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,             # (B, S) int32
+    pools: Optional[dict[str, jax.Array]] = None,
+    idx: Optional[jax.Array] = None,   # (B,) int32 slot per row
+    *,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Populate-phase forward that doubles as serving (DESIGN.md §9).
+
+    One train-mode backbone pass with activation collection yields both the
+    Skip-Cache payload (``acts``, ``y_base`` — bitwise what the offline
+    populate epoch writes, since the backbone is frozen) *and*, via one
+    grouped skip-sum over the last position, the per-row adapted logits a
+    serving request would return. ``pools``/``idx`` select each row's
+    adapter slot (``None`` pools -> base model). Returns
+    (last-position logits (B, 1, V), acts (L, B, S, D), y_base (B, S, D)).
+    """
+    out = lm_forward(params, cfg, tokens, mode="train", collect_acts=True)
+    acts = jax.lax.stop_gradient(out["acts"])
+    y_base = jax.lax.stop_gradient(out["y_base"])
+    y_last = y_base[:, -1:]
+    if pools is not None:
+        from repro.core.adapter_pool import grouped_skip_sum
+
+        skip = grouped_skip_sum(
+            acts[:, :, -1:], pools, idx, use_kernel=use_kernel
+        )
+        y_last = y_last + skip.astype(y_last.dtype)
+    logits = readout(params, cfg, y_last)
+    return logits, acts, y_base
+
+
 # ---------------------------------------------------------------------------
 # Scan-fused decode: the whole generation as ONE lax.scan dispatch
 # ---------------------------------------------------------------------------

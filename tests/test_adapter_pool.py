@@ -198,6 +198,69 @@ class TestLRUSequences:
                 atol=1e-6, err_msg=name,
             )
 
+    def test_pinned_slot_survives_eviction_pressure(self, cfg):
+        """Satellite bar: a pinned tenant (in-flight training state) is
+        never the LRU victim — its slot and its *data* survive arbitrary
+        registration churn that evicts everything else around it."""
+        pool = AdapterPool(4, cfg, rank=4)  # 3 usable slots
+        ad_t = make_adapters(cfg, 4, seed=80)
+        slot_t = pool.register("training", ad_t)
+        pool.pin("training")
+        for t in range(8):  # churn far past capacity
+            pool.register(f"burst{t}", make_adapters(cfg, 4, seed=81 + t))
+        assert pool.has("training")
+        assert pool.lookup(["training"])[0] == slot_t
+        np.testing.assert_allclose(
+            np.asarray(pool.pools()["A"][slot_t]), np.asarray(ad_t["A"]),
+            atol=1e-6,
+        )
+        assert pool.stats.evictions >= 6
+        # Unpinned, it becomes evictable again: three fresh registrations
+        # (pool holds 3) cycle every current resident out, training included.
+        pool.unpin("training")
+        for t in range(3):
+            pool.register(f"more{t}", make_adapters(cfg, 4, seed=99 + t))
+        assert not pool.has("training")
+
+    def test_all_pinned_pool_rejects_new_registration(self, cfg):
+        pool = AdapterPool(3, cfg, rank=4)  # 2 usable slots
+        pool.register("a", make_adapters(cfg, 4, seed=90))
+        pool.register("b", make_adapters(cfg, 4, seed=91))
+        pool.pin("a")
+        pool.pin("b")
+        with pytest.raises(RuntimeError, match="pinned"):
+            pool.register("c", make_adapters(cfg, 4, seed=92))
+        # Re-registration of a pinned tenant is fine (keeps its slot).
+        s = pool.register("a", make_adapters(cfg, 4, seed=93))
+        assert s == pool.lookup(["a"])[0]
+
+    def test_explicit_evict_of_pinned_raises(self, cfg):
+        pool = AdapterPool(3, cfg, rank=4)
+        pool.register("a", make_adapters(cfg, 4, seed=94))
+        pool.pin("a")
+        with pytest.raises(ValueError, match="pinned"):
+            pool.evict("a")
+        pool.unpin("a")
+        pool.evict("a")
+        assert not pool.has("a")
+
+    def test_pin_unknown_tenant_raises(self, cfg):
+        pool = AdapterPool(3, cfg, rank=4)
+        with pytest.raises(KeyError):
+            pool.pin("ghost")
+
+    def test_version_tracks_slot_map_not_touches(self, cfg):
+        pool = AdapterPool(3, cfg, rank=4)
+        v0 = pool.version
+        pool.register("a", make_adapters(cfg, 4, seed=95))
+        assert pool.version == v0 + 1
+        pool.lookup(["a"])          # touch: slots unchanged
+        pool.touch(["a", None])
+        pool.register("a", make_adapters(cfg, 4, seed=96))  # re-register
+        assert pool.version == v0 + 1
+        pool.evict("a")
+        assert pool.version == v0 + 2
+
     def test_zero_slot_survives_churn(self, cfg):
         pool = AdapterPool(3, cfg, rank=4)
         for t in range(7):

@@ -1,0 +1,385 @@
+"""SessionRuntime: one engine for serve + ingest + adapt (DESIGN.md §9).
+
+Quick tier: an interleaved serve -> ingest -> adapt -> serve smoke on the
+reduced config, routing/caching invariants, and the session checkpoint
+round-trip. Nightly/full tier: the §9 parity bar — the interleaved session
+reproduces offline ``fleet_finetune`` adapters BITWISE on the kernel path,
+resident and spilling engines alike.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.core import fleet_finetune as FF
+from repro.core import lm_skiplora as SL
+from repro.core.runtime import _FN_CACHE, SessionRuntime
+from repro.models.lm import init_lm
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduce_config(get_config("stablelm-1.6b"))
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_lm(jax.random.key(0), cfg)
+
+
+def make_sl(**kw):
+    kw.setdefault("rank", 4)
+    kw.setdefault("mode", "full")
+    kw.setdefault("cache_dtype", "float32")
+    return SL.SkipLoRAConfig(**kw)
+
+
+def make_runtime(cfg, params, sl=None, *, n_t=2, n_per=4, seq=8, **kw):
+    return SessionRuntime(
+        cfg, sl if sl is not None else make_sl(), params,
+        max_tenants=n_t, samples_per_tenant=n_per, seq=seq, lr=1e-2, **kw
+    )
+
+
+def make_data(cfg, n_t, n_per, seq, seed=1):
+    tokens = jax.random.randint(
+        jax.random.key(seed), (n_t, n_per, seq), 0, cfg.vocab_size
+    )
+    labels = jax.random.randint(
+        jax.random.key(seed + 1), (n_t, n_per, seq), 0, cfg.vocab_size
+    )
+    return tokens, labels
+
+
+class TestSessionSmoke:
+    """The CI quick-tier session smoke: serve -> ingest -> adapt -> serve on
+    the reduced config (the full parity run lives in the nightly tier)."""
+
+    def test_interleaved_session_round(self, cfg, params):
+        rt = make_runtime(cfg, params)
+        tokens, labels = make_data(cfg, 2, 4, 8)
+        prompts = jax.random.randint(jax.random.key(5), (2, 6), 0, cfg.vocab_size)
+
+        base = rt.serve([None, None], prompts, max_new=4)
+        assert base.shape == (2, 4)
+
+        for t in range(2):
+            logits = rt.ingest(f"u{t}", tokens[t], labels[t])
+            # Ingestion doubles as serving: adapted last-position logits.
+            assert logits.shape == (4, 1, cfg.vocab_size)
+            assert bool(jnp.all(jnp.isfinite(logits)))
+
+        out = rt.adapt(epochs=2, batch_per_tenant=2, key=jax.random.key(3))
+        assert out["path"] == "scan"
+        for t in range(2):
+            ls = out["losses"][f"u{t}"]
+            assert ls.shape == (2, 2) and np.all(np.isfinite(ls))
+
+        # Write-back is live: both tenants serve their trained slots, and
+        # trained-tenant logits diverge from base-model logits.
+        assert rt.pool.has("u0") and rt.pool.has("u1")
+        adapted = rt.serve(["u0", "u1"], prompts, max_new=4)
+        assert adapted.shape == (2, 4)
+        assert float(jnp.max(jnp.abs(
+            rt.pool.pools()["B"][rt.pool.lookup(["u0"])[0]]
+        ))) > 0
+
+        stats = rt.stats()
+        assert stats["runtime/ingest/rows"] == 8
+        assert stats["runtime/serve/grouped/float"] >= 1
+        assert stats["runtime/serve/single/base"] >= 1
+
+    def test_ingest_partition_overflow_raises(self, cfg, params):
+        rt = make_runtime(cfg, params, n_per=2)
+        tokens, labels = make_data(cfg, 1, 3, 8)
+        with pytest.raises(ValueError, match="partition full"):
+            rt.ingest("u0", tokens[0], labels[0])
+
+    def test_adapt_without_ingest_raises(self, cfg, params):
+        rt = make_runtime(cfg, params)
+        with pytest.raises(ValueError, match="no tenants"):
+            rt.adapt(epochs=1)
+        rt._add_tenant("ghost")  # partition assigned, nothing ingested
+        with pytest.raises(ValueError, match="no ingested"):
+            rt.adapt(["ghost"], epochs=1)
+
+    def test_session_capacity_bounds(self, cfg, params):
+        rt = make_runtime(cfg, params, n_t=1)
+        tokens, labels = make_data(cfg, 2, 4, 8)
+        rt.ingest("u0", tokens[0], labels[0])
+        with pytest.raises(RuntimeError, match="session full"):
+            rt.ingest("u1", tokens[1], labels[1])
+        rt.release("u0")
+        rt.ingest("u1", tokens[1], labels[1])  # partition recycled
+
+    def test_seq_mismatch_raises(self, cfg, params):
+        rt = make_runtime(cfg, params, seq=8)
+        tokens, labels = make_data(cfg, 1, 4, 16)
+        with pytest.raises(ValueError, match="seq"):
+            rt.ingest("u0", tokens[0], labels[0])
+
+    def test_rejected_ingest_leaks_no_tenant_state(self, cfg, params):
+        """A malformed first batch must not register the tenant or consume
+        a partition — otherwise one bad request poisons every later
+        all-tenant adapt and can exhaust the session."""
+        rt = make_runtime(cfg, params, n_t=1, n_per=4)
+        bad_tokens, bad_labels = make_data(cfg, 1, 4, 16)  # wrong seq
+        with pytest.raises(ValueError, match="seq"):
+            rt.ingest("u0", bad_tokens[0], bad_labels[0])
+        big_tokens, big_labels = make_data(cfg, 1, 5, 8)   # over capacity
+        with pytest.raises(ValueError, match="partition full"):
+            rt.ingest("u0", big_tokens[0], big_labels[0])
+        assert not rt._tenants and len(rt._free_partitions) == 1
+        tokens, labels = make_data(cfg, 1, 4, 8)
+        rt.ingest("u1", tokens[0], labels[0])  # the slot was not leaked
+        rt.adapt(epochs=1, batch_per_tenant=2, key=jax.random.key(3))
+
+    def test_partial_fill_adapt_trains_on_own_rows(self, cfg, params):
+        """Partitions are allocation *stride*, not fill: adapting tenants
+        whose partitions are half-ingested must gather each tenant's own
+        rows (regression: the planner once offset partitions by the fill,
+        silently training tenant k>0 on neighbours' or absent rows)."""
+        tokens, labels = make_data(cfg, 2, 4, 8, seed=11)
+
+        rt_part = make_runtime(cfg, params, n_t=2, n_per=8)  # half-filled
+        rt_full = make_runtime(cfg, params, n_t=2, n_per=4)  # packed
+        for t in range(2):
+            rt_part.ingest(f"u{t}", tokens[t], labels[t])
+            rt_full.ingest(f"u{t}", tokens[t], labels[t])
+        out_part = rt_part.adapt(epochs=2, batch_per_tenant=2,
+                                 key=jax.random.key(3))
+        out_full = rt_full.adapt(epochs=2, batch_per_tenant=2,
+                                 key=jax.random.key(3))
+        for t in range(2):
+            n = f"u{t}"
+            np.testing.assert_array_equal(out_part["losses"][n],
+                                          out_full["losses"][n])
+            np.testing.assert_array_equal(
+                np.asarray(rt_part.tenant(n).adapters["B"]),
+                np.asarray(rt_full.tenant(n).adapters["B"]),
+            )
+        # The streaming path reads real ids only (no zero-filled ghosts):
+        # a KeyError here would mean the plan left the ingested range.
+        rt_str = make_runtime(cfg, params, n_t=2, n_per=8, cache_capacity=4)
+        for t in range(2):
+            rt_str.ingest(f"u{t}", tokens[t], labels[t])
+        out_str = rt_str.adapt(epochs=2, batch_per_tenant=2,
+                               key=jax.random.key(3))
+        assert out_str["path"] == "stream"
+        for t in range(2):
+            np.testing.assert_allclose(
+                out_str["losses"][f"u{t}"], out_full["losses"][f"u{t}"],
+                atol=1e-6, rtol=1e-6,
+            )
+
+    def test_freeze_a_mode_rejected(self, cfg, params):
+        with pytest.raises(ValueError, match="full"):
+            make_runtime(cfg, params, sl=make_sl(mode="freeze_a"))
+
+
+class TestRouting:
+    def test_serve_shares_compiled_entries_with_direct_path(self, cfg, params):
+        """The §9 throughput bar, structurally: runtime-routed decode hits
+        the SAME compiled decode-scan entry as the direct PR 2 path (shared
+        compiled-fn cache), so routing adds a pool lookup, not a retrace.
+        (The measured ratio lives in benchmarks/runtime_bench.py.)"""
+        from repro.launch import serve as launch_serve
+
+        rt = make_runtime(cfg, params)
+        tokens, labels = make_data(cfg, 1, 4, 8)
+        rt.ingest("u0", tokens[0], labels[0])
+        rt.adapt(epochs=1, batch_per_tenant=2, key=jax.random.key(3))
+        prompts = jax.random.randint(jax.random.key(5), (2, 6), 0, cfg.vocab_size)
+        rt.serve(["u0", None], prompts, max_new=3)
+        entry = _FN_CACHE[("decode_scan", cfg, True)]
+        assert launch_serve._decode_scan_fn(cfg, True) is entry
+
+    def test_idx_memo_survives_traffic_and_invalidates_on_churn(self, cfg, params):
+        rt = make_runtime(cfg, params, n_t=2)
+        tokens, labels = make_data(cfg, 2, 4, 8)
+        for t in range(2):
+            rt.ingest(f"u{t}", tokens[t], labels[t])
+        rt.adapt(epochs=1, batch_per_tenant=2, key=jax.random.key(3))
+        prompts = jax.random.randint(jax.random.key(5), (2, 6), 0, cfg.vocab_size)
+        a = rt.serve(["u0", "u1"], prompts, max_new=3)
+        b = rt.serve(["u0", "u1"], prompts, max_new=3)  # memoised idx
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        v0 = rt.pool.version
+        rt.adapt(epochs=1, batch_per_tenant=2)  # re-registration: slots keep
+        assert rt.pool.version == v0
+        rt.serve(["u0", "u1"], prompts, max_new=3)
+
+    def test_base_only_batch_takes_single_path(self, cfg, params):
+        rt = make_runtime(cfg, params)
+        prompts = jax.random.randint(jax.random.key(5), (2, 6), 0, cfg.vocab_size)
+        rt.serve([None, None], prompts, max_new=3)
+        assert rt.counters["serve/single/base"] == 1
+        assert rt.counters["serve/grouped/float"] == 0
+
+
+class TestAdaptGrouping:
+    def test_unequal_trajectories_split_into_groups(self, cfg, params):
+        """Tenants at different optimizer steps cannot share a stacked
+        scalar step counter — adapt must subgroup them, and each subgroup's
+        trajectory must match the tenants' solo continuation."""
+        rt = make_runtime(cfg, params, n_t=3)
+        tokens, labels = make_data(cfg, 3, 4, 8)
+        for t in range(3):
+            rt.ingest(f"u{t}", tokens[t], labels[t])
+        rt.adapt(["u0"], epochs=1, batch_per_tenant=2, key=jax.random.key(3))
+        out = rt.adapt(epochs=1, batch_per_tenant=2, key=jax.random.key(3))
+        assert sorted(len(g) for g in out["groups"]) == [1, 2]
+        assert rt.tenant("u0").step == 2 * rt.tenant("u1").step
+
+
+class TestCheckpoint:
+    def test_save_restore_continue_equivalence(self, cfg, params, tmp_path):
+        """Satellite bar: a checkpoint round-trips the full session (fleet
+        adapters + optimizer states + pool slot table + cache rows), and
+        continuing the restored session reproduces the uninterrupted run."""
+        from repro.checkpoint.checkpoint import (
+            restore_runtime_session,
+            save_runtime_session,
+        )
+
+        tokens, labels = make_data(cfg, 2, 4, 8)
+        prompts = jax.random.randint(jax.random.key(9), (2, 6), 0, cfg.vocab_size)
+
+        def start():
+            rt = make_runtime(cfg, params)
+            for t in range(2):
+                rt.ingest(f"u{t}", tokens[t], labels[t])
+            rt.adapt(epochs=1, batch_per_tenant=2, key=jax.random.key(3))
+            return rt
+
+        rt_ref = start()                      # uninterrupted
+        path = save_runtime_session(str(tmp_path), 1, start())
+        rt_new = make_runtime(cfg, params)    # elastic restart
+        restore_runtime_session(path, rt_new)
+
+        assert rt_new.pool.slot_table() == rt_ref.pool.slot_table()
+        out_ref = rt_ref.adapt(epochs=1, batch_per_tenant=2)
+        out_new = rt_new.adapt(epochs=1, batch_per_tenant=2)
+        for t in range(2):
+            n = f"u{t}"
+            np.testing.assert_array_equal(out_ref["losses"][n], out_new["losses"][n])
+            np.testing.assert_array_equal(
+                np.asarray(rt_ref.tenant(n).adapters["A"]),
+                np.asarray(rt_new.tenant(n).adapters["A"]),
+            )
+            np.testing.assert_array_equal(
+                np.asarray(rt_ref.tenant(n).adapters["B"]),
+                np.asarray(rt_new.tenant(n).adapters["B"]),
+            )
+        np.testing.assert_array_equal(
+            np.asarray(rt_ref.serve(["u0", "u1"], prompts, max_new=3)),
+            np.asarray(rt_new.serve(["u0", "u1"], prompts, max_new=3)),
+        )
+
+    def test_restore_requires_fresh_runtime(self, cfg, params, tmp_path):
+        from repro.checkpoint.checkpoint import (
+            restore_runtime_session,
+            save_runtime_session,
+        )
+
+        rt = make_runtime(cfg, params)
+        tokens, labels = make_data(cfg, 1, 4, 8)
+        rt.ingest("u0", tokens[0], labels[0])
+        path = save_runtime_session(str(tmp_path), 0, rt)
+        with pytest.raises(RuntimeError, match="fresh"):
+            restore_runtime_session(path, rt)
+
+
+@pytest.mark.slow
+class TestOfflineParity:
+    """The §9 acceptance bar: an interleaved serve -> ingest -> adapt ->
+    serve session reproduces offline ``fleet_finetune`` BITWISE on the
+    kernel path (full mode, matching cache dtype)."""
+
+    def _run_session(self, cfg, params, sl, tokens, labels, *, epochs, bpt,
+                     **rt_kw):
+        n_t, n_per, seq = tokens.shape
+        rt = SessionRuntime(
+            cfg, sl, params, max_tenants=n_t, samples_per_tenant=n_per,
+            seq=seq, lr=1e-2, use_kernel=sl.use_fused_kernel, **rt_kw,
+        )
+        prompts = jax.random.randint(jax.random.key(9), (n_t, 6), 0, cfg.vocab_size)
+        rt.serve([None] * n_t, prompts, max_new=3)          # serve
+        for t in range(n_t):                                 # ingest
+            for lo in range(0, n_per, bpt):
+                rt.ingest(t, tokens[t, lo:lo + bpt], labels[t, lo:lo + bpt])
+        out = rt.adapt(epochs=epochs, batch_per_tenant=bpt,  # adapt
+                       key=jax.random.key(3))
+        rt.serve(list(range(n_t)), prompts, max_new=3)       # serve again
+        return rt, out
+
+    def test_interleaved_session_bitwise_vs_fleet_finetune(self, cfg, params):
+        sl = make_sl(use_fused_kernel=True)
+        n_t, n_per, seq, bpt, epochs = 2, 8, 16, 4, 3
+        tokens, labels = make_data(cfg, n_t, n_per, seq, seed=5)
+        ref = FF.fleet_finetune(
+            jax.random.key(3), cfg, sl, params, tokens, labels,
+            epochs=epochs, batch_per_tenant=bpt, lr=1e-2, use_kernel=True,
+        )
+        rt, out = self._run_session(
+            cfg, params, sl, tokens, labels, epochs=epochs, bpt=bpt
+        )
+        assert out["path"] == "scan"
+        for t in range(n_t):
+            np.testing.assert_array_equal(
+                np.asarray(rt.tenant(t).adapters["A"]),
+                np.asarray(ref.adapters["A"][t]),
+            )
+            np.testing.assert_array_equal(
+                np.asarray(rt.tenant(t).adapters["B"]),
+                np.asarray(ref.adapters["B"][t]),
+            )
+        losses = np.stack([out["losses"][t] for t in range(n_t)], axis=-1)
+        np.testing.assert_array_equal(losses, np.asarray(ref.losses))
+        # The write-back slots hold exactly the offline-trained stacks.
+        from repro.core.adapter_pool import AdapterPool
+
+        ref_pool = AdapterPool(n_t + 1, cfg, sl.rank)
+        ref_pool.register_many(list(range(n_t)), ref.adapters)
+        for k, v in rt.pool.pools().items():
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(ref_pool.pools()[k]))
+
+    def test_spilling_engine_stream_path_matches_scan(self, cfg, params):
+        """Under a forced HBM budget adapt takes the streaming prefetch
+        path; its trajectory must match the resident scan path (and spill
+        for real)."""
+        sl = make_sl(use_fused_kernel=True)
+        n_t, n_per, seq, bpt, epochs = 2, 8, 16, 4, 3
+        tokens, labels = make_data(cfg, n_t, n_per, seq, seed=7)
+        rt_ref, out_ref = self._run_session(
+            cfg, params, sl, tokens, labels, epochs=epochs, bpt=bpt
+        )
+        rt_spill, out_spill = self._run_session(
+            cfg, params, sl, tokens, labels, epochs=epochs, bpt=bpt,
+            cache_capacity=n_t * n_per // 2,
+        )
+        assert out_spill["path"] == "stream"
+        assert rt_spill.engine.stats.spills > 0
+        for t in range(n_t):
+            np.testing.assert_allclose(
+                out_spill["losses"][t], out_ref["losses"][t],
+                atol=1e-6, rtol=1e-6,
+            )
+            np.testing.assert_allclose(
+                np.asarray(rt_spill.tenant(t).adapters["B"]),
+                np.asarray(rt_ref.tenant(t).adapters["B"]),
+                atol=1e-6, rtol=1e-6,
+            )
+
+    def test_int8_mode_session_learns(self, cfg, params):
+        sl = make_sl(mode="int8", use_fused_kernel=True)
+        tokens, labels = make_data(cfg, 2, 8, 16, seed=9)
+        rt, out = self._run_session(
+            cfg, params, sl, tokens, labels, epochs=3, bpt=4
+        )
+        ls = np.stack([out["losses"][t] for t in range(2)], axis=-1)
+        assert ls.shape == (3, 2, 2) and np.all(np.isfinite(ls))
+        assert ls[-1].mean() < ls[0].mean() + 0.05
