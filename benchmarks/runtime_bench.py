@@ -15,19 +15,52 @@ Two claims of the unified runtime (DESIGN.md §9), measured:
 
 Oracle (jnp) kernel path on CPU, like the other benches — interpret-mode
 Pallas timing is correctness-grade only (see ``lm_bench.kernel_vs_einsum``).
+
+The sharded section (``python -m benchmarks.runtime_bench --devices N
+--json BENCH_runtime_sharded.json``) runs the SAME interleaved session on
+an N-way forced-host-device mesh and on its 1-device same-layout twin,
+reporting tenant-rounds/s for both plus the twin-parity max-abs-diff
+(must be 0.0 — DESIGN.md §10). Forced CPU "devices" share the same cores,
+so the ratio measures dispatch/overlap overhead, not real DP speedup; the
+numbers are honest about that.
 """
 
 from __future__ import annotations
+
+# The sharded section needs the forced device count set BEFORE the first
+# jax import (the dryrun.py/fleet.py trick), so peek at argv when invoked
+# as a script.
+import os
+import sys
+
+def _peek_devices(argv: list[str]) -> str | None:
+    for i, arg in enumerate(argv):
+        if arg == "--devices" and i + 1 < len(argv):
+            return argv[i + 1]
+        if arg.startswith("--devices="):
+            return arg.split("=", 1)[1]
+    return None
+
+
+if __name__ == "__main__":
+    _n = _peek_devices(sys.argv)
+    if _n and "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={_n} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
 
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, reduce_config
 from repro.core import lm_skiplora as SL
 from repro.core.runtime import SessionRuntime, generate_grouped
 from repro.models.lm import init_lm
+from repro.runtime.sharding import make_mesh
 
 
 def _time(fn, repeats: int = 5) -> float:
@@ -130,3 +163,112 @@ def runtime_session(
         (f"runtime/{arch}/pool_MiB", rt2.pool.nbytes() / 2**20),
         (f"runtime/{arch}/adapt_epochs", float(adapt_epochs)),
     ]
+
+
+# ---------------------------------------------------------------------------
+# Sharded section: mesh-native session vs its 1-device same-layout twin
+# ---------------------------------------------------------------------------
+
+
+def runtime_sharded(
+    arch: str = "stablelm-1.6b",
+    *,
+    devices: int = 4,
+    n_per: int = 8,
+    seq: int = 16,
+    bpt: int = 4,
+    adapt_epochs: int = 2,
+    rounds: int = 2,
+    quick: bool = False,
+) -> list[tuple[str, float]]:
+    """One tenant per shard per device; the same event stream on the
+    N-device mesh and the 1-device twin with identical logical layout.
+    Twin parity (adapters) must be exactly 0.0."""
+    if quick:
+        adapt_epochs, rounds = 1, 1
+    n_tenants = devices
+    n_dev = min(devices, len(jax.devices()))
+    cfg = reduce_config(get_config(arch))
+    sl = SL.SkipLoRAConfig(rank=8, mode="full", cache_dtype="float32")
+    params = init_lm(jax.random.key(0), cfg)
+    tokens = jax.random.randint(
+        jax.random.key(1), (n_tenants, rounds * n_per, seq), 0, cfg.vocab_size
+    )
+    labels = jax.random.randint(
+        jax.random.key(2), (n_tenants, rounds * n_per, seq), 0, cfg.vocab_size
+    )
+
+    def session(n_devices: int):
+        mesh = make_mesh(
+            (n_devices,), ("data",), devices=jax.devices()[:n_devices]
+        )
+        rt = SessionRuntime(
+            cfg, sl, params, max_tenants=n_tenants,
+            samples_per_tenant=rounds * n_per, seq=seq, lr=1e-2,
+            use_kernel=False, mesh=mesh, placement_shards=devices,
+        )
+        t0 = time.perf_counter()
+        for rnd in range(rounds):
+            for t in range(n_tenants):
+                rt.ingest(f"u{t}", tokens[t, rnd * n_per:(rnd + 1) * n_per],
+                          labels[t, rnd * n_per:(rnd + 1) * n_per])
+            rt.adapt(epochs=adapt_epochs, batch_per_tenant=bpt,
+                     key=jax.random.key(3))
+        cold = time.perf_counter() - t0
+        # Warm adapt epochs only (the steady state the mesh buys).
+        t0 = time.perf_counter()
+        rt.adapt(epochs=adapt_epochs, batch_per_tenant=bpt)
+        warm = time.perf_counter() - t0
+        return rt, cold, warm
+
+    rt_mesh, cold_mesh, warm_mesh = session(n_dev)
+    rt_twin, cold_twin, warm_twin = session(1)
+    parity = max(
+        float(np.max(np.abs(
+            np.asarray(rt_mesh.tenant(f"u{t}").adapters[k])
+            - np.asarray(rt_twin.tenant(f"u{t}").adapters[k])
+        )))
+        for t in range(n_tenants) for k in ("A", "B")
+    )
+    return [
+        (f"runtime_sharded/{arch}/devices", float(n_dev)),
+        (f"runtime_sharded/{arch}/shards", float(devices)),
+        (f"runtime_sharded/{arch}/tenants", float(n_tenants)),
+        (f"runtime_sharded/{arch}/session_cold_s", cold_mesh),
+        (f"runtime_sharded/{arch}/adapt_warm_s", warm_mesh),
+        (f"runtime_sharded/{arch}/adapt_warm_twin_1dev_s", warm_twin),
+        (f"runtime_sharded/{arch}/adapt_tenants_per_s", n_tenants / warm_mesh),
+        (f"runtime_sharded/{arch}/twin_parity_max_abs_diff", parity),
+    ]
+
+
+def main(argv=None) -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="BENCH_runtime_sharded.json")
+    args = ap.parse_args(argv)
+    if len(jax.devices()) < args.devices:
+        # The argv peek above must have forced the host device count; a
+        # 1-device run would make the twin parity check vacuous.
+        raise SystemExit(
+            f"need {args.devices} devices, have {len(jax.devices())} "
+            "(invoke as `python -m benchmarks.runtime_bench --devices N`)"
+        )
+    rows = runtime_sharded(devices=args.devices, quick=args.quick)
+    for name, val in rows:
+        print(f"{name},{val}")
+    payload = {name: val for name, val in rows}
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {args.json}")
+    parity = payload[[k for k in payload if k.endswith("twin_parity_max_abs_diff")][0]]
+    if parity != 0.0:
+        raise SystemExit(f"sharded/twin parity broken: {parity:.3e}")
+
+
+if __name__ == "__main__":
+    main()

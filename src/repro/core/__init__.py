@@ -11,7 +11,9 @@
 - ``batch_plan``: the one epoch batch planner (wrap/mask tail semantics)
   behind every trainer's index matrices.
 - ``runtime``: the session runtime — serve + ingest + fleet adapt
-  interleaved over one pool/engine/compiled-fn cache (DESIGN.md §9).
+  interleaved over one pool/engine/compiled-fn cache (DESIGN.md §9),
+  mesh-native since §10: sessions shard tenants over an explicit device
+  mesh and restart from event-boundary checkpoints.
 """
 
 import jax

@@ -80,6 +80,7 @@ class AdapterPool:
         *,
         compress: Optional[str] = None,
         dtype=jnp.float32,
+        device=None,
     ):
         if n_slots < 2:
             raise ValueError("need >= 2 slots (slot 0 is pinned to zeros)")
@@ -88,16 +89,25 @@ class AdapterPool:
         self.n_slots = n_slots
         self.rank = rank
         self.compress = compress
+        #: Device the data plane is committed to (``None``: jax default).
+        #: A mesh-native session commits each shard's pool to that shard's
+        #: device, so serve/adapt dispatches against it stay device-local.
+        self.device = device
+
+        def z(shape, dt):
+            arr = jnp.zeros(shape, dt)
+            return jax.device_put(arr, device) if device is not None else arr
+
         l, d, r = cfg.n_layers, cfg.d_model, rank
         self._shape_a, self._shape_b = (l, d, r), (l, r, d)
         if compress == "int8":
-            self._qa = jnp.zeros((n_slots, l, d, r), jnp.int8)
-            self._sa = jnp.zeros((n_slots, l, d), jnp.float32)
-            self._qb = jnp.zeros((n_slots, l, r, d), jnp.int8)
-            self._sb = jnp.zeros((n_slots, l, r), jnp.float32)
+            self._qa = z((n_slots, l, d, r), jnp.int8)
+            self._sa = z((n_slots, l, d), jnp.float32)
+            self._qb = z((n_slots, l, r, d), jnp.int8)
+            self._sb = z((n_slots, l, r), jnp.float32)
         else:
-            self._a = jnp.zeros((n_slots, l, d, r), dtype)
-            self._b = jnp.zeros((n_slots, l, r, d), dtype)
+            self._a = z((n_slots, l, d, r), dtype)
+            self._b = z((n_slots, l, r, d), dtype)
         # Slot 0 never enters the LRU / free list: it is the zero tenant.
         self._lru: OrderedDict[Any, int] = OrderedDict()
         self._free: list[int] = list(range(n_slots - 1, 0, -1))
@@ -335,11 +345,232 @@ class AdapterPool:
                 raise ValueError(
                     f"pool array {name}: {arr.shape} != {cur.shape}"
                 )
+            if self.device is not None:
+                arr = jax.device_put(arr, self.device)
             setattr(self, "_" + name.lower(), arr)
         self._lru = OrderedDict((t, int(s)) for t, s in table["lru"])
         self._free = [int(s) for s in table["free"]]
         self._pinned = set(table.get("pinned", ()))
         self.version += 1
+
+
+# ---------------------------------------------------------------------------
+# Mesh-native pool: slot -> shard placement over per-shard AdapterPools
+# ---------------------------------------------------------------------------
+
+
+class ShardedAdapterPool:
+    """Adapter registry sharded along the mesh's ``data`` axis by tenant.
+
+    Owns the slot->shard placement rule of the mesh-native session
+    (DESIGN.md §10): every tenant is *placed* on a logical shard the first
+    time the session sees it (balanced round-robin — the shard with the
+    fewest placed tenants, lowest index on ties), and its pool slot, cache
+    partition, training state, and serve rows live on that shard for the
+    rest of the session. Each logical shard holds its own fixed-capacity
+    ``AdapterPool`` committed to the shard's physical device, so grouped
+    serve/adapt batches route rows to the shard holding their slot and
+    never gather adapters across devices.
+
+    Placement is *logical*: the number of shards is a session-layout
+    property, fixed at construction and carried through checkpoints, while
+    the physical device of shard ``s`` is ``devices[s % len(devices)]`` —
+    which is what makes an elastic restore onto a different device count
+    bitwise (same group traces, different placement only).
+
+    With ``n_shards == 1`` every delegating method is exactly the wrapped
+    single ``AdapterPool`` — the PR 4 serving path, bitwise.
+    """
+
+    def __init__(
+        self,
+        n_slots_per_shard: int,
+        cfg: ModelConfig,
+        rank: int,
+        *,
+        n_shards: int = 1,
+        devices: Optional[list] = None,
+        compress: Optional[str] = None,
+        dtype=jnp.float32,
+    ):
+        if n_shards < 1:
+            raise ValueError(f"need >= 1 shard, got {n_shards}")
+        devs = list(devices) if devices else [None]
+        self.n_shards = n_shards
+        self.compress = compress
+        self.shards = [
+            AdapterPool(
+                n_slots_per_shard, cfg, rank, compress=compress, dtype=dtype,
+                device=devs[s % len(devs)],
+            )
+            for s in range(n_shards)
+        ]
+        self._placement: dict[Any, int] = {}
+
+    # -- placement (the rule this class owns) --------------------------------
+
+    def place(self, tenant) -> int:
+        """Assign (or return) the tenant's logical shard: balanced
+        round-robin at first sight, sticky afterwards."""
+        s = self._placement.get(tenant)
+        if s is None:
+            counts = [0] * self.n_shards
+            for sh in self._placement.values():
+                counts[sh] += 1
+            s = min(range(self.n_shards), key=lambda i: (counts[i], i))
+            self._placement[tenant] = s
+        return s
+
+    def shard_of(self, tenant) -> int:
+        """The tenant's placed shard (``None`` -> shard 0, the zero slot)."""
+        if tenant is None:
+            return 0
+        s = self._placement.get(tenant)
+        if s is None:
+            raise KeyError(f"tenant {tenant!r} has no shard placement")
+        return s
+
+    def unplace(self, tenant) -> None:
+        self._placement.pop(tenant, None)
+
+    def placement(self) -> dict:
+        return dict(self._placement)
+
+    def route(self, tenants) -> list[tuple[list[int], list]]:
+        """Split a serve batch by slot shard: returns, per shard, the
+        (original row positions, tenants) of the rows it owns. Base rows
+        (``None``) ride shard 0's pinned zero slot."""
+        out: list[tuple[list[int], list]] = [([], []) for _ in range(self.n_shards)]
+        for pos, t in enumerate(tenants):
+            rows, subs = out[self.shard_of(t)]
+            rows.append(pos)
+            subs.append(t)
+        return out
+
+    # -- single-shard delegation (the PR 4 surface) ---------------------------
+
+    def _only(self) -> AdapterPool:
+        if self.n_shards != 1:
+            raise RuntimeError(
+                "multi-shard pool: use route()/shard_pools(s)/lookup_local()"
+            )
+        return self.shards[0]
+
+    def pools(self) -> dict[str, jax.Array]:
+        return self._only().pools()
+
+    def lookup(self, tenants) -> jax.Array:
+        return self._only().lookup(tenants)
+
+    def shard_pools(self, s: int) -> dict[str, jax.Array]:
+        return self.shards[s].pools()
+
+    def lookup_local(self, s: int, tenants) -> jax.Array:
+        """Shard-local slot indices for a routed sub-batch."""
+        return self.shards[s].lookup(tenants)
+
+    # -- registry surface (routed by placement) -------------------------------
+
+    def has(self, tenant) -> bool:
+        s = self._placement.get(tenant)
+        return s is not None and self.shards[s].has(tenant)
+
+    def tenants(self) -> list:
+        return [t for p in self.shards for t in p.tenants()]
+
+    def __len__(self) -> int:
+        return sum(len(p) for p in self.shards)
+
+    def nbytes(self) -> int:
+        return sum(p.nbytes() for p in self.shards)
+
+    @property
+    def version(self) -> int:
+        """Monotone under every shard's slot-map change (memo key)."""
+        return sum(p.version for p in self.shards)
+
+    @property
+    def stats(self) -> PoolStats:
+        agg = PoolStats()
+        for p in self.shards:
+            agg.registrations += p.stats.registrations
+            agg.evictions += p.stats.evictions
+            agg.lookups += p.stats.lookups
+            agg.misses += p.stats.misses
+        return agg
+
+    def register(self, tenant, adapters: Params) -> int:
+        return self.shards[self.place(tenant)].register(tenant, adapters)
+
+    def register_many(self, tenants, stacked: Params) -> list[int]:
+        """Batched write-back, routed by placement. The mesh-native adapt
+        path calls this with a same-shard group (one donated scatter on that
+        shard's device); mixed groups split into one write per shard."""
+        tenants = list(tenants)
+        by_shard: dict[int, list[int]] = {}
+        for i, t in enumerate(tenants):
+            by_shard.setdefault(self.place(t), []).append(i)
+        slots = [0] * len(tenants)
+        for s, rows in by_shard.items():
+            if len(rows) == len(tenants):
+                sub = stacked  # same-shard fast path: no gather
+            else:
+                # Route each shard's rows to ITS device: the source stack
+                # may be committed elsewhere, and a committed-input scatter
+                # into another shard's pool would be rejected by jit.
+                ridx = jnp.asarray(rows)
+                sub = jax.tree.map(lambda x: x[ridx], stacked)
+                if self.shards[s].device is not None:
+                    sub = jax.device_put(sub, self.shards[s].device)
+            for i, slot in zip(rows, self.shards[s].register_many(
+                    [tenants[i] for i in rows], sub)):
+                slots[i] = slot
+        return slots
+
+    def evict(self, tenant) -> None:
+        self.shards[self.shard_of(tenant)].evict(tenant)
+
+    def pin(self, tenant) -> None:
+        self.shards[self.shard_of(tenant)].pin(tenant)
+
+    def unpin(self, tenant) -> None:
+        s = self._placement.get(tenant)
+        if s is not None:
+            self.shards[s].unpin(tenant)
+
+    def pinned(self) -> set:
+        return set().union(*(p.pinned() for p in self.shards))
+
+    def touch(self, tenants) -> None:
+        for t in tenants:
+            if t is not None and t in self._placement:
+                self.shards[self._placement[t]].touch([t])
+
+    # -- session state (checkpoint plane) ------------------------------------
+
+    def state_arrays(self) -> dict[str, dict[str, jax.Array]]:
+        """Per-shard data planes, keyed ``"s<shard>"`` (checkpoint layout)."""
+        return {f"s{i}": p.pools() for i, p in enumerate(self.shards)}
+
+    def slot_table(self) -> dict:
+        """JSON-able control plane: the placement map + per-shard tables."""
+        return {
+            "n_shards": self.n_shards,
+            "placement": [[t, s] for t, s in self._placement.items()],
+            "shards": [p.slot_table() for p in self.shards],
+        }
+
+    def load_state(self, arrays: dict, table: dict) -> None:
+        if int(table["n_shards"]) != self.n_shards:
+            raise ValueError(
+                f"checkpoint has {table['n_shards']} pool shards, "
+                f"this session is laid out for {self.n_shards} "
+                "(logical shard count is a session-layout property; "
+                "elastic restarts change devices, not shards)"
+            )
+        self._placement = {t: int(s) for t, s in table["placement"]}
+        for i, p in enumerate(self.shards):
+            p.load_state(arrays[f"s{i}"], table["shards"][i])
 
 
 def grouped_skip_sum(

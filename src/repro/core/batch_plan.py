@@ -71,17 +71,21 @@ def fleet_index_matrix(
     seed: int = 0,
     partitions: Optional[Sequence[int]] = None,
     partition_stride: Optional[int] = None,
+    streams: Optional[Sequence[int]] = None,
     tail: str = "wrap",
 ) -> np.ndarray | tuple[np.ndarray, np.ndarray]:
     """(steps, N * bpt) global sample ids of a tenant-contiguous fleet epoch.
 
     Column block g belongs to the tenant in fleet position g, who owns cache
     partition ``partitions[g]`` (default: position g owns partition g, the
-    offline ``fleet_finetune`` convention). Each partition has its own RNG
-    stream (``seed + partition``), so a tenant sees the same visitation
-    order it would training alone regardless of who else is in the fleet —
-    the session runtime relies on this when an ``adapt`` group is a subset
-    (or reordering) of the ingested tenants.
+    offline ``fleet_finetune`` convention). Each tenant has its own RNG
+    stream (``seed + streams[g]``, default ``streams = partitions``), so a
+    tenant sees the same visitation order it would training alone regardless
+    of who else is in the fleet — the session runtime relies on this when an
+    ``adapt`` group is a subset (or reordering) of the ingested tenants.
+    Sharded sessions split stream from partition: the stream follows the
+    tenant's *global* partition id (so a re-sharded session replays the same
+    orders) while ``partitions`` offsets into the shard-local id space.
 
     ``samples_per_tenant`` is the *visited fill* (the rows each tenant has
     actually ingested this epoch); ``partition_stride`` is the *allocated*
@@ -99,9 +103,12 @@ def fleet_index_matrix(
     parts = list(partitions) if partitions is not None else list(range(n_tenants))
     if len(parts) != n_tenants:
         raise ValueError(f"{len(parts)} partitions for {n_tenants} tenants")
+    strm = list(streams) if streams is not None else parts
+    if len(strm) != n_tenants:
+        raise ValueError(f"{len(strm)} streams for {n_tenants} tenants")
     cols, masks = [], []
-    for part in parts:
-        perm = epoch_permutation(seed + part, epoch, samples_per_tenant)
+    for part, stream in zip(parts, strm):
+        perm = epoch_permutation(seed + stream, epoch, samples_per_tenant)
         planned = index_matrix(perm, batch_per_tenant, tail=tail)
         if tail == "mask":
             planned, valid = planned

@@ -169,23 +169,29 @@ class TieredCacheEngine:
         hbm_budget_bytes: Optional[int] = None,
         directory: Optional[str] = None,
         compress: Optional[str] = None,
+        device=None,
     ):
         if (capacity is None) == (hbm_budget_bytes is None):
             raise ValueError("pass exactly one of capacity / hbm_budget_bytes")
         self.num_samples = num_samples
         self.layout = {n: (tuple(s), jnp.dtype(d)) for n, (s, d) in layout.items()}
         self.compress = compress
+        #: Device the HBM tier is committed to (``None``: jax default). A
+        #: mesh-native session gives every shard its own engine committed to
+        #: the shard's device, so cached adapt dispatches never gather rows
+        #: across devices.
+        self.device = device
         self._storage = storage_layout(self.layout, compress)
         if capacity is None:
             capacity = max(1, hbm_budget_bytes // self.row_nbytes())
         self.capacity = min(int(capacity), num_samples)
 
         slots = {
-            name: jnp.zeros((self.capacity,) + shape, dtype)
+            name: self._commit(jnp.zeros((self.capacity,) + shape, dtype))
             for name, (shape, dtype) in self._storage.items()
         }
         self._device = SkipCache(
-            slots=slots, valid=jnp.zeros((self.capacity,), jnp.bool_)
+            slots=slots, valid=self._commit(jnp.zeros((self.capacity,), jnp.bool_))
         )
         self._host = (
             DiskHostTier(directory, self._storage)
@@ -200,6 +206,9 @@ class TieredCacheEngine:
         self._prefetch_thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
         self.stats = CacheStats()
+
+    def _commit(self, arr: jax.Array) -> jax.Array:
+        return jax.device_put(arr, self.device) if self.device is not None else arr
 
     # -- footprint ----------------------------------------------------------
 
@@ -479,10 +488,12 @@ class TieredCacheEngine:
         (logical layout). This is the scan fast path: when the whole set fits
         HBM, epochs run as one fused dispatch over this pytree."""
         slots = {
-            name: jnp.zeros((self.num_samples,) + shape, dtype)
+            name: self._commit(jnp.zeros((self.num_samples,) + shape, dtype))
             for name, (shape, dtype) in self.layout.items()
         }
-        out = SkipCache(slots=slots, valid=jnp.zeros((self.num_samples,), jnp.bool_))
+        out = SkipCache(
+            slots=slots, valid=self._commit(jnp.zeros((self.num_samples,), jnp.bool_))
+        )
         ids = sorted(self._present)
         for lo in range(0, len(ids), max(1, self.capacity)):
             chunk = ids[lo : lo + max(1, self.capacity)]

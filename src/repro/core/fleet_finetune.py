@@ -31,7 +31,11 @@ N scan dispatches per epoch, N optimizer states marched separately — one
     via one batched donated write (``AdapterPool.register_many``).
 
 The tenant axis is embarrassingly parallel (the backbone is frozen and
-replicated), which is what ``launch/fleet.py`` exploits with ``shard_map``.
+replicated), which is what the mesh-native ``SessionRuntime`` exploits:
+tenants place onto logical shards and every (trajectory, shard) group's
+cached epochs dispatch on that shard's device (DESIGN.md §10) — the one
+multi-device fine-tuning path since the bespoke ``shard_map`` launcher
+collapsed into it.
 """
 
 from __future__ import annotations
@@ -270,8 +274,8 @@ def make_fleet_cached_epoch(
 ):
     """Whole fleet cached epoch as one ``lax.scan`` dispatch: cache gathers
     + grouped adapter steps, zero backbone compute, every tenant advanced
-    per step. ``jit=False`` returns the raw function for ``shard_map``
-    bodies (``launch/fleet.py``), where jit wraps the outer sharded call.
+    per step. ``jit=False`` returns the raw function for callers that wrap
+    the epoch themselves (e.g. a ``shard_map`` body).
 
     epoch: (params, stacked, opt_state, cache, idx_mat, row_tenant)
         -> (stacked, opt_state, losses (steps, N))

@@ -36,6 +36,28 @@ and processes an interleaved event stream:
 Batch planning goes through ``core.batch_plan`` with explicit tenant
 partitions, so an ``adapt`` group that is a subset or reordering of the
 ingested tenants still replays each tenant's own RNG stream.
+
+Since the mesh-native refactor (DESIGN.md §10) every session is
+constructed over an explicit device ``Mesh``:
+
+  - a 1-device mesh (the default) reproduces the single-device session
+    *bitwise* — the sharded paths collapse to the PR 4 code path;
+  - on an N-way ``data`` axis the stacked adapter pool, optimizer moments,
+    and skip-cache partitions shard **by tenant**: ``ShardedAdapterPool``
+    owns the slot->shard placement, each logical shard's pool + cache
+    engine + backbone replica is committed to its physical device, and
+    serve/adapt batches route rows to the shard holding their slot;
+  - ``adapt`` groups tenants by (trajectory, shard) and dispatches each
+    group's fused epochs entirely on its shard — the same compiled entries
+    as the 1-device path, with committed inputs, so there is never a
+    cross-device gather of cache rows or adapter grads, and moving a group
+    between devices is *bitwise free* (measured; this is why the sharded
+    session hand-rolls its SPMD instead of using ``shard_map``, whose
+    repartitioned programs drift at ~1e-6 — see §10);
+  - the logical shard count (``placement_shards``) is a session-*layout*
+    property carried through checkpoints: an elastic restart restores onto
+    however many devices survive (shard ``s`` -> ``devices[s % n]``) and
+    continues bitwise.
 """
 
 from __future__ import annotations
@@ -52,9 +74,16 @@ from repro.core import donate_argnums
 from repro.core import batch_plan
 from repro.core import fleet_finetune as FF
 from repro.core import lm_skiplora as SL
-from repro.core.adapter_pool import AdapterPool
-from repro.core.cache_engine import TieredCacheEngine
+from repro.core.adapter_pool import ShardedAdapterPool
+from repro.core.cache_engine import CacheStats, TieredCacheEngine
 from repro.models.config import ModelConfig
+from repro.runtime.sharding import (
+    make_mesh,
+    replicate_backbone,
+    session_devices,
+    session_param_specs,
+    specs_all_replicated,
+)
 from repro.models.lm import (
     decode_scan,
     ingest_prefill,
@@ -274,16 +303,29 @@ class TenantState:
 
 
 class SessionRuntime:
-    """One session engine for serve + ingest + adapt over a shared pool.
+    """One session engine for serve + ingest + adapt over a shared pool,
+    constructed over an explicit device mesh.
 
     ``max_tenants`` bounds the cache partitions (``samples_per_tenant``
     rows each, global id = partition * samples_per_tenant + local id — the
     PR 3 fleet convention, so offline and interleaved training address
-    identical cache rows). The pool defaults to ``max_tenants + 1`` slots
-    (slot 0 pinned zero); the engine to fully HBM-resident — pass
+    identical cache rows). The pool defaults to ``max_tenants/shards + 1``
+    slots per shard (slot 0 pinned zero, ``pool_slots`` overrides the
+    per-shard count); the engine to fully HBM-resident — pass
     ``cache_capacity`` / ``hbm_budget_bytes`` to force tiered placement,
     which flips ``adapt`` from the fused-scan epoch to the streaming
     prefetch path (DESIGN.md §9 path table).
+
+    ``mesh`` (default: a 1-device ``("data",)`` mesh — today's behaviour,
+    bitwise) supplies the physical devices; ``placement_shards`` fixes the
+    *logical* shard count (default: the mesh's device count). Partition
+    ``p`` belongs to logical shard ``p % placement_shards``, logical shard
+    ``s`` lives on ``devices[s % n_devices]`` — so a checkpoint restored
+    onto a different device count keeps its layout, its group traces, and
+    therefore its trajectory, bitwise (DESIGN.md §10). Backbone placement
+    is derived from the ``runtime.sharding`` rule table
+    (``session_param_specs``): all-replicated on a data-only mesh, realised
+    as per-shard committed replicas.
     """
 
     def __init__(
@@ -304,13 +346,15 @@ class SessionRuntime:
         cache_dir: Optional[str] = None,
         use_kernel: bool = True,
         seed: int = 0,
+        mesh=None,
+        placement_shards: Optional[int] = None,
     ):
         if sl.mode not in ("full", "int8"):
             raise ValueError(
                 f"the session runtime trains fleet modes 'full'/'int8', "
                 f"not {sl.mode!r}"
             )
-        self.cfg, self.sl, self.params = cfg, sl, params
+        self.cfg, self.sl = cfg, sl
         self.max_tenants = max_tenants
         self.samples_per_tenant = samples_per_tenant
         self.seq = seq
@@ -319,28 +363,99 @@ class SessionRuntime:
         self.optimizer = optimizer if optimizer is not None else adamw(lr)
         self._opt_key = ("adamw", lr) if optimizer is None else ("custom", id(optimizer))
 
-        num_samples = max_tenants * samples_per_tenant
-        if cache_capacity is None and hbm_budget_bytes is None:
-            cache_capacity = num_samples  # fully resident: fused-scan adapt
-        self.engine = TieredCacheEngine(
-            num_samples,
-            SL.lm_cache_layout(cfg, sl, seq),
-            capacity=cache_capacity,
-            hbm_budget_bytes=hbm_budget_bytes,
-            directory=cache_dir,
+        # -- mesh + logical shard layout ------------------------------------
+        if mesh is None:
+            mesh = make_mesh((1,), ("data",), devices=jax.devices()[:1])
+        self.mesh = mesh
+        self.devices = session_devices(mesh)
+        self.n_shards = (
+            int(placement_shards) if placement_shards is not None
+            else len(self.devices)
         )
-        self.pool = AdapterPool(
-            pool_slots if pool_slots is not None else max_tenants + 1,
-            cfg, sl.rank, compress=pool_compress,
+        if self.n_shards < 1:
+            raise ValueError(f"placement_shards {self.n_shards} < 1")
+        if max_tenants % self.n_shards:
+            raise ValueError(
+                f"max_tenants {max_tenants} must divide over "
+                f"{self.n_shards} shards"
+            )
+        self._shard_device = [
+            self.devices[s % len(self.devices)] for s in range(self.n_shards)
+        ]
+        # Backbone placement from the runtime.sharding rule table: on a
+        # session mesh every AxisRules-derived spec resolves to replication
+        # (session_devices above already rejected >1 non-data axes), which
+        # replicate_backbone realises as one committed replica per device.
+        assert specs_all_replicated(session_param_specs(params, mesh))
+        replicas = replicate_backbone(params, self.devices)
+        self._shard_params = [
+            replicas[s % len(self.devices)] for s in range(self.n_shards)
+        ]
+        self.params = self._shard_params[0]
+
+        # -- per-shard engines, pools, partitions ---------------------------
+        tenants_per_shard = max_tenants // self.n_shards
+        shard_samples = tenants_per_shard * samples_per_tenant
+        if cache_capacity is None and hbm_budget_bytes is None:
+            shard_capacity = shard_samples  # fully resident: fused-scan adapt
+        elif cache_capacity is not None:
+            shard_capacity = max(1, cache_capacity // self.n_shards)
+        else:
+            shard_capacity = None
+        shard_budget = (
+            None if hbm_budget_bytes is None
+            else max(1, hbm_budget_bytes // self.n_shards)
+        )
+        layout = SL.lm_cache_layout(cfg, sl, seq)
+        self.engines = [
+            TieredCacheEngine(
+                shard_samples,
+                layout,
+                capacity=shard_capacity,
+                hbm_budget_bytes=shard_budget,
+                directory=(
+                    cache_dir if cache_dir is None or self.n_shards == 1
+                    else f"{cache_dir}/shard_{s}"
+                ),
+                device=self._shard_device[s],
+            )
+            for s in range(self.n_shards)
+        ]
+        self.engine = self.engines[0]  # 1-shard alias (the PR 4 surface)
+        self.pool = ShardedAdapterPool(
+            pool_slots if pool_slots is not None else tenants_per_shard + 1,
+            cfg, sl.rank, n_shards=self.n_shards,
+            devices=self._shard_device, compress=pool_compress,
         )
         self._tenants: dict[Any, TenantState] = {}
-        self._free_partitions = list(range(max_tenants - 1, -1, -1))
-        self._export: Optional[Any] = None  # adapt's scan-path cache view
-        #: (tenant tuple, pool.version) -> device idx array. Repeated serve
-        #: batches skip the per-call host->device slot-index transfer; any
-        #: slot-map change bumps pool.version and invalidates naturally.
+        #: Per-shard free cache partitions (global partition ids; partition
+        #: p belongs to shard p % n_shards). Popped smallest-first, like the
+        #: PR 4 single list.
+        self._free_partitions = [
+            [p for p in range(max_tenants - 1, -1, -1) if p % self.n_shards == s]
+            for s in range(self.n_shards)
+        ]
+        #: Per-shard adapt scan-path cache views (export_skipcache memo).
+        self._export: list[Optional[Any]] = [None] * self.n_shards
+        #: (shard, tenant tuple, shard version) -> device idx array.
+        #: Repeated serve batches skip the per-call host->device slot-index
+        #: transfer; any slot-map change bumps the version and invalidates.
         self._idx_cache: dict[tuple, jax.Array] = {}
         self.counters = Counter()
+
+    # -- shard arithmetic ----------------------------------------------------
+
+    def _shard_of_partition(self, partition: int) -> int:
+        return partition % self.n_shards
+
+    def _local_ids(self, partition: int, rows) -> jax.Array:
+        """Global partition + partition-local row ids -> shard-engine ids."""
+        local_part = partition // self.n_shards
+        return jnp.asarray(rows) + local_part * self.samples_per_tenant
+
+    def _global_id(self, shard: int, local_id: int) -> int:
+        part = (local_id // self.samples_per_tenant) * self.n_shards + shard
+        return part * self.samples_per_tenant + local_id % self.samples_per_tenant
 
     # -- tenant bookkeeping --------------------------------------------------
 
@@ -351,22 +466,29 @@ class SessionRuntime:
         return st
 
     def _add_tenant(self, tenant) -> TenantState:
-        if not self._free_partitions:
+        shard = self.pool.place(tenant)
+        if not self._free_partitions[shard]:
             raise RuntimeError(
-                f"session full: {self.max_tenants} cache partitions in use"
+                f"session full: all "
+                f"{self.max_tenants // self.n_shards} cache partitions of "
+                f"shard {shard} in use ({self.max_tenants} session-wide)"
             )
-        st = TenantState(partition=self._free_partitions.pop())
+        st = TenantState(partition=self._free_partitions[shard].pop())
         self._tenants[tenant] = st
         return st
 
     def release(self, tenant) -> None:
         """Drop a tenant's training state and cache partition (its pool slot
         — if any — stays registered but is unpinned, so normal LRU applies
-        again)."""
+        again; a slot-less tenant loses its shard placement too)."""
         st = self._tenants.pop(tenant)
-        self._free_partitions.append(st.partition)
+        self._free_partitions[self._shard_of_partition(st.partition)].append(
+            st.partition
+        )
         if self.pool.has(tenant):
             self.pool.unpin(tenant)
+        else:
+            self.pool.unplace(tenant)
 
     # -- events --------------------------------------------------------------
 
@@ -385,7 +507,11 @@ class SessionRuntime:
         the single-stack path when the whole batch is base traffic, the
         grouped (float/int8) path otherwise — always through the shared
         compiled-fn cache, so the runtime adds only a pool lookup over
-        calling ``generate``/``generate_grouped`` directly."""
+        calling ``generate``/``generate_grouped`` directly. On a
+        multi-shard session the batch additionally splits by slot shard:
+        each shard decodes its own rows against its local pool segment on
+        its own device (one async dispatch per shard, no cross-device
+        adapter gather), and the rows stitch back in order."""
         if len(tenants) != prompts.shape[0]:
             raise ValueError(
                 f"{len(tenants)} tenants for batch {prompts.shape[0]}"
@@ -397,24 +523,51 @@ class SessionRuntime:
                 temperature=temperature, rng=rng, unroll=unroll,
             )
         else:
-            key_ = (tuple(tenants), self.pool.version)
-            idx = self._idx_cache.get(key_)
-            if idx is None:
-                if len(self._idx_cache) > 256:
-                    self._idx_cache.clear()
-                idx = self._idx_cache[key_] = self.pool.lookup(tenants)
-            else:
-                self.pool.touch(tenants)  # recency still tracks traffic
             variant = "int8" if self.pool.compress == "int8" else "float"
             path = f"serve/grouped/{variant}"
-            toks = generate_grouped(
-                self.params, self.cfg, prompts, self.pool.pools(), idx,
-                max_new=max_new, temperature=temperature, rng=rng,
-                use_kernel=self.use_kernel, unroll=unroll,
-            )
+            if self.n_shards == 1:
+                toks = self._serve_shard(
+                    0, tenants, prompts, max_new=max_new,
+                    temperature=temperature, rng=rng, unroll=unroll,
+                )
+            else:
+                parts = []
+                for s, (rows, subs) in enumerate(self.pool.route(tenants)):
+                    if not rows:
+                        continue
+                    sub_rng = None if rng is None else jax.random.fold_in(rng, s)
+                    parts.append((rows, self._serve_shard(
+                        s, subs, prompts[np.asarray(rows)], max_new=max_new,
+                        temperature=temperature, rng=sub_rng, unroll=unroll,
+                    )))
+                    self.counters["serve/shard_dispatches"] += 1
+                out = np.zeros((len(tenants), max_new), np.int32)
+                for rows, sub_toks in parts:  # dispatched above, sync here
+                    out[np.asarray(rows)] = np.asarray(sub_toks)
+                toks = jnp.asarray(out)
         self.counters[path] += 1
         self.counters["serve/tokens"] += int(toks.size)
         return toks
+
+    def _serve_shard(
+        self, s: int, tenants, prompts, *, max_new, temperature, rng, unroll
+    ) -> jax.Array:
+        """Grouped decode of one shard's rows against its pool segment (on
+        a 1-shard session this IS the PR 4 grouped path, bitwise)."""
+        key_ = (s, tuple(tenants), self.pool.shards[s].version)
+        idx = self._idx_cache.get(key_)
+        if idx is None:
+            if len(self._idx_cache) > 256:
+                self._idx_cache.clear()
+            idx = self._idx_cache[key_] = self.pool.lookup_local(s, tenants)
+        else:
+            self.pool.touch(tenants)  # recency still tracks traffic
+        return generate_grouped(
+            self._shard_params[s], self.cfg, prompts,
+            self.pool.shard_pools(s), idx,
+            max_new=max_new, temperature=temperature, rng=rng,
+            use_kernel=self.use_kernel, unroll=unroll,
+        )
 
     def ingest(self, tenant, tokens: jax.Array, labels: jax.Array) -> jax.Array:
         """Populate-phase forward for new on-device samples: writes the
@@ -436,19 +589,20 @@ class SessionRuntime:
             )
         if st is None:
             st = self._add_tenant(tenant)
+        s = self._shard_of_partition(st.partition)
         who = [tenant if self.pool.has(tenant) else None] * b
-        idx = self.pool.lookup(who)
+        idx = self.pool.lookup_local(s, who)
         logits, acts, y_base = _ingest_fn(self.cfg, self.use_kernel)(
-            self.params, tokens, self.pool.pools(), idx
+            self._shard_params[s], tokens, self.pool.shard_pools(s), idx
         )
         values = SL._encode_acts(acts, None, self.sl)
         values["y_base"] = y_base
         values["labels"] = labels
-        ids = np.arange(st.n_ingested, st.n_ingested + b) + (
-            st.partition * self.samples_per_tenant
+        ids = self._local_ids(
+            st.partition, np.arange(st.n_ingested, st.n_ingested + b)
         )
-        self.engine.write(jnp.asarray(ids), values)
-        self._export = None  # new rows: invalidate adapt's exported view
+        self.engines[s].write(ids, values)
+        self._export[s] = None  # new rows: invalidate adapt's exported view
         st.n_ingested += b
         self.counters["ingest/rows"] += b
         return logits
@@ -472,8 +626,13 @@ class SessionRuntime:
         tenant), and the planner replays each tenant's own RNG stream, so a
         fresh session's first ``adapt`` reproduces the offline trainer
         bitwise on the kernel path. Tenants are grouped by (optimizer step,
-        epoch position, partition fill) — only same-trajectory tenants can
-        share a stacked optimizer's scalar step counter.
+        epoch position, partition fill, shard) — only same-trajectory
+        tenants can share a stacked optimizer's scalar step counter, and
+        only same-shard tenants share a device. Every group's fused epochs
+        dispatch entirely on its shard's device (committed inputs, the same
+        compiled entries on every shard); groups on different shards
+        overlap through jax's async dispatch — losses are pulled to host
+        only after every group has been issued.
 
         Returns {"losses": {tenant: (epochs, steps) np.ndarray}, "groups":
         [group tenant lists], "path": "scan" | "stream"}.
@@ -504,42 +663,55 @@ class SessionRuntime:
         for t in order:
             st = self.tenant(t)
             groups.setdefault(
-                (st.step, st.epochs_done, st.n_ingested), []
+                (st.step, st.epochs_done, st.n_ingested,
+                 self._shard_of_partition(st.partition)), []
             ).append(t)
 
-        resident = self.engine.capacity >= self.engine.num_samples
-        losses: dict[Any, np.ndarray] = {}
-        for (step0, epoch0, spt), group in groups.items():
-            ls = self._adapt_group(
-                group, spt, epochs=epochs, epoch0=epoch0, step0=step0,
-                batch_per_tenant=batch_per_tenant, resident=resident,
+        pending = []
+        for (step0, epoch0, spt, shard), group in groups.items():
+            ls_epochs, path = self._adapt_group(
+                group, spt, shard, epochs=epochs, epoch0=epoch0, step0=step0,
+                batch_per_tenant=batch_per_tenant,
             )
+            pending.append((group, ls_epochs, path))
+        losses: dict[Any, np.ndarray] = {}
+        paths = set()
+        for group, ls_epochs, path in pending:  # sync AFTER all dispatches
+            ls = np.stack([np.asarray(l) for l in ls_epochs])
+            paths.add(path)
             for g, t in enumerate(group):
                 losses[t] = ls[:, :, g]
         self.counters["adapt/epochs"] += epochs * len(groups)
         return {
             "losses": losses,
             "groups": list(groups.values()),
-            "path": "scan" if resident else "stream",
+            "path": "stream" if "stream" in paths else "scan",
         }
 
     def _adapt_group(
-        self, group, spt, *, epochs, epoch0, step0, batch_per_tenant, resident
-    ) -> np.ndarray:
+        self, group, spt, shard, *, epochs, epoch0, step0, batch_per_tenant
+    ) -> tuple[list, str]:
+        """Dispatch one same-(trajectory, shard) group's cached epochs on
+        its shard. Returns the per-epoch (steps, N) loss arrays *without*
+        host synchronisation — the caller converts after every group is in
+        flight."""
         n = len(group)
+        device = self._shard_device[shard]
+        engine = self.engines[shard]
         states = [self.tenant(t) for t in group]
-        stacked = jax.tree.map(
+        stacked = jax.device_put(jax.tree.map(
             lambda *xs: jnp.stack(xs), *[st.adapters for st in states]
-        )
-        opt_state = OptState(
+        ), device)
+        opt_state = jax.device_put(OptState(
             step=jnp.asarray(step0, jnp.int32),
             mu=_maybe_stack([st.opt_mu for st in states]),
             nu=_maybe_stack([st.opt_nu for st in states]),
-        )
+        ), device)
         bpt = min(batch_per_tenant, spt)
         row_tenant = FF.fleet_row_tenant(n, bpt)
         partitions = [st.partition for st in states]
         fn_key = (self.cfg, self.sl, n, self.use_kernel, self._opt_key)
+        resident = engine.capacity >= engine.num_samples
 
         if resident:
             epoch_fn = compiled(
@@ -549,11 +721,11 @@ class SessionRuntime:
                     use_kernel=self.use_kernel, donate=False,
                 ),
             )
-            if self._export is None:
+            if self._export[shard] is None:
                 # Id-indexed view for the fused scan; reused across adapt
                 # calls until the next ingest writes new rows.
-                self._export = self.engine.export_skipcache()
-            cache = self._export
+                self._export[shard] = engine.export_skipcache()
+            cache = self._export[shard]
         else:
             step_fn = compiled(
                 ("fleet_cached_step", *fn_key),
@@ -564,24 +736,33 @@ class SessionRuntime:
             )
 
         all_losses = []
+        steps_per_epoch = 0
         for e in range(epochs):
+            # The batch plan offsets into the shard-local id space while the
+            # RNG stream follows the GLOBAL partition, so a re-sharded (or
+            # elastically restored) session replays identical orders.
             idx_mat = batch_plan.fleet_index_matrix(
-                epoch0 + e, n, spt, bpt, seed=self.seed, partitions=partitions,
+                epoch0 + e, n, spt, bpt, seed=self.seed,
+                partitions=[p // self.n_shards for p in partitions],
+                streams=partitions,
                 partition_stride=self.samples_per_tenant,
             )
+            steps_per_epoch = idx_mat.shape[0]
             if resident:
                 stacked, opt_state, ls = epoch_fn(
-                    self.params, stacked, opt_state, cache,
+                    self._shard_params[shard], stacked, opt_state, cache,
                     jnp.asarray(idx_mat), row_tenant,
                 )
             else:
                 stacked, opt_state, ls = FF.fleet_cached_epoch_via_engine(
-                    step_fn, self.params, stacked, opt_state, self.engine,
-                    idx_mat, row_tenant,
+                    step_fn, self._shard_params[shard], stacked, opt_state,
+                    engine, idx_mat, row_tenant,
                 )
-            all_losses.append(np.asarray(ls))
+            all_losses.append(ls)
 
-        step_after = int(opt_state.step)
+        # Deterministic from the plan — int(opt_state.step) would sync the
+        # device and serialise the per-shard groups we just overlapped.
+        step_after = step0 + steps_per_epoch * epochs
         for g, (t, st) in enumerate(zip(group, states)):
             st.adapters = jax.tree.map(lambda x: x[g], stacked)
             st.opt_mu = _maybe_slice(opt_state.mu, g)
@@ -591,49 +772,76 @@ class SessionRuntime:
         self.pool.register_many(group, stacked)
         for t in group:
             self.pool.pin(t)  # in-flight session state: never LRU-evicted
-        return np.stack(all_losses)
+        return all_losses, "scan" if resident else "stream"
 
     # -- introspection -------------------------------------------------------
 
+    def _engine_stats(self) -> CacheStats:
+        agg = CacheStats()
+        for eng in self.engines:
+            agg.hbm_hits += eng.stats.hbm_hits
+            agg.host_hits += eng.stats.host_hits
+            agg.staged_hits += eng.stats.staged_hits
+            agg.spills += eng.stats.spills
+            agg.writes += eng.stats.writes
+        return agg
+
     def stats(self) -> dict[str, float]:
         out = {f"runtime/{k}": float(v) for k, v in sorted(self.counters.items())}
-        out.update(dict(self.engine.stats.as_rows()))
+        eng = self._engine_stats()
+        out.update(dict(eng.as_rows()))
         out.update(dict(self.pool.stats.as_rows()))
-        out["cache_engine/hbm_hit_rate"] = self.engine.stats.hbm_hit_rate()
+        out["cache_engine/hbm_hit_rate"] = eng.hbm_hit_rate()
         return out
 
     # -- checkpoint plane ----------------------------------------------------
 
     def session_state(self) -> tuple[dict, dict]:
         """(arrays, meta) for ``checkpoint.save_runtime_session``: stacked
-        trained adapters + optimizer moments (tenant order in meta), the
-        pool's data plane + slot table, and every present skip-cache row in
-        logical layout. Tenant ids must be JSON-serialisable."""
+        trained adapters + optimizer moments (tenant order in meta), every
+        shard's pool data plane + the placement/slot tables, and every
+        present skip-cache row in logical layout under *global* ids (the
+        shard-local engines are a placement detail; the capture is
+        layout-addressed so a restore re-places it). Tenant ids must be
+        JSON-serialisable."""
         order = list(self._tenants)
         trained = [t for t in order if self._tenants[t].trained]
         arrays: dict[str, Any] = {}
         if trained:
             sts = [self._tenants[t] for t in trained]
+            # Trained tenants may live on different shards: stack on host.
             arrays["adapters"] = jax.tree.map(
-                lambda *xs: jnp.stack(xs), *[st.adapters for st in sts]
+                lambda *xs: jnp.asarray(np.stack([np.asarray(x) for x in xs])),
+                *[st.adapters for st in sts]
             )
-            mu = _maybe_stack([st.opt_mu for st in sts])
-            nu = _maybe_stack([st.opt_nu for st in sts])
+            mu = _maybe_stack_host([st.opt_mu for st in sts])
+            nu = _maybe_stack_host([st.opt_nu for st in sts])
             if mu is not None:
                 arrays["opt_mu"] = mu
             if nu is not None:
                 arrays["opt_nu"] = nu
-        arrays["pool"] = dict(self.pool.pools())
-        present = sorted(self.engine._present)
+        arrays["pool"] = self.pool.state_arrays()
+        rows: dict[int, dict[str, np.ndarray]] = {}
+        for s, eng in enumerate(self.engines):
+            pres = sorted(eng._present)
+            chunk = max(1, eng.capacity)
+            for lo in range(0, len(pres), chunk):
+                ids = pres[lo:lo + chunk]
+                # One device->host transfer per chunk array, then numpy
+                # slicing — never per-row syncs.
+                vals = {
+                    name: np.asarray(v)
+                    for name, v in eng.read(jnp.asarray(ids)).items()
+                }
+                for pos, lid in enumerate(ids):
+                    rows[self._global_id(s, lid)] = {
+                        name: v[pos] for name, v in vals.items()
+                    }
+        present = sorted(rows)
         if present:
-            chunk = max(1, self.engine.capacity)
-            parts = [
-                self.engine.read(jnp.asarray(present[lo:lo + chunk]))
-                for lo in range(0, len(present), chunk)
-            ]
             arrays["cache"] = {
-                name: jnp.concatenate([p[name] for p in parts])
-                for name in parts[0]
+                name: jnp.asarray(np.stack([rows[g][name] for g in present]))
+                for name in rows[present[0]]
             }
         meta = {
             "tenants": [
@@ -651,21 +859,26 @@ class SessionRuntime:
             "present": present,
             "layout": {"seq": self.seq, "rank": self.sl.rank,
                        "mode": self.sl.mode,
-                       "samples_per_tenant": self.samples_per_tenant},
+                       "samples_per_tenant": self.samples_per_tenant,
+                       "n_shards": self.n_shards},
         }
         return arrays, meta
 
     def load_session_state(self, arrays: dict, meta: dict) -> None:
         """Restore a ``session_state`` capture into this (fresh) runtime.
-        Geometry (config shapes, seq, partition layout) must match the
-        saving session; the engine re-places cache rows under ITS budget
-        (placement is policy, the bytes are identical)."""
+        Geometry (config shapes, seq, partition layout, logical shard
+        count) must match the saving session — the *mesh* need not: an
+        elastic restart restores the same logical layout onto however many
+        devices this runtime was built over, and the engines re-place the
+        cache rows under THEIR budgets (placement is policy, the bytes are
+        identical)."""
         if self._tenants:
             raise RuntimeError("restore requires a fresh runtime")
         lay = meta["layout"]
-        if (lay["seq"], lay["rank"], lay["mode"], lay["samples_per_tenant"]) != (
-            self.seq, self.sl.rank, self.sl.mode, self.samples_per_tenant
-        ):
+        saved = (lay["seq"], lay["rank"], lay["mode"],
+                 lay["samples_per_tenant"], int(lay.get("n_shards", 1)))
+        if saved != (self.seq, self.sl.rank, self.sl.mode,
+                     self.samples_per_tenant, self.n_shards):
             raise ValueError(f"session layout {lay} != runtime configuration")
         for ent in meta["tenants"]:
             st = TenantState(
@@ -675,7 +888,9 @@ class SessionRuntime:
                 step=int(ent["step"]),
             )
             self._tenants[ent["id"]] = st
-            self._free_partitions.remove(st.partition)
+            self._free_partitions[
+                self._shard_of_partition(st.partition)
+            ].remove(st.partition)
         for i, t in enumerate(meta["trained"]):
             st = self._tenants[t]
             st.adapters = jax.tree.map(lambda x: jnp.asarray(x)[i], arrays["adapters"])
@@ -685,21 +900,43 @@ class SessionRuntime:
                 st.opt_nu = jax.tree.map(lambda x: jnp.asarray(x)[i], arrays["opt_nu"])
         self.pool.load_state(arrays["pool"], meta["pool_table"])
         present = [int(i) for i in meta["present"]]
-        if present:
-            chunk = max(1, self.engine.capacity)
-            for lo in range(0, len(present), chunk):
-                ids = present[lo:lo + chunk]
+        by_shard: dict[int, list[tuple[int, int]]] = {}
+        for pos, gid in enumerate(present):
+            part = gid // self.samples_per_tenant
+            local = (part // self.n_shards) * self.samples_per_tenant + (
+                gid % self.samples_per_tenant
+            )
+            by_shard.setdefault(self._shard_of_partition(part), []).append(
+                (pos, local)
+            )
+        for s, entries in by_shard.items():
+            eng = self.engines[s]
+            chunk = max(1, eng.capacity)
+            for lo in range(0, len(entries), chunk):
+                sub = entries[lo:lo + chunk]
+                pos_idx = np.asarray([p for p, _ in sub])
                 vals = {
-                    name: jnp.asarray(arr)[lo:lo + chunk]
+                    name: jnp.asarray(np.asarray(arr)[pos_idx])
                     for name, arr in arrays["cache"].items()
                 }
-                self.engine.write(jnp.asarray(ids), vals)
+                eng.write(jnp.asarray([l for _, l in sub]), vals)
 
 
 def _maybe_stack(trees: list) -> Optional[Params]:
     if trees[0] is None:
         return None
     return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _maybe_stack_host(trees: list) -> Optional[Params]:
+    """Like ``_maybe_stack`` but via host memory — the checkpoint capture
+    stacks tenants from *different* shards, whose leaves are committed to
+    different devices."""
+    if trees[0] is None:
+        return None
+    return jax.tree.map(
+        lambda *xs: jnp.asarray(np.stack([np.asarray(x) for x in xs])), *trees
+    )
 
 
 def _maybe_slice(tree: Optional[Params], i: int) -> Optional[Params]:

@@ -25,18 +25,55 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _pad_rows(x: jax.Array, tm: int) -> tuple[jax.Array, int]:
-    m = x.shape[1]
-    pad = (-m) % tm
-    if pad:
-        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
-    return x, m
+# ---------------------------------------------------------------------------
+# Shared row-tiling helpers: every wrapper (float / int8, single / grouped,
+# forward / backward) pads the row axis to the kernel's TM tile and — for the
+# backwards — feeds the padded layout to ``skip_lora_bwd``. These four
+# operations used to be copied per variant; they live here once.
+# ---------------------------------------------------------------------------
+
+
+def _pad_axis(x: jax.Array, axis: int, tm: int = K.TM) -> jax.Array:
+    """Zero-pad ``axis`` up to a multiple of the kernel row tile."""
+    pad = (-x.shape[axis]) % tm
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pad_rows(x: jax.Array, tm: int = K.TM) -> tuple[jax.Array, int]:
+    """(L, M, D) -> tile-padded rows + the original row count."""
+    return _pad_axis(x, 1, tm), x.shape[1]
+
+
+def _pad_rows_int8(q: jax.Array, s: jax.Array) -> tuple[jax.Array, jax.Array, int]:
+    """int8 payload (L, M, D) + scales (L, M), padded together."""
+    return _pad_axis(q, 1), _pad_axis(s, 1), q.shape[1]
+
+
+def _dequant_rows(q: jax.Array, s: jax.Array) -> jax.Array:
+    """One-off dequantisation of int8 cache rows for the adapter backward —
+    the forwards never materialise this (dequant stays fused in-kernel)."""
+    return (q.astype(jnp.float32) * s[..., None]).astype(jnp.bfloat16)
+
+
+def _adapter_grads(
+    x: jax.Array, a: jax.Array, b: jax.Array, g: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Shared backward body: pad rows + cotangent, run the fused backward
+    kernel, cast grads to the adapter dtypes. x: (L, M, D); g: (M, D)."""
+    xp, m = _pad_rows(x)
+    gp = _pad_axis(g.astype(x.dtype), 0)
+    ga, gb = K.skip_lora_bwd(xp, a, b, gp, interpret=_interpret())
+    return ga.astype(a.dtype), gb.astype(b.dtype)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=())
 def _skip_lora_rows(x: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
     """x: (L, M, D) -> (M, D). Differentiable in (a, b); x treated as data."""
-    xp, m = _pad_rows(x, K.TM)
+    xp, m = _pad_rows(x)
     out = K.skip_lora_fwd(xp, a, b, interpret=_interpret())
     return out[:m]
 
@@ -47,12 +84,10 @@ def _fwd(x, a, b):
 
 def _bwd(res, g):
     x, a, b = res
-    xp, m = _pad_rows(x, K.TM)
-    gp = jnp.pad(g, ((0, (-m) % K.TM), (0, 0))).astype(x.dtype)
-    ga, gb = K.skip_lora_bwd(xp, a, b, gp, interpret=_interpret())
+    ga, gb = _adapter_grads(x, a, b, g)
     # Cached activations are frozen-backbone constants: zero cotangent
     # (symbolic; DCE'd when unused).
-    return jnp.zeros_like(x), ga.astype(a.dtype), gb.astype(b.dtype)
+    return jnp.zeros_like(x), ga, gb
 
 
 _skip_lora_rows.defvjp(_fwd, _bwd)
@@ -67,15 +102,6 @@ def skip_lora_fused(acts: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
     x = acts.reshape(l, bsz * s, d)
     out = _skip_lora_rows(x, a, b)
     return out.reshape(bsz, s, d)
-
-
-def _pad_rows_int8(q: jax.Array, s: jax.Array) -> tuple[jax.Array, jax.Array, int]:
-    m = q.shape[1]
-    pad = (-m) % K.TM
-    if pad:
-        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
-        s = jnp.pad(s, ((0, 0), (0, pad)))
-    return q, s, m
 
 
 @jax.custom_vjp
@@ -95,13 +121,10 @@ def _int8_bwd(res, g):
     q, s, a, b = res
     # Adapter grads need the dequantised activations once; the forward never
     # materialises them (dequant is fused), so this is the only bf16 copy.
-    x = (q.astype(jnp.float32) * s[..., None]).astype(jnp.bfloat16)
-    xp, m = _pad_rows(x, K.TM)
-    gp = jnp.pad(g, ((0, (-m) % K.TM), (0, 0))).astype(x.dtype)
-    ga, gb = K.skip_lora_bwd(xp, a, b, gp, interpret=_interpret())
+    ga, gb = _adapter_grads(_dequant_rows(q, s), a, b, g)
     # int8 payload / fp32 scales are cache constants: symbolic-zero cotangents.
     zeros_q = np.zeros(q.shape, jax.dtypes.float0)
-    return zeros_q, jnp.zeros_like(s), ga.astype(a.dtype), gb.astype(b.dtype)
+    return zeros_q, jnp.zeros_like(s), ga, gb
 
 
 _skip_lora_rows_int8.defvjp(_int8_fwd, _int8_bwd)
@@ -162,11 +185,21 @@ def _grouping_plan(idx: jax.Array, n_adapters: int, m: int):
     return dest_orig, tile_adapter, m_pad
 
 
+def _grouped_scatter(arr: jax.Array, dest: jax.Array, m_pad: int, axis: int) -> jax.Array:
+    """Scatter rows into the grouped padded layout along ``axis`` (padding
+    rows stay zero — they contribute zero output and are never gathered
+    back). Shared by every grouped forward and backward wrapper."""
+    shape = list(arr.shape)
+    shape[axis] = m_pad
+    zeros = jnp.zeros(tuple(shape), arr.dtype)
+    if axis == 0:
+        return zeros.at[dest].set(arr)
+    return zeros.at[:, dest].set(arr)
+
+
 def _grouped_rows(x: jax.Array, a_pool: jax.Array, b_pool: jax.Array, idx: jax.Array) -> jax.Array:
-    l, m, d = x.shape
-    n = a_pool.shape[0]
-    dest, tile_adapter, m_pad = _grouping_plan(idx, n, m)
-    xg = jnp.zeros((l, m_pad, d), x.dtype).at[:, dest].set(x)
+    dest, tile_adapter, m_pad = _grouping_plan(idx, a_pool.shape[0], x.shape[1])
+    xg = _grouped_scatter(x, dest, m_pad, 1)
     out = K.skip_lora_grouped_fwd(
         xg, a_pool, b_pool, tile_adapter, interpret=_interpret()
     )
@@ -177,10 +210,8 @@ def _grouped_rows_int8(
     x: jax.Array, qa: jax.Array, sa: jax.Array, qb: jax.Array, sb: jax.Array,
     idx: jax.Array,
 ) -> jax.Array:
-    l, m, d = x.shape
-    n = qa.shape[0]
-    dest, tile_adapter, m_pad = _grouping_plan(idx, n, m)
-    xg = jnp.zeros((l, m_pad, d), x.dtype).at[:, dest].set(x)
+    dest, tile_adapter, m_pad = _grouping_plan(idx, qa.shape[0], x.shape[1])
+    xg = _grouped_scatter(x, dest, m_pad, 1)
     out = K.skip_lora_grouped_fwd_int8(
         xg, qa, sa, qb, sb, tile_adapter, interpret=_interpret()
     )
@@ -254,15 +285,13 @@ def _grouped_train_fwd(x, a_pool, b_pool, idx):
 
 def _grouped_train_bwd(res, g):
     x, a_pool, b_pool, idx = res
-    l, m, d = x.shape
-    n = a_pool.shape[0]
-    dest, tile_adapter, m_pad = _grouping_plan(idx, n, m)
-    xg = jnp.zeros((l, m_pad, d), x.dtype).at[:, dest].set(x)
-    gg = jnp.zeros((m_pad, d), x.dtype).at[dest].set(g.astype(x.dtype))
+    dest, tile_adapter, m_pad = _grouping_plan(idx, a_pool.shape[0], x.shape[1])
+    xg = _grouped_scatter(x, dest, m_pad, 1)
+    gg = _grouped_scatter(g.astype(x.dtype), dest, m_pad, 0)
     ga, gb = K.skip_lora_grouped_bwd(
         xg, a_pool, b_pool, gg, tile_adapter, interpret=_interpret()
     )
-    live = _live_slot_mask(idx, n)
+    live = _live_slot_mask(idx, a_pool.shape[0])
     ga = _mask_slots(ga, live).astype(a_pool.dtype)
     gb = _mask_slots(gb, live).astype(b_pool.dtype)
     return (
@@ -281,11 +310,9 @@ def _grouped_rows_train_int8(
     q: jax.Array, s: jax.Array, a_pool: jax.Array, b_pool: jax.Array, idx: jax.Array
 ) -> jax.Array:
     """Raw-int8-activation rows -> (M, D) bf16; differentiable in the pools."""
-    l, m, d = q.shape
-    n = a_pool.shape[0]
-    dest, tile_adapter, m_pad = _grouping_plan(idx, n, m)
-    qg = jnp.zeros((l, m_pad, d), q.dtype).at[:, dest].set(q)
-    sg = jnp.zeros((l, m_pad), s.dtype).at[:, dest].set(s)
+    dest, tile_adapter, m_pad = _grouping_plan(idx, a_pool.shape[0], q.shape[1])
+    qg = _grouped_scatter(q, dest, m_pad, 1)
+    sg = _grouped_scatter(s, dest, m_pad, 1)
     out = K.skip_lora_grouped_fwd_actint8(
         qg, sg, a_pool, b_pool, tile_adapter, interpret=_interpret()
     )
@@ -300,8 +327,7 @@ def _grouped_train_int8_bwd(res, g):
     q, s, a_pool, b_pool, idx = res
     # The forward never materialises the dequantised rows (dequant is fused);
     # the adapter grads need them once — this is the only bf16 copy.
-    x = (q.astype(jnp.float32) * s[..., None]).astype(jnp.bfloat16)
-    _, ga, gb, _ = _grouped_train_bwd((x, a_pool, b_pool, idx), g)
+    _, ga, gb, _ = _grouped_train_bwd((_dequant_rows(q, s), a_pool, b_pool, idx), g)
     return (
         np.zeros(q.shape, jax.dtypes.float0),
         jnp.zeros_like(s),

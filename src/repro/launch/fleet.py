@@ -1,14 +1,15 @@
-"""Sharded fleet fine-tuning launcher: tenant-axis data parallelism.
+"""Sharded fleet fine-tuning launcher — a thin CLI over the mesh-native
+``SessionRuntime``.
 
-Trains N tenants' Skip2-LoRA adapters in one dispatch per epoch
-(``core.fleet_finetune``), with the tenant axis split across devices via
-``shard_map`` (DESIGN.md §8): the frozen backbone is *replicated* (it is
-tenant-independent), while the stacked adapters, their optimizer moments,
-each tenant's cache partition, and the fleet batch columns are sharded on
-the mesh's ``data`` axis. Tenants never exchange data — the only cross-
-device value is the replicated backbone — so the sharded epoch reproduces
-the single-device epoch per shard (to XLA-fusion float tolerance),
-verified by ``--check-parity``.
+Single- and multi-device fleets now run through ONE engine: the session
+runtime ingests every tenant's samples (the populate forwards), then runs
+per-epoch grouped ``adapt`` calls with pool write-back. On a multi-device
+mesh the runtime places each tenant's adapters, optimizer moments, and
+cache partition on its logical shard's device and dispatches every
+(trajectory, shard) group's fused epochs shard-locally (DESIGN.md §10) —
+the bespoke ``shard_map`` data-parallel path this launcher used to carry
+collapsed into the runtime, which is now the one way to run multi-device
+fine-tuning.
 
 CPU verification (no hardware needed): the device count is forced *before*
 jax import, exactly like ``launch/dryrun.py``:
@@ -16,6 +17,16 @@ jax import, exactly like ``launch/dryrun.py``:
   PYTHONPATH=src python -m repro.launch.fleet --arch stablelm-1.6b \
       --reduced --tenants 4 --devices 2 --samples 8 --batch-per-tenant 4 \
       --seq 16 --epochs 3 --check-parity
+
+``--check-parity`` compares against the offline single-dispatch
+``fleet_finetune`` trainer: at ``--devices 1`` the session reproduces it
+BITWISE on the kernel path (the §9 bar, zero tolerance); at ``--devices N``
+the per-shard groups train fewer tenants per dispatch than the offline
+joint fleet, and under a forced host-device count XLA compiles
+shape-dependent reductions, so parity is held to 1e-5 (the same tolerance
+the legacy shard_map path needed, for the same reason — see DESIGN.md §10;
+the *zero*-tolerance multi-device bar is ``launch/run.py --check-parity``,
+which pins the group layout and varies only device placement).
 """
 
 from __future__ import annotations
@@ -43,8 +54,8 @@ def _parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--use-kernel", action="store_true",
                     help="grouped Pallas kernel (interpret mode off-TPU)")
     ap.add_argument("--check-parity", action="store_true",
-                    help="compare sharded losses against the single-device "
-                         "fleet trainer")
+                    help="compare session losses/adapters against the "
+                         "offline fleet trainer")
     return ap.parse_args(argv)
 
 
@@ -58,15 +69,9 @@ def main(argv=None) -> dict:
         )
 
     import jax
-    import jax.numpy as jnp
-    import numpy as np
-    from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec as P
 
     from repro.configs import get_config, reduce_config
-    from repro.core import fleet_finetune as FF
     from repro.core import lm_skiplora as SL
-    from repro.optim.optimizers import adamw
 
     if args.tenants % args.devices:
         raise SystemExit(
@@ -85,129 +90,26 @@ def main(argv=None) -> dict:
     sl = SL.SkipLoRAConfig(rank=args.rank, mode=args.mode, cache_dtype="float32",
                            use_fused_kernel=args.use_kernel)
 
-    n_t, n_per, seq = args.tenants, args.samples, args.seq
+    n_t, n_per = args.tenants, args.samples
     bpt = min(args.batch_per_tenant, n_per)  # fleet_index_matrix clamp
-    n_local = n_t // args.devices
-    samples_per_device = n_local * n_per
 
     from repro.models.lm import init_lm
 
     params = init_lm(jax.random.key(0), cfg)
-    tokens = jax.random.randint(jax.random.key(1), (n_t, n_per, seq), 0, cfg.vocab_size)
-    labels = jax.random.randint(jax.random.key(2), (n_t, n_per, seq), 0, cfg.vocab_size)
+    tokens = jax.random.randint(jax.random.key(1), (n_t, n_per, args.seq), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.key(2), (n_t, n_per, args.seq), 0, cfg.vocab_size)
 
-    if args.devices == 1:
-        # Single-device fleets run through the session runtime (one pool,
-        # one cache engine, the shared compiled-fn cache) — the shard_map
-        # below is the multi-device escape hatch for the same epochs.
-        return _runtime_main(args, cfg, sl, params, tokens, labels, bpt)
-
-    opt = adamw(args.lr)
-    stacked = FF.init_fleet_adapters(jax.random.key(3), cfg, sl, n_t)
-    opt_state = opt.init(stacked)
-    row_tenant = FF.fleet_row_tenant(n_t, bpt)
-    tokens_flat = tokens.reshape(n_t * n_per, seq)
-    labels_flat = labels.reshape(n_t * n_per, seq)
-    cache = SL.init_lm_cache(n_t * n_per, cfg, sl, seq)
-
-    # ---- sharded epoch builders (per-shard bodies are the unjitted fleet
-    # epochs over n_local tenants; jit wraps the sharded call) -------------
-    mesh = jax.make_mesh((args.devices,), ("data",))
-    populate_raw = FF.make_fleet_populate_epoch(
-        cfg, sl, opt, n_local, use_kernel=args.use_kernel, jit=False
-    )
-    cached_raw = FF.make_fleet_cached_epoch(
-        cfg, sl, opt, n_local, use_kernel=args.use_kernel, jit=False
-    )
-
-    def _localize(idx, row_t):
-        dev = jax.lax.axis_index("data")
-        return idx - dev * samples_per_device, row_t - dev * n_local
-
-    def populate_body(params, stacked, opt_state, cache, tokens, labels, idx_mat, row_t):
-        idx_local, rt_local = _localize(idx_mat, row_t)
-        return populate_raw(
-            params, stacked, opt_state, cache, tokens, labels, idx_local, rt_local
-        )
-
-    def cached_body(params, stacked, opt_state, cache, idx_mat, row_t):
-        idx_local, rt_local = _localize(idx_mat, row_t)
-        return cached_raw(params, stacked, opt_state, cache, idx_local, rt_local)
-
-    # Spec prefixes: replicated backbone, tenant-axis sharding everywhere a
-    # leading tenant/sample axis exists, replicated scalar step counter.
-    s_params = P()
-    s_stack = P("data")
-    s_opt = type(opt_state)(step=P(), mu=P("data"), nu=P("data"))
-    s_cache = P("data")
-    s_idx = P(None, "data")
-    s_rt = P("data")
-    s_losses = P(None, "data")
-
-    # Donation matches the single-device epoch builders: adapters/opt-state
-    # always; the cache only where it is carried out (populate). Off-CPU
-    # this keeps one copy of the fleet activation cache live, not two.
-    from repro.core import donate_argnums
-
-    populate_sharded = jax.jit(shard_map(
-        populate_body, mesh=mesh,
-        in_specs=(s_params, s_stack, s_opt, s_cache, P("data"), P("data"), s_idx, s_rt),
-        out_specs=(s_stack, s_opt, s_cache, s_losses),
-        check_rep=False,
-    ), donate_argnums=donate_argnums(1, 2, 3))
-    cached_sharded = jax.jit(shard_map(
-        cached_body, mesh=mesh,
-        in_specs=(s_params, s_stack, s_opt, s_cache, s_idx, s_rt),
-        out_specs=(s_stack, s_opt, s_losses),
-        check_rep=False,
-    ), donate_argnums=donate_argnums(1, 2))
-
-    losses, times = [], []
-    for e in range(args.epochs):
-        idx_mat = jnp.asarray(FF.fleet_index_matrix(e, n_t, n_per, bpt))
-        t0 = time.perf_counter()
-        if e == 0:
-            stacked, opt_state, cache, ls = populate_sharded(
-                params, stacked, opt_state, cache,
-                tokens_flat, labels_flat, idx_mat, row_tenant,
-            )
-        else:
-            stacked, opt_state, ls = cached_sharded(
-                params, stacked, opt_state, cache, idx_mat, row_tenant
-            )
-        jax.block_until_ready(ls)
-        dt = time.perf_counter() - t0
-        times.append(dt)
-        losses.append(np.asarray(ls))
-        kind = "populate" if e == 0 else "cached  "
-        print(f"epoch {e} [{kind}] mean loss {float(np.mean(ls)):.4f} "
-              f"time {dt:.2f}s ({n_t / dt:.1f} tenants/s/epoch)")
-
-    losses = np.stack(losses)  # (epochs, steps, n_tenants)
-    out = {"losses": losses, "epoch_times": times, "devices": args.devices}
-
-    if args.check_parity:
-        ref = FF.fleet_finetune(
-            jax.random.key(3), cfg, sl, params, tokens, labels,
-            epochs=args.epochs, batch_per_tenant=bpt, optimizer=adamw(args.lr),
-            use_kernel=args.use_kernel,
-        )
-        diff = float(np.max(np.abs(ref.losses - losses)))
-        print(f"parity_max_abs_diff={diff:.3e}")
-        out["parity_max_abs_diff"] = diff
-        if diff > 1e-5:
-            # The CI verification step must FAIL on divergence, not just
-            # print it (XLA fusion differences stay well below this).
-            raise SystemExit(f"sharded/single-device parity broken: {diff:.3e}")
-    return out
+    return _runtime_main(args, cfg, sl, params, tokens, labels, bpt)
 
 
 def _runtime_main(args, cfg, sl, params, tokens, labels, bpt) -> dict:
-    """Single-device fleet epochs as one interleaved runtime session:
-    ingest every tenant's samples (the populate forwards), then per-epoch
-    grouped ``adapt`` calls with pool write-back. Bitwise-identical to
+    """Fleet epochs as one interleaved runtime session over the mesh:
+    ingest every tenant's samples (the populate forwards, one per tenant —
+    identical shapes on any device count), then per-epoch grouped ``adapt``
+    calls with pool write-back, each (trajectory, shard) group dispatched
+    on its own device. At ``--devices 1`` this is bitwise-identical to
     ``fleet_finetune`` on the kernel path (DESIGN.md §9), which
-    ``--check-parity`` asserts at zero tolerance here."""
+    ``--check-parity`` asserts at zero tolerance."""
     import time
 
     import jax
@@ -216,18 +118,22 @@ def _runtime_main(args, cfg, sl, params, tokens, labels, bpt) -> dict:
     from repro.core import fleet_finetune as FF
     from repro.core.runtime import SessionRuntime
     from repro.optim.optimizers import adamw
+    from repro.runtime.sharding import make_mesh
 
     if args.check_parity and args.mode != "full":
         raise SystemExit(
-            "--check-parity on the single-device runtime path requires "
-            "--mode full: int8 cached epochs intentionally train on the "
-            "quantised cache, while the offline populate epoch steps on "
-            "full-precision activations (DESIGN.md §9)"
+            "--check-parity on the runtime path requires --mode full: int8 "
+            "cached epochs intentionally train on the quantised cache, "
+            "while the offline populate epoch steps on full-precision "
+            "activations (DESIGN.md §9)"
         )
     n_t, n_per = args.tenants, args.samples
+    mesh = make_mesh(
+        (args.devices,), ("data",), devices=jax.devices()[: args.devices]
+    )
     rt = SessionRuntime(
         cfg, sl, params, max_tenants=n_t, samples_per_tenant=n_per,
-        seq=args.seq, lr=args.lr, use_kernel=args.use_kernel,
+        seq=args.seq, lr=args.lr, use_kernel=args.use_kernel, mesh=mesh,
     )
     t0 = time.perf_counter()
     for t in range(n_t):
@@ -246,10 +152,11 @@ def _runtime_main(args, cfg, sl, params, tokens, labels, bpt) -> dict:
         kind = "populate" if e == 0 else "cached  "
         extra = f" (+{ingest_s:.2f}s ingest)" if e == 0 else ""
         print(f"epoch {e} [{kind}] mean loss {float(np.mean(ls)):.4f} "
-              f"time {dt:.2f}s{extra} ({n_t / dt:.1f} tenants/s/epoch)")
+              f"time {dt:.2f}s{extra} ({n_t / dt:.1f} tenants/s/epoch, "
+              f"{len(out['groups'])} shard group(s))")
 
     losses = np.stack(losses)  # (epochs, steps, n_tenants)
-    out = {"losses": losses, "epoch_times": times, "devices": 1}
+    out = {"losses": losses, "epoch_times": times, "devices": args.devices}
 
     if args.check_parity:
         ref = FF.fleet_finetune(
@@ -258,12 +165,28 @@ def _runtime_main(args, cfg, sl, params, tokens, labels, bpt) -> dict:
             use_kernel=args.use_kernel,
         )
         diff = float(np.max(np.abs(ref.losses - losses)))
+        adiff = max(
+            float(np.max(np.abs(
+                np.asarray(rt.tenant(t).adapters[k]) - np.asarray(ref.adapters[k][t])
+            )))
+            for t in range(n_t) for k in ("A", "B")
+        )
         print(f"parity_max_abs_diff={diff:.3e}")
+        print(f"parity_adapter_diff={adiff:.3e}")
         out["parity_max_abs_diff"] = diff
-        if diff > 0.0:
-            # The interleaved session reproduces the offline trainer
-            # BITWISE on this path — hold it to exactly that.
-            raise SystemExit(f"runtime/offline parity broken: {diff:.3e}")
+        out["parity_adapter_diff"] = adiff
+        # The single-device session reproduces the offline trainer BITWISE
+        # (the §9 bar); sharded groups differ from the offline joint fleet
+        # only by shape-dependent XLA reduction compilation — 1e-5 bounds
+        # it with orders of magnitude to spare (measured ~1e-6).
+        tol = 0.0 if args.devices == 1 else 1e-5
+        if diff > tol or adiff > tol:
+            # The CI verification step must FAIL on divergence, not just
+            # print it.
+            raise SystemExit(
+                f"session/offline parity broken: losses {diff:.3e} "
+                f"adapters {adiff:.3e} (tol {tol:.0e})"
+            )
     return out
 
 

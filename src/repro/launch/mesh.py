@@ -10,17 +10,19 @@ from __future__ import annotations
 
 import jax
 
+from repro.runtime.sharding import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2) -> jax.sharding.Mesh:
     """Small mesh for CPU tests (requires forced host device count >= n*m)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"))
+    return make_mesh((n_data, n_model), ("data", "model"))
 
 
 def mesh_batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

@@ -1,17 +1,38 @@
-"""Interleaved continual-learning session CLI — the runtime's event loop.
+"""Interleaved continual-learning session CLI — the runtime's event loop,
+now mesh-native and supervised.
 
-The paper's deployment story end to end (DESIGN.md §9): one
-``SessionRuntime`` processes an interleaved stream of serve, ingest, and
-adapt events over a shared adapter pool and skip-cache engine. Each round,
-every tenant (1) serves a mixed batch next to base-model traffic, (2)
-ingests freshly "collected" samples — the populate forward that writes its
-cache partition and returns logits, so ingestion is also a serving hit —
-and (3) runs a grouped cached ``adapt`` whose write-back immediately
-changes what the next serve returns.
+The paper's deployment story end to end (DESIGN.md §9/§10): one
+``SessionRuntime``, constructed over an explicit device mesh, processes an
+interleaved stream of serve, ingest, and adapt events over a sharded
+adapter pool and per-shard skip-cache engines. Each round, every tenant
+(1) serves a mixed batch next to base-model traffic, (2) ingests freshly
+"collected" samples — the populate forward that writes its cache partition
+and returns logits, so ingestion is also a serving hit — and (3) runs a
+grouped cached ``adapt`` whose write-back immediately changes what the
+next serve returns.
 
   PYTHONPATH=src python -m repro.launch.run --arch stablelm-1.6b \
       --reduced --tenants 3 --rounds 2 --samples-per-round 4 --seq 16 \
       --gen 8 --adapt-epochs 2
+
+Mesh + fault-tolerance controls:
+
+  --devices N        run over an N-way data mesh (forced host devices on
+                     CPU, set before the first jax import like dryrun.py)
+  --check-parity     run the SAME event stream twice — on the N-device
+                     mesh and on a 1-device mesh with the identical
+                     logical shard layout — and require ZERO tolerance on
+                     adapters, adapt losses, pool slot tables, and serve
+                     tokens. Device placement is numerically free
+                     (DESIGN.md §10); this check enforces it.
+  --checkpoint-dir D run the event stream under a ``SessionSupervisor``:
+                     checkpoint at every event boundary, restart after
+                     failure with zero event replay.
+  --inject-failure K raise inside event K on its first execution (crash
+                     drill; requires --checkpoint-dir).
+  --elastic-devices M after the injected failure, restart the session on
+                     only M devices (elastic re-mesh: same logical shards,
+                     fewer physical devices — the continuation is bitwise).
 
 Prints per-event wall times and the runtime's path/tier counters; --json
 dumps the same metrics machine-readably.
@@ -21,18 +42,11 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
-import jax
-import jax.numpy as jnp
 
-from repro.configs import get_config, reduce_config
-from repro.core import lm_skiplora as SL
-from repro.core.runtime import SessionRuntime
-from repro.models.lm import init_lm
-
-
-def main(argv=None) -> dict:
+def _parse_args(argv=None) -> argparse.Namespace:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--reduced", action="store_true", default=True)
@@ -53,8 +67,64 @@ def main(argv=None) -> dict:
     ap.add_argument("--hbm-mb", type=float, default=0.0,
                     help="cache HBM budget in MiB; 0 = fully device-resident")
     ap.add_argument("--unroll", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="data-mesh devices (forced on CPU via XLA_FLAGS)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="logical shard count (default: --devices)")
+    ap.add_argument("--check-parity", action="store_true",
+                    help="sharded session vs 1-device same-layout twin at "
+                         "zero tolerance (requires --devices >= 2)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="supervise the event stream with per-event "
+                         "session checkpoints")
+    ap.add_argument("--inject-failure", type=int, default=None, metavar="K",
+                    help="crash inside event K once (requires "
+                         "--checkpoint-dir)")
+    ap.add_argument("--elastic-devices", type=int, default=None, metavar="M",
+                    help="restart on only M devices after the injected "
+                         "failure")
     ap.add_argument("--json", default=None, help="write metrics to this path")
-    args = ap.parse_args(argv)
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> dict:
+    args = _parse_args(argv)
+    if args.devices > 1 and "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        # Must land before the first jax import (same trick as dryrun.py).
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+    if args.check_parity and args.devices < 2:
+        raise SystemExit(
+            "--check-parity compares an N-device mesh against its 1-device "
+            "twin; for the single-device session's bitwise bar against the "
+            "offline trainer use launch/fleet.py --devices 1 --check-parity"
+        )
+    if args.inject_failure is not None and not args.checkpoint_dir:
+        raise SystemExit("--inject-failure requires --checkpoint-dir")
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduce_config
+    from repro.core import lm_skiplora as SL
+    from repro.core.runtime import SessionRuntime
+    from repro.models.lm import init_lm
+    from repro.runtime.fault import SessionSupervisor, elastic_session_mesh
+    from repro.runtime.sharding import make_mesh
+
+    if len(jax.devices()) < args.devices:
+        raise SystemExit(
+            f"need {args.devices} devices, have {len(jax.devices())} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count before "
+            "jax imports, or let this CLI do it by running it first)"
+        )
+    n_shards = args.shards if args.shards is not None else args.devices
+    if args.tenants % n_shards:
+        raise SystemExit(
+            f"--tenants {args.tenants} must divide over {n_shards} shards"
+        )
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -63,65 +133,123 @@ def main(argv=None) -> dict:
                            cache_dtype="float32",
                            use_fused_kernel=args.use_kernel)
     params = init_lm(jax.random.key(0), cfg)
-    rt = SessionRuntime(
-        cfg, sl, params,
-        max_tenants=args.tenants,
-        samples_per_tenant=args.rounds * args.samples_per_round,
-        seq=args.seq, lr=args.lr, use_kernel=args.use_kernel,
-        pool_compress=args.pool_compress,
-        hbm_budget_bytes=(int(args.hbm_mb * 2**20) if args.hbm_mb > 0 else None),
-    )
     names = [f"tenant-{t}" for t in range(args.tenants)]
     prompts = jax.random.randint(
         jax.random.key(1), (args.tenants + 1, args.prompt_len), 0, cfg.vocab_size
     )
-    timings: dict[str, float] = {}
 
-    def timed(name, fn):
-        t0 = time.perf_counter()
-        out = fn()
-        for leaf in jax.tree.leaves(out):
-            if isinstance(leaf, jax.Array):
-                leaf.block_until_ready()
-        dt = time.perf_counter() - t0
-        timings[name] = timings.get(name, 0.0) + dt
-        return out, dt
+    def make_runtime(n_devices: int) -> SessionRuntime:
+        mesh = make_mesh(
+            (n_devices,), ("data",), devices=jax.devices()[:n_devices]
+        )
+        return SessionRuntime(
+            cfg, sl, params,
+            max_tenants=args.tenants,
+            samples_per_tenant=args.rounds * args.samples_per_round,
+            seq=args.seq, lr=args.lr, use_kernel=args.use_kernel,
+            pool_compress=args.pool_compress,
+            hbm_budget_bytes=(int(args.hbm_mb * 2**20) if args.hbm_mb > 0 else None),
+            mesh=mesh, placement_shards=n_shards,
+        )
 
-    # Round 0 serves base traffic for everyone (nothing registered yet).
-    _, dt = timed("serve", lambda: rt.serve(
+    # ---- the event stream: one closure per serve / ingest / adapt ---------
+    # Per-tenant sample streams are derived from (round, tenant), NOT from a
+    # carried RNG, so a restarted session regenerates identical batches.
+    def tenant_batch(rnd: int, t: int):
+        k1, k2 = jax.random.split(jax.random.fold_in(jax.random.key(2), rnd * args.tenants + t))
+        toks = jax.random.randint(
+            k1, (args.samples_per_round, args.seq), 0, cfg.vocab_size
+        )
+        labs = jax.random.randint(
+            k2, (args.samples_per_round, args.seq), 0, cfg.vocab_size
+        )
+        return toks, labs
+
+    events, labels = [], []
+
+    def ev(label, fn):
+        events.append(fn)
+        labels.append(label)
+
+    ev("serve/base", lambda rt, i: rt.serve(
         [None] * (args.tenants + 1), prompts, max_new=args.gen,
         unroll=args.unroll,
     ))
-    print(f"serve  [base x{args.tenants + 1}]      {dt:6.2f}s")
-
-    rng = jax.random.key(2)
-    t_session0 = time.perf_counter()
     for rnd in range(args.rounds):
         for t, name in enumerate(names):
-            rng, k1, k2 = jax.random.split(rng, 3)
-            toks = jax.random.randint(
-                k1, (args.samples_per_round, args.seq), 0, cfg.vocab_size
-            )
-            labs = jax.random.randint(
-                k2, (args.samples_per_round, args.seq), 0, cfg.vocab_size
-            )
-            _, dt = timed("ingest", lambda: rt.ingest(name, toks, labs))
-            print(f"ingest [{name} round {rnd}]  {dt:6.2f}s "
-                  f"({args.samples_per_round} rows + logits back)")
-        out, dt = timed("adapt", lambda: rt.adapt(
+            ev(f"ingest/{name}/r{rnd}", lambda rt, i, rnd=rnd, t=t, name=name:
+               rt.ingest(name, *tenant_batch(rnd, t)))
+        ev(f"adapt/r{rnd}", lambda rt, i: rt.adapt(
             names, epochs=args.adapt_epochs,
             batch_per_tenant=args.batch_per_tenant, key=jax.random.key(3),
         ))
-        mean_loss = float(jnp.mean(jnp.stack(
-            [jnp.asarray(out["losses"][n]) for n in names]
-        )))
-        print(f"adapt  [round {rnd}, {args.adapt_epochs} ep, {out['path']}] "
-              f"{dt:6.2f}s  mean loss {mean_loss:.4f}")
-        # Mixed post-adapt batch: base row + every tenant's fresh slot.
-        _, dt = timed("serve", lambda: rt.serve(
+        ev(f"serve/mixed/r{rnd}", lambda rt, i: rt.serve(
             [None] + names, prompts, max_new=args.gen, unroll=args.unroll,
         ))
-        print(f"serve  [mixed x{args.tenants + 1}]     {dt:6.2f}s")
+
+    timings: dict[str, float] = {}
+
+    def run_stream(rt: SessionRuntime) -> dict[int, object]:
+        results = {}
+        for i, (fn, label) in enumerate(zip(events, labels)):
+            t0 = time.perf_counter()
+            out = fn(rt, i)
+            for leaf in jax.tree.leaves(out):
+                if isinstance(leaf, jax.Array):
+                    leaf.block_until_ready()
+            dt = time.perf_counter() - t0
+            kind = label.split("/")[0]
+            timings[kind] = timings.get(kind, 0.0) + dt
+            print(f"{label:<24s} {dt:6.2f}s")
+            results[i] = out
+        return results
+
+    t_session0 = time.perf_counter()
+    if args.checkpoint_dir:
+        # ---- supervised session: checkpoint/restart at event boundaries --
+        healthy = {"n": args.devices}
+        fail_at = {"k": args.inject_failure}
+
+        def boot_runtime():
+            # Elastic re-mesh over whatever survived: the session's logical
+            # shard layout is a checkpoint property; only placement changes.
+            mesh = elastic_session_mesh(jax.devices()[: healthy["n"]])
+            return SessionRuntime(
+                cfg, sl, params,
+                max_tenants=args.tenants,
+                samples_per_tenant=args.rounds * args.samples_per_round,
+                seq=args.seq, lr=args.lr, use_kernel=args.use_kernel,
+                pool_compress=args.pool_compress,
+                hbm_budget_bytes=(
+                    int(args.hbm_mb * 2**20) if args.hbm_mb > 0 else None
+                ),
+                mesh=mesh, placement_shards=n_shards,
+            )
+
+        raw_events = list(events)
+
+        def wrap(i, fn):
+            def run_event(rt, idx):
+                if fail_at["k"] == idx:
+                    fail_at["k"] = None  # crash once
+                    if args.elastic_devices is not None:
+                        healthy["n"] = args.elastic_devices  # hosts died
+                    raise RuntimeError(f"injected failure in event {idx}")
+                return fn(rt, idx)
+            return run_event
+
+        sup = SessionSupervisor(args.checkpoint_dir, save_every=1)
+        rt, info = sup.run(
+            boot_runtime, [wrap(i, fn) for i, fn in enumerate(raw_events)]
+        )
+        print(f"supervised: {len(events)} events, {info['restarts']} restarts, "
+              f"resumed at event {info['resumed_at']}, "
+              f"{len(info['results'])} executed this incarnation "
+              f"(zero replay of completed events)")
+        results = info["results"]
+    else:
+        rt = make_runtime(args.devices)
+        results = run_stream(rt)
     session_s = time.perf_counter() - t_session0
 
     stats = rt.stats()
@@ -129,13 +257,52 @@ def main(argv=None) -> dict:
         **{f"time/{k}_s": v for k, v in timings.items()},
         "session/tenants_per_s": args.tenants * args.rounds / session_s,
         "session/wall_s": session_s,
+        "session/devices": float(args.devices),
+        "session/shards": float(n_shards),
         **stats,
     }
-    print(f"\nsession: {args.tenants} tenants x {args.rounds} rounds in "
+    print(f"\nsession: {args.tenants} tenants x {args.rounds} rounds on "
+          f"{args.devices} device(s) / {n_shards} shard(s) in "
           f"{session_s:.2f}s ({metrics['session/tenants_per_s']:.2f} "
           f"tenant-rounds/s)")
     for k in sorted(stats):
         print(f"  {k} = {stats[k]:.3f}")
+
+    if args.check_parity:
+        # The 1-device twin: same logical layout, same events — device
+        # placement must be numerically FREE, so zero tolerance.
+        print("\n--check-parity: replaying on the 1-device same-layout twin")
+        twin = make_runtime(1)
+        twin_results = run_stream(twin)
+        diffs = []
+        for name in names:
+            a, b = rt.tenant(name).adapters, twin.tenant(name).adapters
+            for leaf in ("A", "B"):
+                if not np.array_equal(np.asarray(a[leaf]), np.asarray(b[leaf])):
+                    diffs.append(f"adapters[{name}][{leaf}]")
+        for i, label in enumerate(labels):
+            if label.startswith("adapt/") and i in results:
+                la = results[i]["losses"] if isinstance(results[i], dict) else None
+                lb = twin_results[i]["losses"]
+                for name in names:
+                    if la is not None and not np.array_equal(
+                        np.asarray(la[name]), np.asarray(lb[name])
+                    ):
+                        diffs.append(f"losses[{label}][{name}]")
+            if label.startswith("serve/") and i in results:
+                if not np.array_equal(np.asarray(results[i]),
+                                      np.asarray(twin_results[i])):
+                    diffs.append(f"tokens[{label}]")
+        if rt.pool.slot_table() != twin.pool.slot_table():
+            diffs.append("pool slot tables")
+        metrics["parity/zero_tolerance_diffs"] = float(len(diffs))
+        if diffs:
+            raise SystemExit(
+                f"sharded/twin parity broken (zero tolerance): {diffs}"
+            )
+        print(f"parity OK: {args.devices}-device session == 1-device twin "
+              "bitwise (adapters, losses, tokens, slot tables)")
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump(metrics, f, indent=2, sort_keys=True)

@@ -1,1 +1,60 @@
-"""Distributed runtime: sharding rules, pipeline parallelism, fault tolerance."""
+"""Distributed runtime: sharding rules, pipeline parallelism, fault
+tolerance, and the mesh-native session entry points.
+
+``from repro.runtime import ...`` is the one import path for the
+distribution layer:
+
+  - sharding: ``AxisRules``, ``make_mesh``, ``session_devices``,
+    ``session_param_specs``, ``replicate_backbone``, ``param_specs``,
+    ``sharding_scope``, ``constrain``
+  - fault tolerance: ``Supervisor``, ``SessionSupervisor``,
+    ``StragglerMonitor``, ``elastic_remesh``, ``elastic_session_mesh``,
+    ``healthy_mesh_shape``
+  - the mesh-native session engine: ``SessionRuntime`` (re-exported from
+    ``repro.core.runtime``, which this package's sharding/fault modules
+    underpin)
+
+Exports resolve lazily (module ``__getattr__``) so that
+``repro.core.runtime`` can import ``repro.runtime.sharding`` without a
+package cycle, and importing this package never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    # sharding
+    "AxisRules": "repro.runtime.sharding",
+    "make_mesh": "repro.runtime.sharding",
+    "session_devices": "repro.runtime.sharding",
+    "session_param_specs": "repro.runtime.sharding",
+    "replicate_backbone": "repro.runtime.sharding",
+    "param_specs": "repro.runtime.sharding",
+    "zero1_specs": "repro.runtime.sharding",
+    "sharding_scope": "repro.runtime.sharding",
+    "constrain": "repro.runtime.sharding",
+    "named": "repro.runtime.sharding",
+    # fault tolerance
+    "Supervisor": "repro.runtime.fault",
+    "SessionSupervisor": "repro.runtime.fault",
+    "StragglerMonitor": "repro.runtime.fault",
+    "elastic_remesh": "repro.runtime.fault",
+    "elastic_session_mesh": "repro.runtime.fault",
+    "healthy_mesh_shape": "repro.runtime.fault",
+    # session engine (lives in core; the mesh-native half of this package)
+    "SessionRuntime": "repro.core.runtime",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.runtime' has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return __all__

@@ -29,6 +29,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.runtime.sharding import make_mesh
 
 Params = Any
 
@@ -66,10 +67,103 @@ def healthy_mesh_shape(n_devices: int, model_parallel: int) -> tuple[int, int]:
 
 
 def elastic_remesh(model_parallel: int, devices=None) -> jax.sharding.Mesh:
-    devices = devices if devices is not None else jax.devices()
+    devices = list(devices) if devices is not None else jax.devices()
     data, model = healthy_mesh_shape(len(devices), model_parallel)
-    arr = np.asarray(devices[: data * model]).reshape(data, model)
-    return jax.sharding.Mesh(arr, ("data", "model"))
+    return make_mesh((data, model), ("data", "model"), devices=devices)
+
+
+def elastic_session_mesh(devices=None) -> jax.sharding.Mesh:
+    """Data-only session mesh over the surviving devices (the elastic
+    restart path for mesh-native ``SessionRuntime``): the session's
+    *logical* shard layout is a checkpoint property and does not change —
+    restored shard ``s`` simply lands on ``devices[s % len(devices)]``,
+    which keeps every group trace identical and the continuation bitwise
+    (DESIGN.md §10)."""
+    devices = list(devices) if devices is not None else jax.devices()
+    return make_mesh((len(devices),), ("data",), devices=devices)
+
+
+@dataclasses.dataclass
+class SessionSupervisor:
+    """The Supervisor folded into the continual-learning session loop.
+
+    Drives a ``SessionRuntime`` through an event stream (serve / ingest /
+    adapt closures) with checkpoint/restart at *event boundaries*: after
+    every ``save_every`` completed events the whole session — stacked
+    adapters, optimizer moments, pool slot tables, cache rows — is captured
+    via ``checkpoint.save_runtime_session``. A failure mid-event rolls back
+    to the latest boundary and resumes at the first event past it: at the
+    default ``save_every=1`` every boundary is an event boundary, so
+    completed events are never replayed (their effects live in the
+    checkpoint) and only the failed event re-executes — against exactly
+    the state it first saw. With ``save_every=k`` up to ``k-1`` completed
+    events past the last boundary re-run after a crash (the classic
+    checkpoint-interval trade; their ``results`` entries are overwritten).
+
+    Elastic restarts ride the same loop: ``make_runtime`` is consulted on
+    every (re)start and may build its mesh from whatever devices currently
+    look healthy (``elastic_session_mesh``) — the session's logical shard
+    layout travels in the checkpoint, so the restored run's group traces
+    (and therefore its adapters) are bitwise those of the uninterrupted one.
+    """
+
+    directory: str
+    keep: int = 3
+    max_restarts: int = 3
+    save_every: int = 1
+    on_straggler: Optional[Callable[[int, float], None]] = None
+    monitor: StragglerMonitor = dataclasses.field(default_factory=StragglerMonitor)
+
+    def run(self, make_runtime: Callable[[], Any], events) -> tuple[Any, dict]:
+        """Run ``events`` (callables ``event(runtime, index) -> result``)
+        to completion with checkpoint/restart. Returns the live runtime and
+        ``{"results": {index: result}, "restarts": n, "resumed_at": i}`` —
+        results cover the events executed by this process (a resume skips,
+        never re-runs, the events a previous incarnation completed)."""
+        from repro.checkpoint.checkpoint import (
+            latest_checkpoint,
+            restore_runtime_session,
+            save_runtime_session,
+        )
+
+        events = list(events)
+        ckpt = CheckpointManager(
+            self.directory, keep=self.keep, save_every=self.save_every
+        )
+
+        def boot() -> tuple[Any, int]:
+            rt = make_runtime()
+            path = latest_checkpoint(self.directory)
+            if path is None:
+                return rt, 0
+            manifest = restore_runtime_session(path, rt)
+            return rt, int(manifest["step"])
+
+        restarts = 0
+        results: dict[int, Any] = {}
+        rt, step = boot()
+        resumed_at = step
+        while step < len(events):
+            try:
+                t0 = time.perf_counter()
+                results[step] = events[step](rt, step)
+                dt = time.perf_counter() - t0
+                if self.monitor.record(dt) and self.on_straggler:
+                    self.on_straggler(step, dt)
+                step += 1
+                if step % self.save_every == 0 or step == len(events):
+                    save_runtime_session(self.directory, step, rt)
+                    ckpt._gc()
+            except KeyboardInterrupt:
+                raise
+            except Exception:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                rt, step = boot()
+                resumed_at = step
+        return rt, {"results": results, "restarts": restarts,
+                    "resumed_at": resumed_at}
 
 
 @dataclasses.dataclass

@@ -17,13 +17,60 @@ import contextlib
 import contextvars
 import dataclasses
 import re
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction: the one helper every mesh in the repo goes through
+# ---------------------------------------------------------------------------
+
+
+def make_mesh(
+    shape: Sequence[int], axes: Sequence[str], *, devices=None
+) -> Mesh:
+    """Build a mesh of ``shape`` over ``axes``.
+
+    ``devices=None`` takes the process's device list in order (the common
+    case); an explicit list pins the grid to those devices — the elastic
+    path, where a restart rebuilds the mesh from whatever survived. This is
+    the single mesh constructor behind ``launch.mesh``, the fleet/session
+    launchers, and ``fault.elastic_remesh``.
+    """
+    shape, axes = tuple(int(s) for s in shape), tuple(axes)
+    if len(shape) != len(axes):
+        raise ValueError(f"mesh shape {shape} != axes {axes}")
+    if devices is None:
+        return jax.make_mesh(shape, axes)
+    n = int(np.prod(shape))
+    devices = list(devices)
+    if len(devices) < n:
+        raise ValueError(f"mesh {shape} needs {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def session_devices(mesh: Mesh) -> list:
+    """The data-axis device list of a session mesh, in shard order.
+
+    Mesh-native sessions parallelise the *tenant* axis only (the backbone
+    is frozen and replicated — DESIGN.md §10), so every non-data mesh axis
+    must be trivial; a >1 ``model`` axis is the pretraining substrate's
+    territory and is rejected here.
+    """
+    for ax, size in zip(mesh.axis_names, mesh.devices.shape):
+        if ax not in ("data", "pod") and size > 1:
+            raise ValueError(
+                f"session meshes shard tenants on ('pod', 'data') only; "
+                f"axis {ax!r} has size {size}"
+            )
+    return list(mesh.devices.flatten())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,6 +262,32 @@ def param_specs(params_shape: Params, mesh: Mesh) -> Params:
         return _param_spec_for(pstr, shape, mesh)
 
     return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def session_param_specs(params_shape: Params, mesh: Mesh) -> Params:
+    """Backbone placement for a session mesh, derived from the same rule
+    table as the pretraining path: a mesh carrying a >1 ``model`` axis gets
+    the Megatron ``param_specs``; on a data-only session mesh every rule
+    resolves to replication — the *adapters, moments and cache partitions*
+    carry the data axis (by tenant), never the frozen backbone."""
+    if "model" in mesh.axis_names and _axis_size(mesh, "model") > 1:
+        return param_specs(params_shape, mesh)
+    return jax.tree.map(lambda x: P(*([None] * len(x.shape))), params_shape)
+
+
+def specs_all_replicated(specs: Params) -> bool:
+    return all(
+        all(part is None for part in spec)
+        for spec in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    )
+
+
+def replicate_backbone(params: Params, devices) -> list[Params]:
+    """Per-device committed replicas of the frozen backbone — the physical
+    realisation of all-replicated ``session_param_specs`` that keeps every
+    per-shard dispatch device-local (a committed-input jit runs entirely on
+    its shard; a GSPMD-replicated array would force one SPMD program)."""
+    return [jax.device_put(params, d) for d in devices]
 
 
 def zero1_specs(params_shape: Params, specs: Params, mesh: Mesh) -> Params:
