@@ -32,13 +32,21 @@ def main() -> None:
         paper_tables,
         runtime_bench,
         serve_bench,
+        serving_bench,
     )
+
+    def serving_section():
+        rows, payload = serving_bench.serving_slo(quick=args.quick)
+        with open("BENCH_serving_slo.json", "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        return rows
 
     sections = [
         ("serve_decode", lambda: serve_bench.decode_dispatch(
             gen=16 if args.quick else 64)),
         ("serve_grouped", lambda: serve_bench.grouped_adapters(
             gen=8 if args.quick else 32)),
+        ("serving_slo", serving_section),
         ("runtime", lambda: runtime_bench.runtime_session(quick=args.quick)),
         ("fleet", lambda: fleet_bench.fleet_vs_sequential(quick=args.quick)),
         ("table2", lambda: paper_tables.table2_breakdown()),

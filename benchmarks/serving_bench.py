@@ -1,0 +1,224 @@
+"""Trace-driven serving benchmark: continuous batching vs one-at-a-time.
+
+Replays one Poisson-arrival request trace (mixed tenants including base
+traffic, mixed sampling temperatures) through ``core.scheduler`` twice —
+``mode="continuous"`` (the scheduler's point: staggered admission into a
+shared live batch, freed rows recycled) and ``mode="sequential"`` (the
+one-request-at-a-time baseline: same machinery, batch occupancy capped at
+one) — and reports the SLO view: p50/p99 request latency and sustained
+tok/s per mode, plus the PR's three correctness gates:
+
+  - ``speedup_tokps``: continuous >= 2x sequential on the saturating trace
+    (the acceptance bar);
+  - ``temp0_bitwise_match``: every temperature-0 request produced the SAME
+    tokens in both modes — a row admitted mid-decode next to strangers
+    decodes exactly as it does alone (batch-row independence + matched
+    geometry);
+  - ``decode_retraces_after_warmup``: 0 — the trace's distinct
+    temperatures all run through one compiled dispatch (temperature is
+    traced, never a static; ``runtime.TRACE_COUNTS``).
+
+  PYTHONPATH=src python -m benchmarks.serving_bench            # full
+  PYTHONPATH=src python -m benchmarks.serving_bench --quick    # CI smoke
+
+Writes ``BENCH_serving_slo.json`` (``--json``); CI uploads it next to the
+runtime benches.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+TEMPERATURES = (0.0, 0.7, 1.0)
+
+
+def _make_runtime(n_tenants: int, rank: int = 4):
+    from repro.configs import get_config, reduce_config
+    from repro.core import lm_skiplora as SL
+    from repro.core.runtime import SessionRuntime
+    from repro.models.lm import init_lm
+
+    cfg = reduce_config(get_config("stablelm-1.6b"))
+    params = init_lm(jax.random.key(0), cfg)
+    sl = SL.SkipLoRAConfig(rank=rank)
+    rt = SessionRuntime(
+        cfg, sl, params, max_tenants=n_tenants, samples_per_tenant=1, seq=8
+    )
+    for t in range(n_tenants):
+        ad = SL.init_adapters(jax.random.key(100 + t), cfg, sl)
+        ad["B"] = jax.random.normal(jax.random.key(200 + t), ad["B"].shape) * 0.02
+        rt.pool.register(f"tenant-{t}", ad)
+    return rt
+
+
+def make_trace(n: int, *, lam: float, n_tenants: int, prompt_len: int,
+               max_new: int, vocab: int, seed: int = 7) -> list[dict]:
+    """``n`` requests with Poisson (exponential inter-arrival) times at rate
+    ``lam``/s: tenant cycles through base + adapted tenants, temperature
+    cycles through {0, 0.7, 1.0}, prompts are seeded-random at the fixed
+    pad bucket so both replay modes see identical inputs."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / lam, size=n))
+    prompts = rng.integers(0, vocab, size=(n, prompt_len), dtype=np.int32)
+    trace = []
+    for i in range(n):
+        tenant = None if i % (n_tenants + 1) == 0 else f"tenant-{i % n_tenants}"
+        trace.append({
+            "arrival": float(arrivals[i]),
+            "tenant": tenant,
+            "temperature": TEMPERATURES[i % len(TEMPERATURES)],
+            "prompt": prompts[i],
+            "max_new": max_new,
+        })
+    return trace
+
+
+def replay(rt, trace: list[dict], *, mode: str, max_batch: int,
+           prompt_len: int, max_new: int, chunk: int) -> dict:
+    """Replay the trace in real time: submit each request once the clock
+    passes its arrival, pump the scheduler otherwise. Returns latencies,
+    per-request tokens, and sustained tok/s over the makespan."""
+    from repro.core.scheduler import RequestScheduler
+
+    sched = RequestScheduler(
+        rt, max_batch=max_batch, max_prompt=prompt_len, max_new_cap=max_new,
+        admit_bucket=min(2, max_batch), inflight_per_tenant=max_batch,
+        chunk=chunk, mode=mode,
+    )
+    reqs = []
+    t0 = time.perf_counter()
+    i = 0
+    while len(sched._completed) < len(trace):
+        now = time.perf_counter() - t0
+        while i < len(trace) and trace[i]["arrival"] <= now:
+            e = trace[i]
+            reqs.append(sched.submit(
+                e["tenant"], e["prompt"], max_new=e["max_new"],
+                temperature=e["temperature"],
+            ))
+            i += 1
+        if sched.step() == 0:
+            if i < len(trace):
+                time.sleep(min(trace[i]["arrival"] - now, 1e-3))
+    makespan = time.perf_counter() - t0
+    lat = np.asarray([r.latency for r in reqs])
+    return {
+        "makespan_s": makespan,
+        "tok_per_s": sum(r.max_new for r in reqs) / makespan,
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p99_s": float(np.percentile(lat, 99)),
+        "dispatches": int(sched.counters["dispatch/admit"]
+                          + sched.counters["dispatch/step"]),
+        "tokens": [r.result().tolist() for r in reqs],
+    }
+
+
+def serving_slo(*, quick: bool = False, requests: int = 24, lam: float = 200.0,
+                max_batch: int = 8, prompt_len: int = 8, max_new: int = 16,
+                chunk: int = 4, n_tenants: int = 3) -> tuple[list, dict]:
+    """The benchmark body: returns (csv rows, the JSON payload)."""
+    from repro.core.runtime import TRACE_COUNTS
+
+    if quick:
+        requests, max_new, max_batch = 8, 8, 4
+    rt = _make_runtime(n_tenants)
+    vocab = rt.cfg.vocab_size
+    trace = make_trace(
+        requests, lam=lam, n_tenants=n_tenants, prompt_len=prompt_len,
+        max_new=max_new, vocab=vocab,
+    )
+    # Warm both compiled dispatches (admit + step, shared across modes) so
+    # the timed replays measure serving, not tracing — and so the
+    # zero-retrace gate below can hold the counter flat across every
+    # temperature in the trace.
+    warm = make_trace(
+        3, lam=1e6, n_tenants=n_tenants, prompt_len=prompt_len,
+        max_new=max_new, vocab=vocab, seed=11,
+    )
+    for m in ("continuous", "sequential"):
+        replay(rt, warm, mode=m, max_batch=max_batch, prompt_len=prompt_len,
+               max_new=max_new, chunk=chunk)
+    traces0 = TRACE_COUNTS["sched_step"] + TRACE_COUNTS["sched_admit"]
+
+    cont = replay(rt, trace, mode="continuous", max_batch=max_batch,
+                  prompt_len=prompt_len, max_new=max_new, chunk=chunk)
+    seq = replay(rt, trace, mode="sequential", max_batch=max_batch,
+                 prompt_len=prompt_len, max_new=max_new, chunk=chunk)
+    retraces = (TRACE_COUNTS["sched_step"] + TRACE_COUNTS["sched_admit"]
+                - traces0)
+
+    temp0 = [i for i, e in enumerate(trace) if e["temperature"] == 0.0]
+    bitwise = all(
+        cont["tokens"][i] == seq["tokens"][i] for i in temp0
+    )
+    speedup = cont["tok_per_s"] / seq["tok_per_s"]
+    payload = {
+        "requests": requests,
+        "poisson_rate_per_s": lam,
+        "max_batch": max_batch,
+        "chunk": chunk,
+        "temperatures": list(TEMPERATURES),
+        "continuous": {k: v for k, v in cont.items() if k != "tokens"},
+        "sequential": {k: v for k, v in seq.items() if k != "tokens"},
+        "speedup_tokps": speedup,
+        "temp0_bitwise_match": bool(bitwise),
+        "temp0_requests_checked": len(temp0),
+        "decode_retraces_after_warmup": int(retraces),
+    }
+    rows = [
+        ("serving/continuous_tok_per_s", cont["tok_per_s"]),
+        ("serving/sequential_tok_per_s", seq["tok_per_s"]),
+        ("serving/speedup_tokps", speedup),
+        ("serving/continuous_latency_p50_s", cont["latency_p50_s"]),
+        ("serving/continuous_latency_p99_s", cont["latency_p99_s"]),
+        ("serving/sequential_latency_p50_s", seq["latency_p50_s"]),
+        ("serving/sequential_latency_p99_s", seq["latency_p99_s"]),
+        ("serving/temp0_bitwise_match", 1.0 if bitwise else 0.0),
+        ("serving/decode_retraces_after_warmup", float(retraces)),
+    ]
+    return rows, payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small trace, small batch")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--lam", type=float, default=200.0,
+                    help="Poisson arrival rate (requests/s); the default "
+                         "saturates the sequential baseline so the speedup "
+                         "measures batching, not idle waiting")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--json", default="BENCH_serving_slo.json")
+    args = ap.parse_args()
+
+    rows, payload = serving_slo(
+        quick=args.quick, requests=args.requests, lam=args.lam,
+        max_batch=args.batch, prompt_len=args.prompt_len, max_new=args.gen,
+        chunk=args.chunk,
+    )
+    print("name,value,derived")
+    for k, v in rows:
+        print(f"{k},{v:.4f},")
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {args.json}")
+    if not payload["temp0_bitwise_match"]:
+        raise SystemExit("temperature-0 tokens diverged between modes")
+    if payload["decode_retraces_after_warmup"]:
+        raise SystemExit(
+            f"{payload['decode_retraces_after_warmup']} decode retraces "
+            "across the trace's temperatures"
+        )
+
+
+if __name__ == "__main__":
+    main()

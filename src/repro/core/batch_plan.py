@@ -118,3 +118,43 @@ def fleet_index_matrix(
     if tail == "mask":
         return ids, np.concatenate(masks, axis=1)
     return ids
+
+
+def plan_admissions(
+    pending: Sequence,
+    in_flight,
+    free_rows: int,
+    *,
+    cap: int,
+    bucket: int,
+) -> list[int]:
+    """Pick which queued requests the scheduler admits into the live batch.
+
+    ``pending`` is the arrival-ordered queue, each element exposing a
+    ``tenant`` attribute; ``in_flight`` maps tenant -> rows it currently
+    occupies; ``free_rows`` is how many batch rows are open; ``cap`` bounds
+    a single tenant's total rows (in-flight + admitted now); ``bucket`` is
+    the admission width of one dispatch. Returns indices into ``pending``
+    in arrival order.
+
+    The walk is a single pass over the global FIFO that *skips* (rather
+    than waits on) requests whose tenant is at cap, which yields exactly
+    the ISSUE's fairness contract: FIFO within each tenant (a tenant's own
+    requests are only ever admitted in arrival order), a hard per-tenant
+    occupancy bound, and no head-of-line blocking — one chatty tenant at
+    cap cannot stall the tenants queued behind it.
+    """
+    if cap < 1:
+        raise ValueError(f"per-tenant in-flight cap {cap} < 1")
+    budget = min(free_rows, bucket)
+    counts = dict(in_flight)
+    admitted: list[int] = []
+    for i, req in enumerate(pending):
+        if len(admitted) >= budget:
+            break
+        c = counts.get(req.tenant, 0)
+        if c >= cap:
+            continue
+        counts[req.tenant] = c + 1
+        admitted.append(i)
+    return admitted

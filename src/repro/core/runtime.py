@@ -63,7 +63,7 @@ constructed over an explicit device ``Mesh``:
 from __future__ import annotations
 
 import dataclasses
-from collections import Counter
+from collections import Counter, OrderedDict
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -107,6 +107,19 @@ Params = Any
 #: never rebuild the jit wrapper itself.
 _FN_CACHE: dict[tuple, Any] = {}
 
+#: Trace-time retrace counter: ``_mark_trace(name)`` runs as a Python side
+#: effect INSIDE a jitted function body, so it fires exactly once per trace
+#: (first call and every shape/static-arg retrace) and never on cache hits.
+#: Tests assert e.g. that serving three distinct temperatures leaves
+#: ``TRACE_COUNTS["decode_scan"]`` unchanged after warmup — the
+#: recompile-per-temperature bug regression bar — without reaching into
+#: jit's private ``_cache_size``.
+TRACE_COUNTS: Counter = Counter()
+
+
+def _mark_trace(name: str) -> None:
+    TRACE_COUNTS[name] += 1
+
 
 def compiled(key: tuple, make: Callable[[], Any]):
     """Fetch-or-build a jitted callable under a hashable key. The single
@@ -148,6 +161,7 @@ def _decode_scan_fn(cfg, use_kernel: bool = True):
     def make():
         def f(params, tok0, pos0, caches, key, adapters, pools, idx,
               max_new, temperature, unroll):
+            _mark_trace("decode_scan")
             return decode_scan(
                 params, cfg, tok0, pos0, caches, key,
                 max_new=max_new, temperature=temperature, adapters=adapters,
@@ -156,9 +170,14 @@ def _decode_scan_fn(cfg, use_kernel: bool = True):
 
         # Donate the KV caches: the scan's carry updates them in place
         # (off-CPU; the CPU backend has no donation and would only warn).
+        # ``temperature`` (arg 9) is deliberately NOT static: baking it into
+        # the trace cache meant one full decode recompile per distinct
+        # sampling temperature under live traffic. It is traced now (the
+        # greedy/temperature select runs inside ``sample_token``), so every
+        # temperature shares one compiled decode.
         return jax.jit(
             f,
-            static_argnums=(8, 9, 10),
+            static_argnums=(8, 10),
             donate_argnums=donate_argnums(3),
         )
 
@@ -191,6 +210,21 @@ def _ingest_fn(cfg, use_kernel: bool):
 # Generation entry points (moved from launch/serve.py; the CLI re-exports)
 # ---------------------------------------------------------------------------
 
+#: Monotone counter behind ``_default_rng``: calls that omit ``rng`` used to
+#: all fall back to ``jax.random.key(0)``, so every temperature>0 serve
+#: without an explicit key replayed the SAME sample stream. Each omission now
+#: folds a fresh counter value into the base key — still deterministic for a
+#: fresh process (call N always sees fold_in(key(0), N)), never shared
+#: between calls.
+_DEFAULT_RNG_CALLS = 0
+
+
+def _default_rng() -> jax.Array:
+    global _DEFAULT_RNG_CALLS
+    key = jax.random.fold_in(jax.random.key(0), _DEFAULT_RNG_CALLS)
+    _DEFAULT_RNG_CALLS += 1
+    return key
+
 
 def generate(
     params,
@@ -209,11 +243,12 @@ def generate(
     caches = init_serve_caches(cfg, b, s + max_new)
     logits, caches = _prefill_fn(cfg)(params, tokens, caches, adapters_stack)
     tok0, key = sample_token(
-        logits, rng if rng is not None else jax.random.key(0), temperature
+        logits, rng if rng is not None else _default_rng(), temperature
     )
     toks, _ = _decode_scan_fn(cfg)(
         params, tok0, jnp.asarray(s, jnp.int32), caches, key,
-        adapters_stack, None, None, max_new, float(temperature), unroll,
+        adapters_stack, None, None, max_new,
+        jnp.asarray(temperature, jnp.float32), unroll,
     )
     return toks
 
@@ -240,11 +275,12 @@ def generate_grouped(
         params, tokens, caches, pools, idx
     )
     tok0, key = sample_token(
-        logits, rng if rng is not None else jax.random.key(0), temperature
+        logits, rng if rng is not None else _default_rng(), temperature
     )
     toks, _ = _decode_scan_fn(cfg, use_kernel)(
         params, tok0, jnp.asarray(s, jnp.int32), caches, key,
-        None, pools, idx, max_new, float(temperature), unroll,
+        None, pools, idx, max_new,
+        jnp.asarray(temperature, jnp.float32), unroll,
     )
     return toks
 
@@ -266,7 +302,7 @@ def generate_loop(
     prefill = _prefill_fn(cfg)
     decode = _decode_step_fn(cfg)
     logits, caches = prefill(params, tokens, caches, adapters_stack)
-    key = rng if rng is not None else jax.random.key(0)
+    key = rng if rng is not None else _default_rng()
     tok, key = sample_token(logits, key, temperature)
     out = []
     for i in range(max_new):
@@ -348,6 +384,7 @@ class SessionRuntime:
         seed: int = 0,
         mesh=None,
         placement_shards: Optional[int] = None,
+        idx_memo_slots: int = 256,
     ):
         if sl.mode not in ("full", "int8"):
             raise ValueError(
@@ -437,10 +474,24 @@ class SessionRuntime:
         ]
         #: Per-shard adapt scan-path cache views (export_skipcache memo).
         self._export: list[Optional[Any]] = [None] * self.n_shards
-        #: (shard, tenant tuple, shard version) -> device idx array.
+        #: (shard, tenant tuple, shard version) -> device idx array, LRU.
         #: Repeated serve batches skip the per-call host->device slot-index
         #: transfer; any slot-map change bumps the version and invalidates.
-        self._idx_cache: dict[tuple, jax.Array] = {}
+        #: Live traffic produces unboundedly many distinct tenant orderings
+        #: (and version bumps strand old entries), so the memo is bounded at
+        #: ``idx_memo_slots``: hits refresh recency, misses evict the
+        #: least-recently-used entry once full. ``counters`` tracks
+        #: ``idx_memo/{hits,misses,evictions}``.
+        if idx_memo_slots < 1:
+            raise ValueError(f"idx_memo_slots {idx_memo_slots} < 1")
+        self._idx_cache: OrderedDict[tuple, jax.Array] = OrderedDict()
+        self._idx_cache_cap = int(idx_memo_slots)
+        #: Serve-call counter behind the per-session default rng: serve()
+        #: with rng=None derives fold_in(key(seed), counter) — deterministic
+        #: replay for an identically-seeded fresh session, never the same
+        #: key twice within one session.
+        self._serve_calls = 0
+        self._scheduler = None
         self.counters = Counter()
 
     # -- shard arithmetic ----------------------------------------------------
@@ -516,6 +567,16 @@ class SessionRuntime:
             raise ValueError(
                 f"{len(tenants)} tenants for batch {prompts.shape[0]}"
             )
+        if rng is None:
+            # Counter-derived per-session key: repeated temperature>0 serves
+            # without an explicit rng must not replay one sample stream, but
+            # an identically-seeded fresh session must still reproduce this
+            # one (the multi-shard fold_in(rng, s) split below then stays
+            # consistent with the single-shard stream by construction).
+            rng = jax.random.fold_in(
+                jax.random.key(self.seed), self._serve_calls
+            )
+        self._serve_calls += 1
         if all(t is None for t in tenants):
             path = "serve/single/base"
             toks = generate(
@@ -557,10 +618,14 @@ class SessionRuntime:
         key_ = (s, tuple(tenants), self.pool.shards[s].version)
         idx = self._idx_cache.get(key_)
         if idx is None:
-            if len(self._idx_cache) > 256:
-                self._idx_cache.clear()
+            self.counters["idx_memo/misses"] += 1
+            while len(self._idx_cache) >= self._idx_cache_cap:
+                self._idx_cache.popitem(last=False)  # evict LRU, keep rest
+                self.counters["idx_memo/evictions"] += 1
             idx = self._idx_cache[key_] = self.pool.lookup_local(s, tenants)
         else:
+            self.counters["idx_memo/hits"] += 1
+            self._idx_cache.move_to_end(key_)
             self.pool.touch(tenants)  # recency still tracks traffic
         return generate_grouped(
             self._shard_params[s], self.cfg, prompts,
@@ -568,6 +633,45 @@ class SessionRuntime:
             max_new=max_new, temperature=temperature, rng=rng,
             use_kernel=self.use_kernel, unroll=unroll,
         )
+
+    # -- request-level surface (continuous batching; core.scheduler) ---------
+
+    def attach_scheduler(self, **kw):
+        """Construct the session's ``RequestScheduler`` with explicit
+        limits (see ``core.scheduler.RequestScheduler``). The batch-level
+        ``serve``/``ingest`` calls above stay available alongside it —
+        the scheduler is a front door, not a replacement."""
+        from repro.core.scheduler import RequestScheduler
+
+        if self._scheduler is not None:
+            raise RuntimeError("session already has a scheduler attached")
+        self._scheduler = RequestScheduler(self, **kw)
+        return self._scheduler
+
+    @property
+    def scheduler(self):
+        """The attached scheduler (default limits if never configured)."""
+        if self._scheduler is None:
+            self.attach_scheduler()
+        return self._scheduler
+
+    def enqueue_serve(self, tenant, prompt, *, max_new: int,
+                      temperature: float = 0.0):
+        """Queue one generation request; returns its ``Request`` future.
+        Admission (per-tenant fairness, shard routing, row recycling) is
+        the scheduler's; pump with ``drain()`` or ``scheduler.step()``."""
+        return self.scheduler.submit(
+            tenant, prompt, max_new=max_new, temperature=temperature
+        )
+
+    def enqueue_ingest(self, tenant, tokens, labels):
+        """Queue fine-tuning ingestion to run at a step boundary between
+        decode dispatches; returns its ``IngestRequest``."""
+        return self.scheduler.submit_ingest(tenant, tokens, labels)
+
+    def drain(self):
+        """Run the scheduler until every queued request completes."""
+        return self.scheduler.drain()
 
     def ingest(self, tenant, tokens: jax.Array, labels: jax.Array) -> jax.Array:
         """Populate-phase forward for new on-device samples: writes the

@@ -83,6 +83,13 @@ def _parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--elastic-devices", type=int, default=None, metavar="M",
                     help="restart on only M devices after the injected "
                          "failure")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="serve through the continuous-batching request "
+                         "scheduler (per-request admission + drain) instead "
+                         "of pre-formed serve batches; ingest/adapt events "
+                         "are unchanged")
+    ap.add_argument("--sched-chunk", type=int, default=4,
+                    help="decode steps per scheduler dispatch")
     ap.add_argument("--json", default=None, help="write metrics to this path")
     return ap.parse_args(argv)
 
@@ -165,15 +172,37 @@ def main(argv=None) -> dict:
         )
         return toks, labs
 
+    def sched_serve(rt: SessionRuntime, who):
+        """One serve event through the request scheduler: enqueue each row
+        as its own request (staggered admission, recycled rows), drain, and
+        stack the per-request token streams back into the (B, gen) layout
+        the batch path returns — so --check-parity compares unchanged."""
+        if rt._scheduler is None:
+            rt.attach_scheduler(
+                max_batch=args.tenants + 1, max_prompt=args.prompt_len,
+                max_new_cap=args.gen, chunk=args.sched_chunk,
+                admit_bucket=min(2, args.tenants + 1),
+            )
+        reqs = [
+            rt.enqueue_serve(t, np.asarray(prompts[j]), max_new=args.gen)
+            for j, t in enumerate(who)
+        ]
+        rt.drain()
+        return jax.numpy.stack([jax.numpy.asarray(r.result()) for r in reqs])
+
+    def serve_event(rt, who):
+        if args.scheduler:
+            return sched_serve(rt, who)
+        return rt.serve(who, prompts, max_new=args.gen, unroll=args.unroll)
+
     events, labels = [], []
 
     def ev(label, fn):
         events.append(fn)
         labels.append(label)
 
-    ev("serve/base", lambda rt, i: rt.serve(
-        [None] * (args.tenants + 1), prompts, max_new=args.gen,
-        unroll=args.unroll,
+    ev("serve/base", lambda rt, i: serve_event(
+        rt, [None] * (args.tenants + 1)
     ))
     for rnd in range(args.rounds):
         for t, name in enumerate(names):
@@ -183,8 +212,8 @@ def main(argv=None) -> dict:
             names, epochs=args.adapt_epochs,
             batch_per_tenant=args.batch_per_tenant, key=jax.random.key(3),
         ))
-        ev(f"serve/mixed/r{rnd}", lambda rt, i: rt.serve(
-            [None] + names, prompts, max_new=args.gen, unroll=args.unroll,
+        ev(f"serve/mixed/r{rnd}", lambda rt, i: serve_event(
+            rt, [None] + names
         ))
 
     timings: dict[str, float] = {}

@@ -72,6 +72,12 @@ def main() -> None:
                     help="decode steps fused per scan iteration")
     ap.add_argument("--loop", action="store_true",
                     help="use the per-token loop instead of the fused scan")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="serve through the continuous-batching request "
+                         "scheduler (one request per batch row, staggered "
+                         "admission) instead of one pre-formed batch")
+    ap.add_argument("--chunk", type=int, default=4,
+                    help="decode steps per scheduler dispatch")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -81,6 +87,36 @@ def main() -> None:
     prompts = jax.random.randint(
         jax.random.key(3), (args.batch, args.prompt_len), 0, cfg.vocab_size
     )
+
+    if args.scheduler:
+        if args.loop:
+            ap.error("--loop and --scheduler are mutually exclusive")
+        rt = _demo_runtime(cfg, max(args.tenants, 1), args.rank,
+                           args.pool_compress, params)
+        rt.attach_scheduler(
+            max_batch=args.batch, max_prompt=args.prompt_len,
+            max_new_cap=args.gen, chunk=args.chunk,
+            admit_bucket=min(2, args.batch),
+        )
+        tenants = [None] + [
+            f"tenant-{i % max(args.tenants, 1)}" for i in range(1, args.batch)
+        ]
+        t0 = time.perf_counter()
+        reqs = [
+            rt.enqueue_serve(t, prompts[i], max_new=args.gen,
+                             temperature=args.temperature)
+            for i, t in enumerate(tenants)
+        ]
+        rt.drain()
+        dt = time.perf_counter() - t0
+        toks = jax.numpy.stack([jax.numpy.asarray(r.result()) for r in reqs])
+        c = rt.scheduler.counters
+        print(f"[scheduler: {c['dispatch/admit']} admit + "
+              f"{c['dispatch/step']} step dispatches, chunk {args.chunk}]")
+        print(f"generated {toks.shape} in {dt:.2f}s "
+              f"({args.batch * args.gen / dt:.1f} tok/s incl. compile)")
+        print("first sequences:", toks[:2, :8].tolist())
+        return
 
     if args.tenants > 0:
         if args.loop:

@@ -183,12 +183,33 @@ def attn_prefill(
 def attn_decode(
     params: Params,
     x: jax.Array,                 # (b, 1, d)
-    pos: jax.Array,               # scalar int32: index of the new token
+    pos: jax.Array,               # scalar int32 OR (b,) int32 per-row index
     spec: AttnSpec,
     cache: dict[str, jax.Array],
 ) -> tuple[jax.Array, dict[str, jax.Array]]:
-    """One decode step: write K/V at ``pos``, attend over cache[0:pos+1]."""
+    """One decode step: write K/V at ``pos``, attend over cache[0:pos+1].
+
+    ``pos`` is a scalar on the classic whole-batch path (every row at the
+    same sequence position; this branch is kept byte-identical so fused
+    ``decode_scan`` traces are unchanged). A (b,) vector selects the
+    continuous-batching path: each row writes its K/V at its own position
+    and masks keys per row — what the request scheduler needs once rows
+    admitted at different times share one live batch."""
     b = x.shape[0]
+    if getattr(pos, "ndim", 0) > 0:
+        positions = pos[:, None].astype(jnp.int32)               # (b, 1)
+        q, k, v = _qkv(params, x, positions, spec)
+        rows = jnp.arange(b)
+        ck = cache["k"].at[rows, pos].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, pos].set(v[:, 0].astype(cache["v"].dtype))
+        sk = ck.shape[1]
+        k_pos = jnp.arange(sk)
+        mask = k_pos[None, None, :] <= pos[:, None, None]        # (b, 1, sk)
+        if spec.window > 0:
+            mask &= k_pos[None, None, :] > (pos[:, None, None] - spec.window)
+        out = _sdpa(q, ck.astype(x.dtype), cv.astype(x.dtype), mask, spec)
+        y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+        return y, {"k": ck, "v": cv}
     positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
     q, k, v = _qkv(params, x, positions, spec)
     ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))

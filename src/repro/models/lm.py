@@ -347,19 +347,78 @@ def ingest_prefill(
 def sample_token(
     logits: jax.Array,             # (B, 1, V)
     key: jax.Array,
-    temperature: float,            # static
+    temperature,                   # python float (static) or traced scalar/(B,)
 ) -> tuple[jax.Array, jax.Array]:
     """Greedy / temperature sampling. Returns (tok (B, 1) int32, next key).
 
     The (B, 1) shape is invariant across both branches (scan carries depend
     on it), and the PRNG key is split-and-carried so every step of a scanned
-    generation draws from a fresh subkey."""
-    if temperature > 0:
-        key, sub = jax.random.split(key)
-        tok = jax.random.categorical(sub, logits[:, 0] / temperature)[:, None]
-    else:
-        tok = jnp.argmax(logits, axis=-1)
+    generation draws from a fresh subkey.
+
+    ``temperature`` may be a static python float (the historical path:
+    greedy skips the categorical and leaves the key untouched) or a traced
+    scalar / per-row (B,) vector. The serve path passes it traced so ONE
+    compiled decode serves every sampling temperature — and, under the
+    request scheduler, heterogeneous per-row temperatures — without
+    recompiling; the greedy/temperature select then happens inside the
+    computation and the key splits unconditionally (a greedy row still
+    ignores the drawn sample, so greedy tokens are unchanged)."""
+    if isinstance(temperature, (int, float)):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits[:, 0] / temperature)[:, None]
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        return tok.astype(jnp.int32), key
+    t = jnp.broadcast_to(
+        jnp.asarray(temperature, jnp.float32), (logits.shape[0],)
+    )
+    key, sub = jax.random.split(key)
+    # Divide in the logits dtype (a python-float temperature is a weak
+    # scalar and would not promote either) so temp>0 draws stay bitwise
+    # identical to the static-temperature path.
+    safe_t = jnp.where(t > 0, t, 1.0).astype(logits.dtype)
+    drawn = jax.random.categorical(sub, logits[:, 0] / safe_t[:, None])[:, None]
+    greedy = jnp.argmax(logits, axis=-1)
+    tok = jnp.where((t > 0)[:, None], drawn, greedy)
     return tok.astype(jnp.int32), key
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    carry,                         # (tok (B,1), pos, caches, key)
+    *,
+    temperature=0.0,
+    adapters: Optional[Params] = None,
+    pools: Optional[dict[str, jax.Array]] = None,
+    idx: Optional[jax.Array] = None,
+    use_kernel: bool = True,
+) -> tuple[tuple, jax.Array]:
+    """One explicitly resumable decode step (the Lingvo ``Step.FProp``
+    idiom: per-step state in, per-step state out — SNIPPETS.md §3).
+
+    ``carry`` is exactly the ``decode_scan`` carry — (tok, pos, caches,
+    key) — so a scan of this function IS the fused decode, and anything
+    holding a carry can stop at a step boundary, let the scheduler admit
+    new rows into it (scattering prefilled cache rows + per-row positions),
+    and resume. ``pos`` may be a scalar (whole batch at one position, the
+    classic path) or a per-row (B,) vector (continuous batching: every row
+    at its own sequence position — see ``attention.attn_decode``).
+
+    Returns ``(next_carry, next_token)`` where ``next_token`` is the token
+    sampled THIS step (it is also ``next_carry[0]``)."""
+    tok, pos, caches, key = carry
+    if pools is not None:
+        logits, caches = serve_decode_grouped(
+            params, cfg, tok, pos, caches, pools, idx, use_kernel=use_kernel
+        )
+    else:
+        logits, caches = serve_decode(
+            params, cfg, tok, pos, caches, adapters=adapters
+        )
+    nxt, key = sample_token(logits, key, temperature)
+    return (nxt, pos + 1, caches, key), nxt
 
 
 def decode_scan(
@@ -371,7 +430,7 @@ def decode_scan(
     key: jax.Array,                # PRNG key (carried even for greedy)
     *,
     max_new: int,
-    temperature: float = 0.0,
+    temperature=0.0,               # python float (static) or traced scalar/(B,)
     adapters: Optional[Params] = None,
     pools: Optional[dict[str, jax.Array]] = None,
     idx: Optional[jax.Array] = None,
@@ -393,20 +452,60 @@ def decode_scan(
     and the final caches)."""
 
     def body(carry, _):
-        tok, pos, caches, key = carry
-        if pools is not None:
-            logits, caches = serve_decode_grouped(
-                params, cfg, tok, pos, caches, pools, idx, use_kernel=use_kernel
-            )
-        else:
-            logits, caches = serve_decode(
-                params, cfg, tok, pos, caches, adapters=adapters
-            )
-        nxt, key = sample_token(logits, key, temperature)
-        return (nxt, pos + 1, caches, key), tok
+        tok = carry[0]
+        new_carry, _ = decode_step(
+            params, cfg, carry, temperature=temperature, adapters=adapters,
+            pools=pools, idx=idx, use_kernel=use_kernel,
+        )
+        return new_carry, tok
 
     (_, _, caches, _), toks = jax.lax.scan(
         body, (tok0, start_pos, caches, key), None, length=max_new,
         unroll=min(unroll, max_new),
     )
     return jnp.swapaxes(toks[..., 0], 0, 1), caches
+
+
+def sched_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,             # (A, P) int32, right-padded per row
+    lens: jax.Array,               # (A,) int32 true prompt length per row
+    pools: Optional[dict[str, jax.Array]] = None,
+    idx: Optional[jax.Array] = None,   # (A,) int32 slot per row
+    *,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, Params]:
+    """Admission prefill for the request scheduler: ragged prompts in one
+    padded (A, P) batch (the Lingvo ``Step.PrepareExternalInputs`` moment).
+
+    Unlike ``serve_prefill_grouped`` this reads each row's logits at its own
+    last *real* position (``lens[a] - 1``) instead of column -1, so rows
+    shorter than the pad bucket still produce their correct next-token
+    distribution. Pad positions do write garbage K/V at indices >= len, but
+    decode resumes at ``pos = len`` and overwrites index ``len`` before the
+    causal mask ever exposes it — each later pad index likewise — so padding
+    never leaks into attention. Caches are allocated at (A, P) here; the
+    scheduler scatters rows into its live (B, max_seq) caches on admission.
+    When ``lens == P`` (uniform bucket) this is bitwise
+    ``serve_prefill_grouped``: the per-row gather picks the same elements
+    column -1 slicing does. Returns (logits (A, 1, V), caches)."""
+    a, p = tokens.shape
+    caches = init_serve_caches(cfg, a, p)
+    out = lm_forward(
+        params, cfg, tokens, mode="prefill", caches=caches, collect_acts=True
+    )
+    last = (jnp.maximum(lens, 1) - 1).astype(jnp.int32)          # (A,)
+    y_last = jnp.take_along_axis(
+        out["y_base"], last[:, None, None], axis=1
+    )                                                            # (A, 1, D)
+    if pools is not None:
+        from repro.core.adapter_pool import grouped_skip_sum
+
+        acts_last = jnp.take_along_axis(
+            out["acts"], last[None, :, None, None], axis=2
+        )                                                        # (L, A, 1, D)
+        skip = grouped_skip_sum(acts_last, pools, idx, use_kernel=use_kernel)
+        y_last = y_last + skip.astype(y_last.dtype)
+    logits = readout(params, cfg, y_last)
+    return logits, out["caches"]

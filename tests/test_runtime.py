@@ -221,6 +221,74 @@ class TestRouting:
         assert rt.counters["serve/grouped/float"] == 0
 
 
+class TestServeSweep:
+    """The PR 6 serve-path correctness sweep: per-session PRNG derivation,
+    bounded slot-idx memo, and one compiled decode across temperatures."""
+
+    def test_default_rng_not_shared_across_calls(self, cfg, params):
+        """Two rng=None serves at temperature>0 must NOT replay the same
+        stream (the old code handed every caller ``jax.random.key(0)``);
+        an identically-seeded fresh session must replay it exactly."""
+        prompts = jax.random.randint(jax.random.key(5), (2, 6), 0, cfg.vocab_size)
+        rt = make_runtime(cfg, params)
+        a = rt.serve([None, None], prompts, max_new=4, temperature=0.8)
+        b = rt.serve([None, None], prompts, max_new=4, temperature=0.8)
+        assert not np.array_equal(np.asarray(a), np.asarray(b))
+        rt2 = make_runtime(cfg, params)
+        a2 = rt2.serve([None, None], prompts, max_new=4, temperature=0.8)
+        b2 = rt2.serve([None, None], prompts, max_new=4, temperature=0.8)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(a2))
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(b2))
+
+    def test_module_default_rng_advances(self, cfg, params):
+        from repro.launch.serve import generate
+
+        prompts = jax.random.randint(jax.random.key(5), (2, 6), 0, cfg.vocab_size)
+        a = generate(params, cfg, prompts, max_new=4, temperature=0.8)
+        b = generate(params, cfg, prompts, max_new=4, temperature=0.8)
+        assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_idx_memo_lru_bound_and_counters(self, cfg, params):
+        rt = make_runtime(cfg, params, n_t=2, idx_memo_slots=2)
+        tokens, labels = make_data(cfg, 2, 4, 8)
+        for t in range(2):
+            rt.ingest(f"u{t}", tokens[t], labels[t])
+        rt.adapt(epochs=1, batch_per_tenant=2, key=jax.random.key(3))
+        prompts = jax.random.randint(jax.random.key(5), (2, 6), 0, cfg.vocab_size)
+        orders = [["u0", "u1"], ["u1", "u0"], ["u0", "u0"]]
+        for who in orders:
+            rt.serve(who, prompts, max_new=2)
+        assert len(rt._idx_cache) == 2          # third ordering evicted one
+        assert rt.counters["idx_memo/misses"] == 3
+        assert rt.counters["idx_memo/evictions"] == 1
+        # The survivor set is the two most-recent orderings; the evicted
+        # first ordering misses again, the freshest ordering hits.
+        rt.serve(orders[2], prompts, max_new=2)
+        assert rt.counters["idx_memo/hits"] == 1
+        rt.serve(orders[0], prompts, max_new=2)
+        assert rt.counters["idx_memo/misses"] == 4
+        with pytest.raises(ValueError, match="idx_memo_slots"):
+            make_runtime(cfg, params, idx_memo_slots=0)
+
+    def test_temperature_sweep_hits_one_compiled_decode(self, cfg, params):
+        """Temperature is traced, not static: serving the same shapes at
+        several distinct temperatures must neither retrace ``decode_scan``
+        nor grow the compiled-fn cache (the old static argnum recompiled
+        the whole decode per distinct float)."""
+        from repro.core.runtime import TRACE_COUNTS
+
+        rt = make_runtime(cfg, params)
+        # Distinctive shapes so the first call owns its (re)traces.
+        prompts = jax.random.randint(jax.random.key(5), (3, 7), 0, cfg.vocab_size)
+        rt.serve([None] * 3, prompts, max_new=5, temperature=0.0)
+        traces0 = TRACE_COUNTS["decode_scan"]
+        entries0 = len(_FN_CACHE)
+        for temp in (0.3, 0.7, 1.0, 1.3):
+            rt.serve([None] * 3, prompts, max_new=5, temperature=temp)
+        assert TRACE_COUNTS["decode_scan"] == traces0
+        assert len(_FN_CACHE) == entries0
+
+
 class TestAdaptGrouping:
     def test_unequal_trajectories_split_into_groups(self, cfg, params):
         """Tenants at different optimizer steps cannot share a stacked
