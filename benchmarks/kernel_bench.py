@@ -1,0 +1,286 @@
+"""Kernel speed benchmarks: autotuned tiles, fused decode, q4 pools.
+
+The three claims of the kernel speed pass, measured and gated:
+
+  - **Tile sweep** (``kernels.autotune``): the tuned ``(tm, grid_order)``
+    beats the hand-picked ``TM=128`` rows-outer default on at least one
+    config. At decode shape (m = batch) the padded row count
+    ``ceil(m/tm)*tm + groups*tm`` dominates, so small tiles win — the
+    sweep proves it with real timings and records the roofline prediction
+    next to each winner.
+  - **Fused decode**: ``decode_fuse=True`` routes the grouped skip-sum
+    through the dense per-row gather (one XLA program with the backbone,
+    no separate sort/pad/scatter dispatch). Measured as sustained tok/s
+    through ``RequestScheduler`` in continuous mode, with the PR 6 parity
+    bar enforced: every temperature-0 request yields identical tokens in
+    fused and split runs.
+  - **q4 pools**: packed int4/nf4 ``AdapterPool`` payload is exactly half
+    the int8 payload; eval loss (last-position CE through the serve path)
+    is reported per compression so the accuracy cost is visible next to
+    the bytes saved.
+
+  PYTHONPATH=src python -m benchmarks.kernel_bench           # full
+  PYTHONPATH=src python -m benchmarks.kernel_bench --quick   # CI smoke
+
+Writes ``BENCH_kernels.json`` (``--json``); exits non-zero if a gate
+breaks (temp-0 parity, tuned > default everywhere, payload not halved).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import autotune as AT
+from repro.kernels.skip_lora import kernel as K
+
+Rows = "list[tuple[str, float]]"
+
+
+# ---------------------------------------------------------------------------
+# Section 1: tile sweep (tuned vs hand-picked default)
+# ---------------------------------------------------------------------------
+
+
+def _sweep_inputs(m: int, *, d: int = 64, r: int = 8, lnum: int = 4, n: int = 4):
+    key = jax.random.PRNGKey(0)
+    kx, ka, kb = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (lnum, m, d), jnp.float32)
+    a_pool = jax.random.normal(ka, (n, lnum, d, r), jnp.float32) * 0.1
+    b_pool = jax.random.normal(kb, (n, lnum, r, d), jnp.float32) * 0.1
+    idx = jnp.arange(m, dtype=jnp.int32) % n
+    return x, a_pool, b_pool, idx
+
+
+def tile_sweep(quick: bool = False) -> Rows:
+    """Tune every kernel variant at decode shape (m=8) and prefill shape
+    (m=512; 128 in quick mode). Winner <= default by construction (the
+    default is in the candidate set); the gate in main() wants a strict
+    win somewhere."""
+    shapes = [("decode_m8", 8), ("prefill_m128" if quick else "prefill_m512",
+                                 128 if quick else 512)]
+    variants = ["grouped"] if quick else [
+        "grouped", "grouped_int8", "grouped_int4", "grouped_nf4"]
+    timer = AT.median_timer(iters=2, warmup=1) if quick else None
+    rows: list[tuple[str, float]] = []
+    for shape_name, m in shapes:
+        x, a_pool, b_pool, idx = _sweep_inputs(m)
+        for variant in variants:
+            ch = AT.tune_grouped(
+                x, a_pool, b_pool, idx, variant,
+                config=f"bench-{shape_name}", timer=timer,
+                tiles=(8, 16, 32, K.TM) if quick else None,
+            )
+            base = f"kernel/tune/{shape_name}/{variant}"
+            rows += [
+                (f"{base}/tuned_ms", ch.time_s * 1e3),
+                (f"{base}/default_ms", ch.default_time_s * 1e3),
+                (f"{base}/speedup_x", ch.default_time_s / max(ch.time_s, 1e-12)),
+                (f"{base}/tm", float(ch.tm)),
+                (f"{base}/grid_order_is_lm", float(ch.grid_order == "lm")),
+                (f"{base}/predicted_ms", ch.predicted_s * 1e3),
+            ]
+    # Decode-scan unroll at decode shape, using the grouped winner's tile.
+    x, a_pool, b_pool, idx = _sweep_inputs(8)
+    ch = AT.tune_grouped(x, a_pool, b_pool, idx, config="bench-decode_m8",
+                         timer=timer, tiles=(8, 16, K.TM) if quick else None)
+    u, t = AT.tune_decode_unroll(
+        x, a_pool, b_pool, idx, tm=ch.tm, grid_order=ch.grid_order,
+        steps=4 if quick else 16, timer=timer,
+    )
+    rows += [
+        ("kernel/tune/decode_m8/unroll", float(u)),
+        ("kernel/tune/decode_m8/unroll_scan_ms", t * 1e3),
+    ]
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Section 2: fused vs split decode through the scheduler
+# ---------------------------------------------------------------------------
+
+
+def _make_runtime(n_tenants: int, *, rank: int = 4, decode_fuse: bool = False):
+    from repro.configs import get_config, reduce_config
+    from repro.core import lm_skiplora as SL
+    from repro.core.runtime import SessionRuntime
+    from repro.models.lm import init_lm
+
+    cfg = reduce_config(get_config("stablelm-1.6b"))
+    params = init_lm(jax.random.key(0), cfg)
+    sl = SL.SkipLoRAConfig(rank=rank)
+    rt = SessionRuntime(
+        cfg, sl, params, max_tenants=n_tenants, samples_per_tenant=1, seq=8,
+        decode_fuse=decode_fuse,
+    )
+    for t in range(n_tenants):
+        ad = SL.init_adapters(jax.random.key(100 + t), cfg, sl)
+        ad["B"] = jax.random.normal(jax.random.key(200 + t), ad["B"].shape) * 0.02
+        rt.pool.register(f"tenant-{t}", ad)
+    return rt
+
+
+def _drain(rt, reqs_spec, *, max_batch: int, prompt_len: int, max_new: int):
+    """Submit every request up front (saturated batch — the fusion win is
+    per decode dispatch, arrival jitter only adds noise), pump to empty.
+    Returns (makespan_s, [token lists])."""
+    from repro.core.scheduler import RequestScheduler
+
+    sched = RequestScheduler(
+        rt, max_batch=max_batch, max_prompt=prompt_len, max_new_cap=max_new,
+        admit_bucket=min(2, max_batch), inflight_per_tenant=len(reqs_spec),
+        chunk=4, mode="continuous",
+    )
+    reqs = [sched.submit(tenant, prompt, max_new=max_new, temperature=0.0)
+            for tenant, prompt in reqs_spec]
+    t0 = time.perf_counter()
+    while len(sched._completed) < len(reqs):
+        sched.step()
+    makespan = time.perf_counter() - t0
+    return makespan, [r.result().tolist() for r in reqs]
+
+
+def fused_decode(quick: bool = False) -> tuple[Rows, bool]:
+    """Same request set through split (two-dispatch) and fused decode.
+    All requests run at temperature 0 so the parity bar is token-level
+    equality, request by request."""
+    n_req = 4 if quick else 8
+    n_tenants, prompt_len, max_new = 3, 8, 8 if quick else 16
+    rng = np.random.default_rng(7)
+    rt_probe = _make_runtime(n_tenants)
+    vocab = rt_probe.cfg.vocab_size
+    del rt_probe
+    spec = [
+        (None if i % (n_tenants + 1) == 0 else f"tenant-{i % n_tenants}",
+         rng.integers(0, vocab, size=prompt_len, dtype=np.int32))
+        for i in range(n_req)
+    ]
+
+    results = {}
+    for label, fuse in (("split", False), ("fused", True)):
+        rt = _make_runtime(n_tenants, decode_fuse=fuse)
+        # Warm the compile caches so makespan measures steady-state decode.
+        _drain(rt, spec[:2], max_batch=4, prompt_len=prompt_len, max_new=4)
+        makespan, tokens = _drain(
+            rt, spec, max_batch=4, prompt_len=prompt_len, max_new=max_new)
+        results[label] = (makespan, tokens)
+
+    parity = results["split"][1] == results["fused"][1]
+    toks = n_req * max_new
+    split_s, fused_s = results["split"][0], results["fused"][0]
+    rows = [
+        ("kernel/fused_decode/split_tok_s", toks / split_s),
+        ("kernel/fused_decode/fused_tok_s", toks / fused_s),
+        ("kernel/fused_decode/fused_speedup_x", split_s / fused_s),
+        ("kernel/fused_decode/temp0_token_match", float(parity)),
+    ]
+    return rows, parity
+
+
+# ---------------------------------------------------------------------------
+# Section 3: q4 pools — bytes + eval loss per compression
+# ---------------------------------------------------------------------------
+
+
+def q4_pools(quick: bool = False) -> tuple[Rows, bool]:
+    from repro.configs import get_config, reduce_config
+    from repro.core import lm_skiplora as SL
+    from repro.core.adapter_pool import AdapterPool
+    from repro.models.lm import init_lm, init_serve_caches, serve_prefill_grouped
+
+    cfg = reduce_config(get_config("stablelm-1.6b"))
+    params = init_lm(jax.random.key(0), cfg)
+    sl = SL.SkipLoRAConfig(rank=4)
+    n_tenants, b, prompt = 3, 4, 8
+    adapters = []
+    for t in range(n_tenants):
+        ad = SL.init_adapters(jax.random.key(100 + t), cfg, sl)
+        ad["B"] = jax.random.normal(jax.random.key(200 + t), ad["B"].shape) * 0.02
+        adapters.append(ad)
+
+    tokens = jax.random.randint(jax.random.key(1), (b, prompt), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.key(2), (b,), 0, cfg.vocab_size)
+
+    payload_keys = ("A", "B", "qa", "qb", "qa4", "qb4")
+    losses, payloads, totals = {}, {}, {}
+    for compress in (None, "int8", "int4", "nf4"):
+        pool = AdapterPool(n_tenants + 1, cfg, sl.rank, compress=compress)
+        for t, ad in enumerate(adapters):
+            pool.register(f"tenant-{t}", ad)
+        idx = pool.lookup([None] + [f"tenant-{t}" for t in range(b - 1)])
+        pools = pool.pools()
+        caches = init_serve_caches(cfg, b, prompt)
+        logits, _ = serve_prefill_grouped(
+            params, cfg, tokens, caches, pools, idx, use_kernel=False)
+        logits = logits.reshape(b, logits.shape[-1])
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+        name = compress or "float"
+        losses[name] = float(loss)
+        payloads[name] = sum(
+            int(v.size) * v.dtype.itemsize
+            for k, v in pools.items() if k in payload_keys)
+        totals[name] = pool.nbytes()
+
+    halved = payloads["int4"] * 2 == payloads["int8"] and \
+        payloads["nf4"] * 2 == payloads["int8"]
+    rows: list[tuple[str, float]] = []
+    for name in ("float", "int8", "int4", "nf4"):
+        rows += [
+            (f"kernel/q4/{name}/eval_loss", losses[name]),
+            (f"kernel/q4/{name}/eval_loss_delta", losses[name] - losses["float"]),
+            (f"kernel/q4/{name}/payload_bytes", float(payloads[name])),
+            (f"kernel/q4/{name}/total_bytes", float(totals[name])),
+        ]
+    rows += [
+        ("kernel/q4/int4_payload_vs_int8_x",
+         payloads["int4"] / payloads["int8"]),
+        ("kernel/q4/int4_total_vs_int8_x", totals["int4"] / totals["int8"]),
+    ]
+    return rows, halved
+
+
+# ---------------------------------------------------------------------------
+
+
+def kernel_bench(quick: bool = False) -> tuple[Rows, dict]:
+    tune_rows = tile_sweep(quick)
+    fuse_rows, parity = fused_decode(quick)
+    q4_rows, halved = q4_pools(quick)
+    rows = tune_rows + fuse_rows + q4_rows
+    speedups = [v for k, v in tune_rows if k.endswith("/speedup_x")]
+    gates = {
+        "tuned_beats_default": any(s > 1.0 for s in speedups),
+        "temp0_parity": parity,
+        "q4_payload_halved": halved,
+    }
+    return rows, gates
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="BENCH_kernels.json")
+    args = ap.parse_args(argv)
+
+    rows, gates = kernel_bench(quick=args.quick)
+    for name, val in rows:
+        print(f"{name},{val:.6g}")
+    payload = {name: val for name, val in rows}
+    payload["_gates"] = {k: bool(v) for k, v in gates.items()}
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {args.json}")
+    broken = [k for k, ok in gates.items() if not ok]
+    if broken:
+        raise SystemExit(f"kernel bench gates broken: {broken}")
+    print(f"gates OK: {sorted(gates)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,12 +28,24 @@ def main() -> None:
 
     from benchmarks import (
         fleet_bench,
+        kernel_bench,
         lm_bench,
         paper_tables,
         runtime_bench,
         serve_bench,
         serving_bench,
     )
+
+    def kernel_section():
+        rows, gates = kernel_bench.kernel_bench(quick=args.quick)
+        payload = {key: val for key, val in rows}
+        payload["_gates"] = {k: bool(v) for k, v in gates.items()}
+        with open("BENCH_kernels.json", "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        if not all(gates.values()):
+            raise RuntimeError(f"kernel gates broken: "
+                               f"{[k for k, ok in gates.items() if not ok]}")
+        return rows
 
     def serving_section():
         rows, payload = serving_bench.serving_slo(quick=args.quick)
@@ -47,6 +59,7 @@ def main() -> None:
         ("serve_grouped", lambda: serve_bench.grouped_adapters(
             gen=8 if args.quick else 32)),
         ("serving_slo", serving_section),
+        ("kernel_speed", kernel_section),
         ("runtime", lambda: runtime_bench.runtime_session(quick=args.quick)),
         ("fleet", lambda: fleet_bench.fleet_vs_sequential(quick=args.quick)),
         ("table2", lambda: paper_tables.table2_breakdown()),

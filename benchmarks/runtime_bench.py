@@ -59,7 +59,10 @@ import numpy as np
 from repro.configs import get_config, reduce_config
 from repro.core import lm_skiplora as SL
 from repro.core.runtime import SessionRuntime, generate_grouped
-from repro.models.lm import init_lm
+from repro.launch.flops import model_flops
+from repro.launch.hlo_analysis import analyze_collectives, analyze_dot_flops
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+from repro.models.lm import init_lm, init_serve_caches, serve_decode_grouped, serve_prefill_grouped
 from repro.runtime.sharding import make_mesh
 
 
@@ -71,6 +74,80 @@ def _time(fn, repeats: int = 5) -> float:
         jax.block_until_ready(fn())
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def _xla_cost(compiled) -> dict:
+    """``Compiled.cost_analysis()`` across jax versions: newer returns a
+    dict, older a list with one dict per partition, some backends raise."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if isinstance(ca, dict) else {}
+
+
+def dispatch_cost(fn, *args) -> dict[str, float]:
+    """Compile ``fn(*args)`` and report its static cost model: HLO dot
+    FLOPs (launch.hlo_analysis, loop-multiplied), XLA's own flops/bytes
+    estimate, collective bytes, and the roofline time bounds those imply."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    cost = _xla_cost(compiled)
+    hlo = compiled.as_text()
+    dot = analyze_dot_flops(hlo)
+    coll = analyze_collectives(hlo)
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    return {
+        "dot_flops": dot,
+        "xla_flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": bytes_accessed,
+        "collective_bytes": float(coll.total_bytes),
+        "roofline_compute_s": dot / PEAK_FLOPS,
+        "roofline_memory_s": bytes_accessed / HBM_BW,
+    }
+
+
+def dispatch_cost_rows(
+    arch: str, cfg, params, prompts, pools, idx, *, b: int, prompt: int
+) -> list[tuple[str, float]]:
+    """Per-dispatch FLOPs + bytes columns for the two serve dispatches the
+    scheduler lives in (grouped prefill, one grouped decode step), plus the
+    analytic MODEL_FLOPS so the JSON shows the HLO-vs-model ratio."""
+    caches = init_serve_caches(cfg, b, prompt + 8)
+
+    def _prefill(p, tk, c, pl_a, pl_b, ix):
+        return serve_prefill_grouped(
+            p, cfg, tk, c, {"A": pl_a, "B": pl_b}, ix, use_kernel=False
+        )
+
+    def _decode(p, tok, pos, c, pl_a, pl_b, ix):
+        return serve_decode_grouped(
+            p, cfg, tok, pos, c, {"A": pl_a, "B": pl_b}, ix, use_kernel=False
+        )
+
+    tok1 = prompts[:, -1:]
+    pos = jnp.asarray(prompt, jnp.int32)
+    costs = {
+        "prefill": dispatch_cost(
+            _prefill, params, prompts, caches, pools["A"], pools["B"], idx
+        ),
+        "decode_step": dispatch_cost(
+            _decode, params, tok1, pos, caches, pools["A"], pools["B"], idx
+        ),
+    }
+    rows = [
+        (f"runtime/{arch}/{disp}/{col}", val)
+        for disp, cost in costs.items()
+        for col, val in cost.items()
+    ]
+    for disp, step in (("prefill", "prefill"), ("decode_step", "decode")):
+        mf = model_flops(cfg, (b, prompt), step)
+        rows.append((f"runtime/{arch}/{disp}/model_flops", mf))
+        hlo_f = costs[disp]["dot_flops"]
+        if hlo_f > 0:
+            rows.append((f"runtime/{arch}/{disp}/hlo_vs_model_x", hlo_f / mf))
+    return rows
 
 
 def _session(cfg, sl, params, n_tenants: int, spt: int, seq: int) -> SessionRuntime:
@@ -123,6 +200,11 @@ def runtime_session(
     ))
     toks = b * gen
 
+    # -- static per-dispatch cost columns (launch.* cost models) ------------
+    cost_rows = dispatch_cost_rows(
+        arch, cfg, params, prompts, pools, idx, b=b, prompt=prompt
+    )
+
     # -- interleaved session: serve -> ingest -> adapt -> serve -------------
     rt2 = _session(cfg, sl, params, n_tenants, n_per, seq)
     rng = jax.random.key(2)
@@ -162,7 +244,7 @@ def runtime_session(
         (f"runtime/{arch}/pool_tenants", float(len(rt2.pool))),
         (f"runtime/{arch}/pool_MiB", rt2.pool.nbytes() / 2**20),
         (f"runtime/{arch}/adapt_epochs", float(adapt_epochs)),
-    ]
+    ] + cost_rows
 
 
 # ---------------------------------------------------------------------------

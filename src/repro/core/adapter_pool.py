@@ -20,6 +20,14 @@ scales over the last axis, the same scheme as the activation cache). The
 quantised slots feed ``skip_lora_grouped_int8`` *raw*: dequant happens on
 the gathered per-tile blocks in VMEM, so an int8 pool holds 4x the resident
 tenants of a bf16 pool for the same HBM.
+
+``compress="int4"`` / ``compress="nf4"`` halve the payload again: two 4-bit
+codebook indices packed per byte (``kernels.skip_lora.quant``) + the same
+fp32 rowwise scales, fed raw to ``skip_lora_grouped_q4`` (nibble unpack +
+codebook dequant on the gathered blocks in VMEM). ``int4`` is uniform
+symmetric; ``nf4`` uses the QLoRA NormalFloat4 levels, information-optimal
+for the normally-distributed factors LoRA actually has. Either way the
+zero slot stays EXACT zeros (scale 0), so base traffic is bitwise base.
 """
 
 from __future__ import annotations
@@ -33,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.core import donate_argnums
 from repro.core.lm_skiplora import quantize_int8
+from repro.kernels.skip_lora import quant as q4
 from repro.models.config import ModelConfig
 
 Params = Any
@@ -84,7 +93,7 @@ class AdapterPool:
     ):
         if n_slots < 2:
             raise ValueError("need >= 2 slots (slot 0 is pinned to zeros)")
-        if compress not in (None, "int8"):
+        if compress not in (None, "int8") + q4.Q4_KINDS:
             raise ValueError(f"unknown compression {compress!r}")
         self.n_slots = n_slots
         self.rank = rank
@@ -100,7 +109,21 @@ class AdapterPool:
 
         l, d, r = cfg.n_layers, cfg.d_model, rank
         self._shape_a, self._shape_b = (l, d, r), (l, r, d)
-        if compress == "int8":
+        if compress in q4.Q4_KINDS:
+            if r % 2 or d % 2:
+                raise ValueError(
+                    f"4-bit pools pack two indices per byte along the last "
+                    f"axis: rank {r} and d_model {d} must both be even"
+                )
+            # Zero-init payload is nibble 0 (NOT the zero level), but the
+            # zero-init SCALES make every unwritten slot dequantise to
+            # exact zeros — code[0] * 0.0.
+            self._qa4 = z((n_slots, l, d, r // 2), jnp.uint8)
+            self._sa = z((n_slots, l, d), jnp.float32)
+            self._qb4 = z((n_slots, l, r, d // 2), jnp.uint8)
+            self._sb = z((n_slots, l, r), jnp.float32)
+            self._code = z((16,), jnp.float32) + q4.codebook(compress)
+        elif compress == "int8":
             self._qa = z((n_slots, l, d, r), jnp.int8)
             self._sa = z((n_slots, l, d), jnp.float32)
             self._qb = z((n_slots, l, r, d), jnp.int8)
@@ -131,12 +154,7 @@ class AdapterPool:
         return tenant in self._lru
 
     def nbytes(self) -> int:
-        arrs = (
-            (self._qa, self._sa, self._qb, self._sb)
-            if self.compress == "int8"
-            else (self._a, self._b)
-        )
-        return sum(a.size * a.dtype.itemsize for a in arrs)
+        return sum(a.size * a.dtype.itemsize for a in self.pools().values())
 
     # -- registration -------------------------------------------------------
 
@@ -149,7 +167,14 @@ class AdapterPool:
                 f"{self._shape_a}/{self._shape_b}"
             )
         s = jnp.asarray(slot, jnp.int32)
-        if self.compress == "int8":
+        if self.compress in q4.Q4_KINDS:
+            qa, sa = q4.quantize_q4(a, self.compress)
+            qb, sb = q4.quantize_q4(b, self.compress)
+            self._qa4 = _set_slot(self._qa4, s, qa)
+            self._sa = _set_slot(self._sa, s, sa)
+            self._qb4 = _set_slot(self._qb4, s, qb)
+            self._sb = _set_slot(self._sb, s, sb)
+        elif self.compress == "int8":
             qa, sa = quantize_int8(a)
             qb, sb = quantize_int8(b)
             self._qa = _set_slot(self._qa, s, qa)
@@ -249,9 +274,16 @@ class AdapterPool:
             )
         slots = [self._assign_slot(t) for t in tenants]
         sv = jnp.asarray(slots, jnp.int32)
-        if self.compress == "int8":
+        if self.compress in q4.Q4_KINDS:
             # Rowwise (last-axis) quantisation is per-slot independent, so
             # quantising the whole stack at once matches per-slot writes.
+            qa, sa = q4.quantize_q4(a, self.compress)
+            qb, sb = q4.quantize_q4(b, self.compress)
+            self._qa4 = _set_slot(self._qa4, sv, qa)
+            self._sa = _set_slot(self._sa, sv, sa)
+            self._qb4 = _set_slot(self._qb4, sv, qb)
+            self._sb = _set_slot(self._sb, sv, sb)
+        elif self.compress == "int8":
             qa, sa = quantize_int8(a)
             qb, sb = quantize_int8(b)
             self._qa = _set_slot(self._qa, sv, qa)
@@ -310,11 +342,18 @@ class AdapterPool:
     def pools(self) -> dict[str, jax.Array]:
         """The stacked arrays the grouped kernel consumes, in storage layout.
 
-        float pool: {"A", "B"}; int8 pool: {"qa", "sa", "qb", "sb"} — the
-        int8 payload is handed over *raw* (dequant lives in the kernel).
+        float pool: {"A", "B"}; int8 pool: {"qa", "sa", "qb", "sb"};
+        4-bit pool: {"qa4", "sa", "qb4", "sb", "code"} — quantised payloads
+        are handed over *raw* (dequant lives in the kernel; ``code`` is the
+        16-entry codebook that distinguishes int4 from nf4).
         The dict is a snapshot of the live buffers: ``register`` donates
         them off-CPU, so re-fetch after any registration (see ``register``).
         """
+        if self.compress in q4.Q4_KINDS:
+            return {
+                "qa4": self._qa4, "sa": self._sa,
+                "qb4": self._qb4, "sb": self._sb, "code": self._code,
+            }
         if self.compress == "int8":
             return {"qa": self._qa, "sa": self._sa, "qb": self._qb, "sb": self._sb}
         return {"A": self._a, "B": self._b}
@@ -579,18 +618,35 @@ def grouped_skip_sum(
     idx: jax.Array,
     *,
     use_kernel: bool = True,
+    fused: bool = False,
 ) -> jax.Array:
-    """Per-row skip-sum over a stacked pool: unpacks the pool layout (float
-    or raw-int8) and forwards to the grouped kernel wrappers, which own the
-    row flattening, stop_gradient contract, and kernel/oracle dispatch.
+    """Per-row skip-sum over a stacked pool: unpacks the pool layout (float,
+    raw-int8, or packed-4-bit) and forwards to the grouped kernel wrappers,
+    which own the row flattening, stop_gradient contract, and kernel/oracle
+    dispatch.
 
     acts: (L, B, S, D); idx: (B,) int32 -> (B, S, D).
+
+    ``fused=True`` skips the grouped Pallas dispatch and inlines the dense
+    per-row gather + einsum instead — XLA then fuses the skip term straight
+    into the enclosing (decode) program: no kernel-launch boundary, no
+    sort/pad/scatter of B rows up to a (1 + groups) x tile buffer. At decode
+    shape (a handful of rows) the padding dominates the kernel's work, so
+    the fused form is the fast path; at prefill shape the grouped kernel
+    wins and ``fused`` should stay off.
     """
     from repro.kernels.skip_lora.ops import (
         skip_lora_grouped,
         skip_lora_grouped_int8,
+        skip_lora_grouped_q4,
     )
 
+    use_kernel = use_kernel and not fused
+    if "qa4" in pools:
+        return skip_lora_grouped_q4(
+            acts, pools["qa4"], pools["sa"], pools["qb4"], pools["sb"],
+            pools["code"], idx, use_kernel=use_kernel,
+        )
     if "qa" in pools:
         return skip_lora_grouped_int8(
             acts, pools["qa"], pools["sa"], pools["qb"], pools["sb"], idx,

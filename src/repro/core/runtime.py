@@ -157,7 +157,7 @@ def _prefill_grouped_fn(cfg, use_kernel: bool):
     return _cached_fn("prefill_grouped", cfg, make, (use_kernel,))
 
 
-def _decode_scan_fn(cfg, use_kernel: bool = True):
+def _decode_scan_fn(cfg, use_kernel: bool = True, fuse_skip: bool = False):
     def make():
         def f(params, tok0, pos0, caches, key, adapters, pools, idx,
               max_new, temperature, unroll):
@@ -165,7 +165,8 @@ def _decode_scan_fn(cfg, use_kernel: bool = True):
             return decode_scan(
                 params, cfg, tok0, pos0, caches, key,
                 max_new=max_new, temperature=temperature, adapters=adapters,
-                pools=pools, idx=idx, use_kernel=use_kernel, unroll=unroll,
+                pools=pools, idx=idx, use_kernel=use_kernel,
+                fuse_skip=fuse_skip, unroll=unroll,
             )
 
         # Donate the KV caches: the scan's carry updates them in place
@@ -181,7 +182,7 @@ def _decode_scan_fn(cfg, use_kernel: bool = True):
             donate_argnums=donate_argnums(3),
         )
 
-    return _cached_fn("decode_scan", cfg, make, (use_kernel,))
+    return _cached_fn("decode_scan", cfg, make, (use_kernel, fuse_skip))
 
 
 def _decode_step_fn(cfg):
@@ -264,11 +265,15 @@ def generate_grouped(
     temperature: float = 0.0,
     rng: Optional[jax.Array] = None,
     use_kernel: bool = True,
+    fuse_skip: bool = False,
     unroll: int = 1,
 ):
     """Multi-tenant generation: batch row b decodes under adapter slot
-    idx[b] gathered from the stacked pool (float or raw-int8 layout, see
-    ``AdapterPool.pools()``). Same two-dispatch structure as ``generate``."""
+    idx[b] gathered from the stacked pool (float, raw-int8, or packed-4-bit
+    layout, see ``AdapterPool.pools()``). Same two-dispatch structure as
+    ``generate``. ``fuse_skip`` inlines the decode skip term as dense math
+    (one fused XLA step program instead of backbone + grouped kernel);
+    prefill keeps the grouped kernel either way."""
     b, s = tokens.shape
     caches = init_serve_caches(cfg, b, s + max_new)
     logits, caches = _prefill_grouped_fn(cfg, use_kernel)(
@@ -277,7 +282,7 @@ def generate_grouped(
     tok0, key = sample_token(
         logits, rng if rng is not None else _default_rng(), temperature
     )
-    toks, _ = _decode_scan_fn(cfg, use_kernel)(
+    toks, _ = _decode_scan_fn(cfg, use_kernel, fuse_skip)(
         params, tok0, jnp.asarray(s, jnp.int32), caches, key,
         None, pools, idx, max_new,
         jnp.asarray(temperature, jnp.float32), unroll,
@@ -381,6 +386,7 @@ class SessionRuntime:
         hbm_budget_bytes: Optional[int] = None,
         cache_dir: Optional[str] = None,
         use_kernel: bool = True,
+        decode_fuse: bool = False,
         seed: int = 0,
         mesh=None,
         placement_shards: Optional[int] = None,
@@ -396,6 +402,10 @@ class SessionRuntime:
         self.samples_per_tenant = samples_per_tenant
         self.seq = seq
         self.use_kernel = use_kernel
+        # Inline the decode skip term as dense math (one fused step program)
+        # instead of a grouped kernel dispatch — temp-0 tokens are identical
+        # either way; see models.lm.decode_step.
+        self.decode_fuse = decode_fuse
         self.seed = seed
         self.optimizer = optimizer if optimizer is not None else adamw(lr)
         self._opt_key = ("adamw", lr) if optimizer is None else ("custom", id(optimizer))
@@ -631,7 +641,8 @@ class SessionRuntime:
             self._shard_params[s], self.cfg, prompts,
             self.pool.shard_pools(s), idx,
             max_new=max_new, temperature=temperature, rng=rng,
-            use_kernel=self.use_kernel, unroll=unroll,
+            use_kernel=self.use_kernel, fuse_skip=self.decode_fuse,
+            unroll=unroll,
         )
 
     # -- request-level surface (continuous batching; core.scheduler) ---------

@@ -120,20 +120,23 @@ class IngestRequest:
 # ---------------------------------------------------------------------------
 
 
-def _chunk_scan(params, cfg, use_kernel, chunk, pools, idx, caches, tok, pos,
-                active, temps, key, max_seq):
+def _chunk_scan(params, cfg, use_kernel, fuse, chunk, pools, idx, caches, tok,
+                pos, active, temps, key, max_seq):
     """``chunk`` decode steps over the live batch: a scan of ``decode_step``
     with per-row positions/temperatures/slots, dead rows frozen in place.
     Emits the token sampled at each step ((chunk, B)), unlike the fused
     ``decode_scan`` which emits the carried token — the host has already
     received every carried token, so emitting the new one means each chunk
-    hands back exactly the tokens the host has not seen."""
+    hands back exactly the tokens the host has not seen. ``fuse`` inlines
+    each step's skip term as dense math (no grouped kernel dispatch inside
+    the scan body) — temp-0 tokens are identical either way (tested)."""
 
     def body(carry, _):
         tok, pos, caches, key = carry
         (ntok, npos, caches, key), _ = decode_step(
             params, cfg, (tok, pos, caches, key),
             temperature=temps, pools=pools, idx=idx, use_kernel=use_kernel,
+            fuse_skip=fuse,
         )
         # Freeze retired rows (their cache writes land at a frozen, clamped
         # position nobody will read) and clamp live positions so a chunk
@@ -148,22 +151,25 @@ def _chunk_scan(params, cfg, use_kernel, chunk, pools, idx, caches, tok, pos,
     return caches, tok, pos, toks
 
 
-def _sched_step_fn(cfg, use_kernel: bool, chunk: int, max_seq: int):
+def _sched_step_fn(cfg, use_kernel: bool, chunk: int, max_seq: int,
+                   fuse: bool = False):
     def make():
         def f(params, pools, idx, caches, tok, pos, active, temps, key):
             RT._mark_trace("sched_step")
             return _chunk_scan(
-                params, cfg, use_kernel, chunk, pools, idx, caches,
+                params, cfg, use_kernel, fuse, chunk, pools, idx, caches,
                 tok, pos, active, temps, key, max_seq,
             )
 
         return jax.jit(f, donate_argnums=donate_argnums(3))
 
-    return RT.compiled(("sched_step", cfg, use_kernel, chunk, max_seq), make)
+    return RT.compiled(
+        ("sched_step", cfg, use_kernel, chunk, max_seq, fuse), make
+    )
 
 
 def _sched_admit_fn(cfg, use_kernel: bool, chunk: int, max_seq: int,
-                    bucket: int, prompt: int):
+                    bucket: int, prompt: int, fuse: bool = False):
     def make():
         def f(params, pools, idx, new_tokens, new_lens, new_idx, new_rows,
               caches, tok, pos, active, temps, key):
@@ -185,7 +191,7 @@ def _sched_admit_fn(cfg, use_kernel: bool, chunk: int, max_seq: int,
                 caches, new_caches,
             )
             caches, tok, pos, toks = _chunk_scan(
-                params, cfg, use_kernel, chunk, pools, idx, caches,
+                params, cfg, use_kernel, fuse, chunk, pools, idx, caches,
                 tok, pos, active, temps, key, max_seq,
             )
             return caches, tok, pos, toks, tok0
@@ -193,7 +199,8 @@ def _sched_admit_fn(cfg, use_kernel: bool, chunk: int, max_seq: int,
         return jax.jit(f, donate_argnums=donate_argnums(7))
 
     return RT.compiled(
-        ("sched_admit", cfg, use_kernel, chunk, max_seq, bucket, prompt), make
+        ("sched_admit", cfg, use_kernel, chunk, max_seq, bucket, prompt, fuse),
+        make,
     )
 
 
@@ -437,7 +444,7 @@ class RequestScheduler:
             new_idx = lb.idx[np.minimum(new_rows, self.max_batch - 1)]
             fn = _sched_admit_fn(
                 self.rt.cfg, self.rt.use_kernel, self.chunk, self.max_seq,
-                a, p,
+                a, p, getattr(self.rt, "decode_fuse", False),
             )
             lb.caches, lb.tok, lb.pos, toks, tok0 = fn(
                 params, pools, jnp.asarray(lb.idx), new_tokens, new_lens,
@@ -447,7 +454,8 @@ class RequestScheduler:
             self.counters["dispatch/admit"] += 1
             return shard, list(zip(admits, rows)), (toks, tok0)
         fn = _sched_step_fn(
-            self.rt.cfg, self.rt.use_kernel, self.chunk, self.max_seq
+            self.rt.cfg, self.rt.use_kernel, self.chunk, self.max_seq,
+            getattr(self.rt, "decode_fuse", False),
         )
         lb.caches, lb.tok, lb.pos, toks = fn(
             params, pools, jnp.asarray(lb.idx), lb.caches, lb.tok, lb.pos,

@@ -1,0 +1,392 @@
+"""Profiler-driven autotuning for the grouped Skip-LoRA kernels.
+
+The grouped kernels ran for five PRs on hand-picked parameters (``TM = 128``
+rows per tile, rows-outer grid, scan ``unroll=1``) that were never profiled.
+This harness makes them *measured*:
+
+  - ``tune_grouped`` sweeps the row tile (``tm``) and layer-grid order
+    (``grid_order``) for one kernel variant at one batch shape, timing the
+    real dispatch (median of repeats, post-``block_until_ready``) and
+    recording the roofline cost-model prediction
+    (``launch.roofline.PEAK_FLOPS`` / ``HBM_BW``) next to each measurement —
+    the predicted/measured pair is what makes a surprising winner auditable.
+  - ``tune_decode_unroll`` sweeps the decode-scan unroll factor over a
+    synthetic scan-of-dispatches at decode shape.
+  - ``AutotuneCache`` persists winners in a deterministic JSON file keyed on
+    ``config_key|device_kind|variant`` — same config + device kind always
+    resolves to the same choice, and a warm cache skips timing entirely
+    (the CI smoke asserts the second run is all cache hits).
+  - ``apply_choice`` installs a winner as the process-wide kernel default
+    (``ops.set_default_tile``), which every wrapper resolves at trace time.
+
+Tile candidates respect the TPU sublane minimum for the activation dtype
+(f32 8, bf16 16, int8 32 — smaller tiles can't be laid out in VMEM) and
+always include the hand-picked default, so the tuned choice is never worse
+than untuned *by construction*: the argmin runs over a set containing it.
+
+Usage (CI smoke):
+    PYTHONPATH=src python -m repro.kernels.autotune --quick --cache /tmp/at.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.skip_lora import kernel as K
+from repro.kernels.skip_lora import ops as O
+from repro.kernels.skip_lora import quant as Q
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+#: Minimum row tile per activation dtype: the TPU sublane tiling floor.
+_MIN_TILE = {
+    jnp.dtype(jnp.float32): 8,
+    jnp.dtype(jnp.bfloat16): 16,
+    jnp.dtype(jnp.int8): 32,
+    jnp.dtype(jnp.uint8): 32,
+}
+
+GRID_ORDERS = ("ml", "lm")
+UNROLL_CANDIDATES = (1, 2, 4)
+
+
+def tile_candidates(
+    m: int, dtype=jnp.float32, *, max_tile: int = 512
+) -> tuple[int, ...]:
+    """Valid row tiles for a batch of ``m`` rows: powers of two from the
+    dtype's sublane minimum up to ``max_tile``, the hand-picked default
+    always included. Tiles far above the row count only add padding, so the
+    sweep stops one doubling past ``m``."""
+    lo = _MIN_TILE.get(jnp.dtype(dtype), 8)
+    out = []
+    t = lo
+    while t <= max_tile:
+        out.append(t)
+        if t >= 2 * m and t >= K.TM:
+            break
+        t *= 2
+    if K.TM not in out:
+        out.append(K.TM)
+    return tuple(sorted(set(out)))
+
+
+def config_key(cfg, rank: int) -> str:
+    """Stable identity of the model shape the kernels serve: everything the
+    grouped dispatch geometry depends on."""
+    name = getattr(cfg, "name", "anon")
+    return f"{name}-d{cfg.d_model}-L{cfg.n_layers}-r{rank}"
+
+
+def device_kind() -> str:
+    """Hardware identity for the cache key; off-TPU the kernels run in
+    interpret mode, which has its own (very different) cost surface."""
+    kind = jax.devices()[0].device_kind.replace(" ", "_")
+    if jax.default_backend() != "tpu":
+        kind = f"{kind}-interpret"
+    return kind
+
+
+@dataclasses.dataclass(frozen=True)
+class Choice:
+    """One tuned parameter set + the evidence that chose it."""
+
+    tm: int
+    grid_order: str
+    unroll: int = 1
+    time_s: float = 0.0           # measured median for the winner
+    default_time_s: float = 0.0   # measured median for (K.TM, "ml")
+    predicted_s: float = 0.0      # roofline prediction for the winner
+    source: str = "measured"      # "measured" | "cache" | "default"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Choice":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls) if f.name in d})
+
+
+class AutotuneCache:
+    """Deterministic JSON store of tuned choices.
+
+    Entries are keyed ``config_key|device_kind|variant``; the file is written
+    with sorted keys so identical tuning runs produce byte-identical caches
+    (the round-trip test diffs the serialized form). ``hits``/``misses``
+    count lookups since construction — the CI smoke asserts a warm second
+    run never re-times."""
+
+    VERSION = 1
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.entries: dict[str, dict] = {}
+        self.hits = 0
+        self.misses = 0
+        if path and os.path.exists(path):
+            with open(path) as f:
+                blob = json.load(f)
+            if blob.get("version") == self.VERSION:
+                self.entries = blob.get("entries", {})
+
+    @staticmethod
+    def key(config: str, device: str, variant: str) -> str:
+        return f"{config}|{device}|{variant}"
+
+    def get(self, config: str, device: str, variant: str) -> Optional[Choice]:
+        entry = self.entries.get(self.key(config, device, variant))
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return Choice.from_dict({**entry, "source": "cache"})
+
+    def put(self, config: str, device: str, variant: str, choice: Choice) -> None:
+        self.entries[self.key(config, device, variant)] = choice.as_dict()
+        if self.path:
+            self.save(self.path)
+
+    def save(self, path: str) -> None:
+        blob = {"version": self.VERSION, "entries": self.entries}
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+
+
+# ---------------------------------------------------------------------------
+# Measurement + prediction
+# ---------------------------------------------------------------------------
+
+
+def median_timer(iters: int = 3, warmup: int = 1) -> Callable:
+    """Default timer: median wall-clock of ``iters`` post-warmup calls.
+    Tests inject a deterministic fake with the same signature."""
+
+    def timer(fn: Callable[[], jax.Array]) -> float:
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        return times[len(times) // 2]
+
+    return timer
+
+
+def predict_grouped_time(
+    m: int, d: int, r: int, lnum: int, n_groups: int, tm: int,
+    bytes_per_elt: int = 4,
+) -> float:
+    """Roofline estimate for one grouped dispatch at tile ``tm``.
+
+    FLOPs: two (tm, d) x (d, r) / (tm, r) x (r, d) dots per (row-tile,
+    layer) step over the PADDED row count — padding is real work, which is
+    exactly why small tiles win at decode shape. Bytes: per step, the x
+    tile in, the out tile read+written (layer accumulation), and one
+    (d, r) + (r, d) adapter block gathered. The max of the two terms over
+    the peak rates is the modeled step time."""
+    m_pad = (m + tm - 1) // tm * tm + min(n_groups, m) * tm
+    steps = (m_pad // tm) * lnum
+    flops = 4.0 * m_pad * d * r * lnum
+    tile_bytes = tm * d * bytes_per_elt
+    pool_bytes = 2 * d * r * bytes_per_elt
+    bytes_moved = steps * (3 * tile_bytes + pool_bytes)
+    return max(flops / PEAK_FLOPS, bytes_moved / HBM_BW)
+
+
+def _variant_dispatch(variant: str):
+    """variant -> (pools builder, dispatch fn). The builder turns a float
+    (a_pool, b_pool) pair into the variant's payload; the dispatch runs one
+    grouped forward at (tm, grid_order)."""
+    if variant == "grouped":
+        def build(a_pool, b_pool):
+            return (a_pool, b_pool)
+
+        def run(x, pools, idx, tm, order):
+            return O._grouped_rows(x, *pools, idx, tm, order)
+
+    elif variant == "grouped_int8":
+        from repro.core.lm_skiplora import quantize_int8
+
+        def build(a_pool, b_pool):
+            qa, sa = quantize_int8(a_pool)
+            qb, sb = quantize_int8(b_pool)
+            return (qa, sa, qb, sb)
+
+        def run(x, pools, idx, tm, order):
+            return O._grouped_rows_int8(x, *pools, idx, tm, order)
+
+    elif variant in ("grouped_int4", "grouped_nf4"):
+        kind = variant.split("_")[1]
+
+        def build(a_pool, b_pool):
+            qa, sa = Q.quantize_q4(a_pool, kind)
+            qb, sb = Q.quantize_q4(b_pool, kind)
+            return (qa, sa, qb, sb, Q.codebook(kind))
+
+        def run(x, pools, idx, tm, order):
+            return O._grouped_rows_q4(x, *pools, idx, tm, order)
+
+    else:
+        raise ValueError(f"unknown kernel variant {variant!r}")
+    return build, run
+
+
+def tune_grouped(
+    x: jax.Array,
+    a_pool: jax.Array,
+    b_pool: jax.Array,
+    idx: jax.Array,
+    variant: str = "grouped",
+    *,
+    config: str,
+    cache: Optional[AutotuneCache] = None,
+    device: Optional[str] = None,
+    tiles: Optional[Sequence[int]] = None,
+    orders: Sequence[str] = GRID_ORDERS,
+    timer: Optional[Callable] = None,
+) -> Choice:
+    """Pick (tm, grid_order) for one variant at one batch shape.
+
+    x: (L, M, D) rows; pools (N, L, D, R) / (N, L, R, D) float — the builder
+    quantises them for int8/q4 variants. Every candidate is timed on the
+    real dispatch; the hand-picked default (K.TM, "ml") is always a
+    candidate, so the winner is <= default by construction. A cache hit
+    returns without timing anything."""
+    device = device or device_kind()
+    if cache is not None:
+        hit = cache.get(config, device, variant)
+        if hit is not None:
+            return hit
+    timer = timer or median_timer()
+    build, run = _variant_dispatch(variant)
+    pools = build(a_pool, b_pool)
+    lnum, m, d = x.shape
+    n, r = a_pool.shape[0], a_pool.shape[-1]
+    g = int(min(n, m))
+    tiles = tuple(tiles) if tiles is not None else tile_candidates(m, x.dtype)
+
+    results = []  # (time_s, predicted_s, tm, order); tuple order breaks ties
+    for tm in tiles:
+        for order in orders:
+            t = timer(lambda tm=tm, order=order: run(x, pools, idx, tm, order))
+            p = predict_grouped_time(m, d, r, lnum, g, tm)
+            results.append((t, p, tm, order))
+    default_t = min(t for t, _, tm, order in results if tm == K.TM and order == "ml")
+    best_t, best_p, best_tm, best_order = min(results)
+    choice = Choice(
+        tm=best_tm, grid_order=best_order, time_s=best_t,
+        default_time_s=default_t, predicted_s=best_p,
+    )
+    if cache is not None:
+        cache.put(config, device, variant, choice)
+    return choice
+
+
+def tune_decode_unroll(
+    x: jax.Array,
+    a_pool: jax.Array,
+    b_pool: jax.Array,
+    idx: jax.Array,
+    *,
+    tm: int,
+    grid_order: str,
+    steps: int = 16,
+    candidates: Sequence[int] = UNROLL_CANDIDATES,
+    timer: Optional[Callable] = None,
+) -> tuple[int, float]:
+    """Pick the decode-scan ``unroll`` by timing a scan-of-dispatches at
+    decode shape — the same structure ``lm.decode_scan`` compiles, minus
+    the backbone. Returns (unroll, time_s)."""
+    timer = timer or median_timer()
+
+    def make(unroll):
+        @jax.jit
+        def scanned(x, pools, idx):
+            def step(carry, _):
+                out = O._grouped_rows(carry, *pools, idx, tm, grid_order)
+                return carry + out[None].astype(carry.dtype) * 0, out
+            _, outs = jax.lax.scan(step, x, None, length=steps, unroll=unroll)
+            return outs
+
+        return scanned
+
+    results = []
+    for u in candidates:
+        fn = make(u)
+        t = timer(lambda fn=fn: fn(x, (a_pool, b_pool), idx))
+        results.append((t, u))
+    best_t, best_u = min(results)
+    return best_u, best_t
+
+
+def apply_choice(choice: Choice) -> None:
+    """Install a tuned winner as the process-wide kernel default. Trace-time
+    only: call before warmup, not under live traffic."""
+    O.set_default_tile(tm=choice.tm, grid_order=choice.grid_order)
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke (CI quick tier): tiny sweep twice, assert the second run is all
+# cache hits and both runs agree.
+# ---------------------------------------------------------------------------
+
+
+def _smoke_inputs(m: int = 8, d: int = 32, r: int = 4, lnum: int = 2, n: int = 4):
+    key = jax.random.PRNGKey(0)
+    kx, ka, kb = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (lnum, m, d), jnp.float32)
+    a_pool = jax.random.normal(ka, (n, lnum, d, r), jnp.float32) * 0.1
+    b_pool = jax.random.normal(kb, (n, lnum, r, d), jnp.float32) * 0.1
+    idx = jnp.arange(m, dtype=jnp.int32) % n
+    return x, a_pool, b_pool, idx
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--cache", default="/tmp/skiplora_autotune.json")
+    ap.add_argument("--quick", action="store_true", help="tiny sweep (CI smoke)")
+    ap.add_argument("--variant", default="grouped", help="kernel variant to tune")
+    args = ap.parse_args()
+
+    x, a_pool, b_pool, idx = _smoke_inputs()
+    tiles = (8, 16, K.TM) if args.quick else None
+    timer = median_timer(iters=2, warmup=1) if args.quick else None
+    if os.path.exists(args.cache):
+        os.unlink(args.cache)
+
+    cache = AutotuneCache(args.cache)
+    first = tune_grouped(
+        x, a_pool, b_pool, idx, args.variant,
+        config="smoke", cache=cache, tiles=tiles, timer=timer,
+    )
+    assert cache.misses == 1 and cache.hits == 0, (cache.hits, cache.misses)
+
+    cache2 = AutotuneCache(args.cache)  # re-read from disk: warm
+    second = tune_grouped(
+        x, a_pool, b_pool, idx, args.variant,
+        config="smoke", cache=cache2, tiles=tiles, timer=timer,
+    )
+    assert cache2.hits == 1 and cache2.misses == 0, (cache2.hits, cache2.misses)
+    assert (second.tm, second.grid_order) == (first.tm, first.grid_order)
+    assert second.source == "cache"
+    print(
+        f"autotune smoke OK: tm={first.tm} order={first.grid_order} "
+        f"t={first.time_s * 1e3:.2f}ms (default {first.default_time_s * 1e3:.2f}ms), "
+        f"warm run hit cache"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -32,10 +32,49 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.skip_lora import quant as _Q
+
 # jax renamed TPUCompilerParams -> CompilerParams in newer releases.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
-TM = 128  # row-tile size (MXU-aligned)
+#: Default row-tile size (MXU-aligned). Every kernel below takes ``tm`` as a
+#: static parameter; this constant is only the untuned fallback — the
+#: autotune harness (``kernels.autotune``) measures per-config winners and
+#: threads them through ``ops`` (``ops.set_default_tile``). Valid tiles are
+#: bounded below by the dtype's minimum sublane count on TPU (f32 8, bf16 16,
+#: int8/uint8 32 — see ``autotune.tile_candidates``).
+TM = 128
+
+
+def _grouped_grid(grid_order: str, m_tiles: int, lnum: int):
+    """Grid + index-map convention for the grouped forwards.
+
+    ``"ml"`` (default): rows outer, layers inner — the fp32 out block stays
+    VMEM-resident while layers accumulate (one write-back per row tile).
+    ``"lm"``: layers outer, rows inner — each (A, B) layer block is gathered
+    once per (slot, layer) instead of once per (tile, layer), at the price
+    of revisiting out blocks across the outer axis (flush + re-fetch per
+    layer). Which wins is a bandwidth-vs-revisit trade the autotuner
+    measures per config. Returns (grid, wrap, l_axis, semantics) where
+    ``wrap`` lifts an index map written in (mi, li, g) convention into the
+    grid's argument order."""
+    if grid_order == "ml":
+        return (
+            (m_tiles, lnum),
+            lambda f: (lambda mi, li, g: f(mi, li, g)),
+            1,
+            ("parallel", "arbitrary"),
+        )
+    if grid_order == "lm":
+        # Out blocks are revisited across the OUTER axis, so neither axis
+        # may be reordered: both arbitrary.
+        return (
+            (lnum, m_tiles),
+            lambda f: (lambda li, mi, g: f(mi, li, g)),
+            0,
+            ("arbitrary", "arbitrary"),
+        )
+    raise ValueError(f"unknown grid_order {grid_order!r} (want 'ml' or 'lm')")
 
 
 # ---------------------------------------------------------------------------
@@ -57,21 +96,23 @@ def _fwd_kernel(x_ref, a_ref, b_ref, o_ref):
     o_ref[...] += jnp.dot(z, b, preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def skip_lora_fwd(x: jax.Array, a: jax.Array, b: jax.Array, *, interpret: bool = False) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
+def skip_lora_fwd(
+    x: jax.Array, a: jax.Array, b: jax.Array, *, tm: int = TM, interpret: bool = False
+) -> jax.Array:
     lnum, m, d = x.shape
     r = a.shape[-1]
-    assert m % TM == 0, f"rows {m} must be padded to a multiple of {TM}"
-    grid = (m // TM, lnum)
+    assert m % tm == 0, f"rows {m} must be padded to a multiple of {tm}"
+    grid = (m // tm, lnum)
     out = pl.pallas_call(
         _fwd_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, TM, d), lambda mi, li: (li, mi, 0)),
+            pl.BlockSpec((1, tm, d), lambda mi, li: (li, mi, 0)),
             pl.BlockSpec((1, d, r), lambda mi, li: (li, 0, 0)),
             pl.BlockSpec((1, r, d), lambda mi, li: (li, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((TM, d), lambda mi, li: (mi, 0)),
+        out_specs=pl.BlockSpec((tm, d), lambda mi, li: (mi, 0)),
         out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
@@ -104,22 +145,23 @@ def _bwd_kernel(x_ref, a_ref, b_ref, g_ref, ga_ref, gb_ref):
     gb_ref[0] += jnp.dot(z.T, g, preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
 def skip_lora_bwd(
-    x: jax.Array, a: jax.Array, b: jax.Array, g: jax.Array, *, interpret: bool = False
+    x: jax.Array, a: jax.Array, b: jax.Array, g: jax.Array, *, tm: int = TM,
+    interpret: bool = False
 ) -> tuple[jax.Array, jax.Array]:
     lnum, m, d = x.shape
     r = a.shape[-1]
-    assert m % TM == 0
-    grid = (lnum, m // TM)
+    assert m % tm == 0
+    grid = (lnum, m // tm)
     ga, gb = pl.pallas_call(
         _bwd_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, TM, d), lambda li, mi: (li, mi, 0)),
+            pl.BlockSpec((1, tm, d), lambda li, mi: (li, mi, 0)),
             pl.BlockSpec((1, d, r), lambda li, mi: (li, 0, 0)),
             pl.BlockSpec((1, r, d), lambda li, mi: (li, 0, 0)),
-            pl.BlockSpec((TM, d), lambda li, mi: (mi, 0)),
+            pl.BlockSpec((tm, d), lambda li, mi: (mi, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, d, r), lambda li, mi: (li, 0, 0)),
@@ -143,9 +185,9 @@ def skip_lora_bwd(
 # ---------------------------------------------------------------------------
 
 
-def _grouped_fwd_kernel(g_ref, x_ref, a_ref, b_ref, o_ref):
+def _grouped_fwd_kernel(l_axis, g_ref, x_ref, a_ref, b_ref, o_ref):
     del g_ref  # consumed by the index_maps; the body sees gathered blocks
-    l = pl.program_id(1)
+    l = pl.program_id(l_axis)
 
     @pl.when(l == 0)
     def _init():
@@ -158,50 +200,51 @@ def _grouped_fwd_kernel(g_ref, x_ref, a_ref, b_ref, o_ref):
     o_ref[...] += jnp.dot(z, b, preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("tm", "grid_order", "interpret"))
 def skip_lora_grouped_fwd(
     x: jax.Array,            # (L, M, D) rows pre-grouped by adapter
     a_pool: jax.Array,       # (N, L, D, R) stacked adapter pool
     b_pool: jax.Array,       # (N, L, R, D)
-    tile_adapter: jax.Array,  # (M // TM,) int32 adapter slot per row tile
+    tile_adapter: jax.Array,  # (M // tm,) int32 adapter slot per row tile
     *,
+    tm: int = TM,
+    grid_order: str = "ml",
     interpret: bool = False,
 ) -> jax.Array:
     """BGMV-style grouped forward: out[m] = sum_l x[l,m] @ A[g,l] @ B[g,l]
-    where g = tile_adapter[m // TM]. The caller groups rows so every row
+    where g = tile_adapter[m // tm]. The caller groups rows so every row
     tile maps to exactly ONE adapter slot; the tile->slot map rides in as a
     scalar-prefetch operand so each (A, B) layer block is gathered from the
     pool into VMEM once per tile — HBM traffic is the *active* adapters'
-    blocks, never the whole pool (DESIGN.md §6)."""
+    blocks, never the whole pool (DESIGN.md §6). ``tm``/``grid_order`` are
+    the autotuned tile parameters (``kernels.autotune``)."""
     lnum, m, d = x.shape
     n, _, _, r = a_pool.shape
-    assert m % TM == 0, f"rows {m} must be padded to a multiple of {TM}"
-    grid = (m // TM, lnum)
+    assert m % tm == 0, f"rows {m} must be padded to a multiple of {tm}"
+    grid, wrap, l_axis, semantics = _grouped_grid(grid_order, m // tm, lnum)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, TM, d), lambda mi, li, g: (li, mi, 0)),
-            pl.BlockSpec((1, 1, d, r), lambda mi, li, g: (g[mi], li, 0, 0)),
-            pl.BlockSpec((1, 1, r, d), lambda mi, li, g: (g[mi], li, 0, 0)),
+            pl.BlockSpec((1, tm, d), wrap(lambda mi, li, g: (li, mi, 0))),
+            pl.BlockSpec((1, 1, d, r), wrap(lambda mi, li, g: (g[mi], li, 0, 0))),
+            pl.BlockSpec((1, 1, r, d), wrap(lambda mi, li, g: (g[mi], li, 0, 0))),
         ],
-        out_specs=pl.BlockSpec((TM, d), lambda mi, li, g: (mi, 0)),
+        out_specs=pl.BlockSpec((tm, d), wrap(lambda mi, li, g: (mi, 0))),
     )
     out = pl.pallas_call(
-        _grouped_fwd_kernel,
+        functools.partial(_grouped_fwd_kernel, l_axis),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
-        ),
+        compiler_params=_CompilerParams(dimension_semantics=semantics),
         interpret=interpret,
     )(tile_adapter, x, a_pool, b_pool)
     return out.astype(x.dtype)
 
 
-def _grouped_fwd_int8_kernel(g_ref, x_ref, qa_ref, sa_ref, qb_ref, sb_ref, o_ref):
+def _grouped_fwd_int8_kernel(l_axis, g_ref, x_ref, qa_ref, sa_ref, qb_ref, sb_ref, o_ref):
     del g_ref
-    l = pl.program_id(1)
+    l = pl.program_id(l_axis)
 
     @pl.when(l == 0)
     def _init():
@@ -214,15 +257,17 @@ def _grouped_fwd_int8_kernel(g_ref, x_ref, qa_ref, sa_ref, qb_ref, sb_ref, o_ref
     o_ref[...] += jnp.dot(z, b, preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("tm", "grid_order", "interpret"))
 def skip_lora_grouped_fwd_int8(
     x: jax.Array,             # (L, M, D) rows pre-grouped by adapter
     qa: jax.Array,            # (N, L, D, R) int8 pool payload
     sa: jax.Array,            # (N, L, D) fp32 rowwise scales for A
     qb: jax.Array,            # (N, L, R, D) int8
     sb: jax.Array,            # (N, L, R) fp32 rowwise scales for B
-    tile_adapter: jax.Array,  # (M // TM,) int32
+    tile_adapter: jax.Array,  # (M // tm,) int32
     *,
+    tm: int = TM,
+    grid_order: str = "ml",
     interpret: bool = False,
 ) -> jax.Array:
     """Grouped forward over an int8-compressed adapter pool. The pool stays
@@ -231,29 +276,101 @@ def skip_lora_grouped_fwd_int8(
     never materialised outside the kernel."""
     lnum, m, d = x.shape
     n, _, _, r = qa.shape
-    assert m % TM == 0
-    grid = (m // TM, lnum)
+    assert m % tm == 0
+    grid, wrap, l_axis, semantics = _grouped_grid(grid_order, m // tm, lnum)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, TM, d), lambda mi, li, g: (li, mi, 0)),
-            pl.BlockSpec((1, 1, d, r), lambda mi, li, g: (g[mi], li, 0, 0)),
-            pl.BlockSpec((1, 1, d), lambda mi, li, g: (g[mi], li, 0)),
-            pl.BlockSpec((1, 1, r, d), lambda mi, li, g: (g[mi], li, 0, 0)),
-            pl.BlockSpec((1, 1, r), lambda mi, li, g: (g[mi], li, 0)),
+            pl.BlockSpec((1, tm, d), wrap(lambda mi, li, g: (li, mi, 0))),
+            pl.BlockSpec((1, 1, d, r), wrap(lambda mi, li, g: (g[mi], li, 0, 0))),
+            pl.BlockSpec((1, 1, d), wrap(lambda mi, li, g: (g[mi], li, 0))),
+            pl.BlockSpec((1, 1, r, d), wrap(lambda mi, li, g: (g[mi], li, 0, 0))),
+            pl.BlockSpec((1, 1, r), wrap(lambda mi, li, g: (g[mi], li, 0))),
         ],
-        out_specs=pl.BlockSpec((TM, d), lambda mi, li, g: (mi, 0)),
+        out_specs=pl.BlockSpec((tm, d), wrap(lambda mi, li, g: (mi, 0))),
     )
     out = pl.pallas_call(
-        _grouped_fwd_int8_kernel,
+        functools.partial(_grouped_fwd_int8_kernel, l_axis),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
-        ),
+        compiler_params=_CompilerParams(dimension_semantics=semantics),
         interpret=interpret,
     )(tile_adapter, x, qa, sa, qb, sb)
+    return out.astype(x.dtype)
+
+
+def _grouped_fwd_q4_kernel(
+    l_axis, g_ref, x_ref, qa_ref, sa_ref, qb_ref, sb_ref, code_ref, o_ref
+):
+    del g_ref
+    l = pl.program_id(l_axis)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0]                                             # (TM, D)
+    code = code_ref[0]                                       # (16,) fp32
+    # Unpack nibbles + codebook-dequant the gathered blocks in VMEM: the
+    # pool payload crosses HBM packed (two 4-bit indices per byte).
+    a_nib = _Q.unpack_nibbles(qa_ref[0, 0])                  # (D, R)
+    b_nib = _Q.unpack_nibbles(qb_ref[0, 0])                  # (R, D)
+    a = (
+        jnp.take(code, a_nib.astype(jnp.int32), axis=0)
+        * sa_ref[0, 0][:, None]
+    ).astype(x.dtype)
+    b = (
+        jnp.take(code, b_nib.astype(jnp.int32), axis=0)
+        * sb_ref[0, 0][:, None]
+    ).astype(x.dtype)
+    z = jnp.dot(x, a, preferred_element_type=jnp.float32).astype(x.dtype)
+    o_ref[...] += jnp.dot(z, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "grid_order", "interpret"))
+def skip_lora_grouped_fwd_q4(
+    x: jax.Array,             # (L, M, D) rows pre-grouped by adapter
+    qa: jax.Array,            # (N, L, D, R // 2) packed 4-bit pool payload
+    sa: jax.Array,            # (N, L, D) fp32 rowwise absmax scales for A
+    qb: jax.Array,            # (N, L, R, D // 2) packed 4-bit
+    sb: jax.Array,            # (N, L, R) fp32 rowwise absmax scales for B
+    code: jax.Array,          # (1, 16) fp32 codebook (int4 or nf4 levels)
+    tile_adapter: jax.Array,  # (M // tm,) int32
+    *,
+    tm: int = TM,
+    grid_order: str = "ml",
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped forward over a packed-4-bit adapter pool (int4 or nf4 — the
+    codebook decides, see ``kernels.skip_lora.quant``). The payload stays
+    packed in HBM (8x the resident tenants of bf16, 2x int8); nibble unpack
+    + codebook dequant happen on the gathered per-tile blocks in VMEM."""
+    lnum, m, d = x.shape
+    n, _, _, rp = qa.shape
+    r = 2 * rp
+    assert m % tm == 0
+    grid, wrap, l_axis, semantics = _grouped_grid(grid_order, m // tm, lnum)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tm, d), wrap(lambda mi, li, g: (li, mi, 0))),
+            pl.BlockSpec((1, 1, d, rp), wrap(lambda mi, li, g: (g[mi], li, 0, 0))),
+            pl.BlockSpec((1, 1, d), wrap(lambda mi, li, g: (g[mi], li, 0))),
+            pl.BlockSpec((1, 1, r, d // 2), wrap(lambda mi, li, g: (g[mi], li, 0, 0))),
+            pl.BlockSpec((1, 1, r), wrap(lambda mi, li, g: (g[mi], li, 0))),
+            pl.BlockSpec((1, 16), wrap(lambda mi, li, g: (0, 0))),
+        ],
+        out_specs=pl.BlockSpec((tm, d), wrap(lambda mi, li, g: (mi, 0))),
+    )
+    out = pl.pallas_call(
+        functools.partial(_grouped_fwd_q4_kernel, l_axis),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        compiler_params=_CompilerParams(dimension_semantics=semantics),
+        interpret=interpret,
+    )(tile_adapter, x, qa, sa, qb, sb, code)
     return out.astype(x.dtype)
 
 
@@ -274,14 +391,15 @@ def _grouped_fwd_actint8_kernel(g_ref, q_ref, s_ref, a_ref, b_ref, o_ref):
     o_ref[...] += jnp.dot(z, b, preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
 def skip_lora_grouped_fwd_actint8(
     q: jax.Array,             # (L, M, D) int8 rows pre-grouped by adapter
     scale: jax.Array,         # (L, M) fp32 per-row dequant scales
     a_pool: jax.Array,        # (N, L, D, R) float adapter pool
     b_pool: jax.Array,        # (N, L, R, D)
-    tile_adapter: jax.Array,  # (M // TM,) int32
+    tile_adapter: jax.Array,  # (M // tm,) int32
     *,
+    tm: int = TM,
     interpret: bool = False,
 ) -> jax.Array:
     """Grouped forward over an int8-compressed *activation* cache (the
@@ -291,18 +409,18 @@ def skip_lora_grouped_fwd_actint8(
     trainer without ever materialising bf16 activations outside the kernel."""
     lnum, m, d = q.shape
     n, _, _, r = a_pool.shape
-    assert m % TM == 0
-    grid = (m // TM, lnum)
+    assert m % tm == 0
+    grid = (m // tm, lnum)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, TM, d), lambda mi, li, g: (li, mi, 0)),
-            pl.BlockSpec((1, TM), lambda mi, li, g: (li, mi)),
+            pl.BlockSpec((1, tm, d), lambda mi, li, g: (li, mi, 0)),
+            pl.BlockSpec((1, tm), lambda mi, li, g: (li, mi)),
             pl.BlockSpec((1, 1, d, r), lambda mi, li, g: (g[mi], li, 0, 0)),
             pl.BlockSpec((1, 1, r, d), lambda mi, li, g: (g[mi], li, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((TM, d), lambda mi, li, g: (mi, 0)),
+        out_specs=pl.BlockSpec((tm, d), lambda mi, li, g: (mi, 0)),
     )
     out = pl.pallas_call(
         _grouped_fwd_actint8_kernel,
@@ -349,14 +467,15 @@ def _grouped_bwd_kernel(g_ref, x_ref, a_ref, b_ref, gy_ref, ga_ref, gb_ref):
     gb_ref[0, 0] += jnp.dot(z.T, gy, preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
 def skip_lora_grouped_bwd(
     x: jax.Array,             # (L, M, D) rows pre-grouped by adapter
     a_pool: jax.Array,        # (N, L, D, R)
     b_pool: jax.Array,        # (N, L, R, D)
     g: jax.Array,             # (M, D) output cotangent, grouped row layout
-    tile_adapter: jax.Array,  # (M // TM,) int32, non-decreasing
+    tile_adapter: jax.Array,  # (M // tm,) int32, non-decreasing
     *,
+    tm: int = TM,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Fleet backward: gA[n,l] = sum_{m in group n} x[l,m]^T (g[m] B[n,l]^T),
@@ -366,16 +485,16 @@ def skip_lora_grouped_bwd(
     visited — callers mask them (``ops._grouped_rows_train``)."""
     lnum, m, d = x.shape
     n, _, _, r = a_pool.shape
-    assert m % TM == 0
-    grid = (lnum, m // TM)
+    assert m % tm == 0
+    grid = (lnum, m // tm)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, TM, d), lambda li, mi, g: (li, mi, 0)),
+            pl.BlockSpec((1, tm, d), lambda li, mi, g: (li, mi, 0)),
             pl.BlockSpec((1, 1, d, r), lambda li, mi, g: (g[mi], li, 0, 0)),
             pl.BlockSpec((1, 1, r, d), lambda li, mi, g: (g[mi], li, 0, 0)),
-            pl.BlockSpec((TM, d), lambda li, mi, g: (mi, 0)),
+            pl.BlockSpec((tm, d), lambda li, mi, g: (mi, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, d, r), lambda li, mi, g: (g[mi], li, 0, 0)),
@@ -413,24 +532,25 @@ def _fwd_int8_kernel(q_ref, s_ref, a_ref, b_ref, o_ref):
     o_ref[...] += jnp.dot(z, b, preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
 def skip_lora_fwd_int8(
-    q: jax.Array, scale: jax.Array, a: jax.Array, b: jax.Array, *, interpret: bool = False
+    q: jax.Array, scale: jax.Array, a: jax.Array, b: jax.Array, *, tm: int = TM,
+    interpret: bool = False
 ) -> jax.Array:
     lnum, m, d = q.shape
     r = a.shape[-1]
-    assert m % TM == 0
-    grid = (m // TM, lnum)
+    assert m % tm == 0
+    grid = (m // tm, lnum)
     out = pl.pallas_call(
         _fwd_int8_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, TM, d), lambda mi, li: (li, mi, 0)),
-            pl.BlockSpec((1, TM), lambda mi, li: (li, mi)),
+            pl.BlockSpec((1, tm, d), lambda mi, li: (li, mi, 0)),
+            pl.BlockSpec((1, tm), lambda mi, li: (li, mi)),
             pl.BlockSpec((1, d, r), lambda mi, li: (li, 0, 0)),
             pl.BlockSpec((1, r, d), lambda mi, li: (li, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((TM, d), lambda mi, li: (mi, 0)),
+        out_specs=pl.BlockSpec((tm, d), lambda mi, li: (mi, 0)),
         out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")

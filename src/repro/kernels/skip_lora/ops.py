@@ -19,10 +19,47 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.skip_lora import kernel as K
+from repro.kernels.skip_lora import quant as Q
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Autotuned kernel-parameter defaults. ``TM`` stopped being a constant in the
+# kernel speed pass: every wrapper takes ``tm`` (row tile) and the grouped
+# forwards ``grid_order`` explicitly, and ``None`` resolves against this
+# process-wide default — which ``kernels.autotune.apply_choice`` installs
+# from a measured per-(config, device, variant) winner. Resolution happens
+# at TRACE time: change the default before warmup, not under live traffic
+# (already-compiled dispatches keep the tile they were traced with).
+# ---------------------------------------------------------------------------
+
+_DEFAULT_TILE: dict = {"tm": None, "grid_order": None}
+
+
+def set_default_tile(tm: Optional[int] = None, grid_order: Optional[str] = None) -> None:
+    """Install autotuned kernel parameters as process-wide defaults
+    (``None`` resets a field to the untuned fallback: ``K.TM`` / ``"ml"``)."""
+    if tm is not None and (tm <= 0 or tm % 8):
+        raise ValueError(f"row tile {tm} must be a positive multiple of 8")
+    if grid_order not in (None, "ml", "lm"):
+        raise ValueError(f"unknown grid_order {grid_order!r}")
+    _DEFAULT_TILE["tm"] = tm
+    _DEFAULT_TILE["grid_order"] = grid_order
+
+
+def get_default_tile() -> tuple[int, str]:
+    return (_DEFAULT_TILE["tm"] or K.TM, _DEFAULT_TILE["grid_order"] or "ml")
+
+
+def _resolve_tm(tm: Optional[int]) -> int:
+    return tm if tm is not None else get_default_tile()[0]
+
+
+def _resolve_order(grid_order: Optional[str]) -> str:
+    return grid_order if grid_order is not None else get_default_tile()[1]
 
 
 # ---------------------------------------------------------------------------
@@ -33,8 +70,9 @@ def _interpret() -> bool:
 # ---------------------------------------------------------------------------
 
 
-def _pad_axis(x: jax.Array, axis: int, tm: int = K.TM) -> jax.Array:
+def _pad_axis(x: jax.Array, axis: int, tm: Optional[int] = None) -> jax.Array:
     """Zero-pad ``axis`` up to a multiple of the kernel row tile."""
+    tm = _resolve_tm(tm)
     pad = (-x.shape[axis]) % tm
     if not pad:
         return x
@@ -43,14 +81,16 @@ def _pad_axis(x: jax.Array, axis: int, tm: int = K.TM) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-def _pad_rows(x: jax.Array, tm: int = K.TM) -> tuple[jax.Array, int]:
+def _pad_rows(x: jax.Array, tm: Optional[int] = None) -> tuple[jax.Array, int]:
     """(L, M, D) -> tile-padded rows + the original row count."""
     return _pad_axis(x, 1, tm), x.shape[1]
 
 
-def _pad_rows_int8(q: jax.Array, s: jax.Array) -> tuple[jax.Array, jax.Array, int]:
+def _pad_rows_int8(
+    q: jax.Array, s: jax.Array, tm: Optional[int] = None
+) -> tuple[jax.Array, jax.Array, int]:
     """int8 payload (L, M, D) + scales (L, M), padded together."""
-    return _pad_axis(q, 1), _pad_axis(s, 1), q.shape[1]
+    return _pad_axis(q, 1, tm), _pad_axis(s, 1, tm), q.shape[1]
 
 
 def _dequant_rows(q: jax.Array, s: jax.Array) -> jax.Array:
@@ -156,12 +196,13 @@ def skip_lora_fused_int8(
 # gathered back.
 
 
-def _grouping_plan(idx: jax.Array, n_adapters: int, m: int):
+def _grouping_plan(idx: jax.Array, n_adapters: int, m: int, tm: Optional[int] = None):
     """Row permutation + tile->slot map for grouped dispatch (all jittable).
 
     Returns (dest_orig (M,) padded-buffer position per original row,
-    tile_adapter (m_pad//TM,) int32, m_pad)."""
-    tm = K.TM
+    tile_adapter (m_pad//tm,) int32, m_pad). ``tm`` is the row tile the
+    dispatch will use (None -> the process default, see ``set_default_tile``)."""
+    tm = _resolve_tm(tm)
     m_pad = (m + tm - 1) // tm * tm + min(n_adapters, m) * tm
     counts = jnp.bincount(idx, length=n_adapters)             # (N,)
     counts_cum_ex = jnp.concatenate(
@@ -197,11 +238,16 @@ def _grouped_scatter(arr: jax.Array, dest: jax.Array, m_pad: int, axis: int) -> 
     return zeros.at[:, dest].set(arr)
 
 
-def _grouped_rows(x: jax.Array, a_pool: jax.Array, b_pool: jax.Array, idx: jax.Array) -> jax.Array:
-    dest, tile_adapter, m_pad = _grouping_plan(idx, a_pool.shape[0], x.shape[1])
+def _grouped_rows(
+    x: jax.Array, a_pool: jax.Array, b_pool: jax.Array, idx: jax.Array,
+    tm: Optional[int] = None, grid_order: Optional[str] = None,
+) -> jax.Array:
+    tm, grid_order = _resolve_tm(tm), _resolve_order(grid_order)
+    dest, tile_adapter, m_pad = _grouping_plan(idx, a_pool.shape[0], x.shape[1], tm)
     xg = _grouped_scatter(x, dest, m_pad, 1)
     out = K.skip_lora_grouped_fwd(
-        xg, a_pool, b_pool, tile_adapter, interpret=_interpret()
+        xg, a_pool, b_pool, tile_adapter,
+        tm=tm, grid_order=grid_order, interpret=_interpret(),
     )
     return out[dest]
 
@@ -209,11 +255,29 @@ def _grouped_rows(x: jax.Array, a_pool: jax.Array, b_pool: jax.Array, idx: jax.A
 def _grouped_rows_int8(
     x: jax.Array, qa: jax.Array, sa: jax.Array, qb: jax.Array, sb: jax.Array,
     idx: jax.Array,
+    tm: Optional[int] = None, grid_order: Optional[str] = None,
 ) -> jax.Array:
-    dest, tile_adapter, m_pad = _grouping_plan(idx, qa.shape[0], x.shape[1])
+    tm, grid_order = _resolve_tm(tm), _resolve_order(grid_order)
+    dest, tile_adapter, m_pad = _grouping_plan(idx, qa.shape[0], x.shape[1], tm)
     xg = _grouped_scatter(x, dest, m_pad, 1)
     out = K.skip_lora_grouped_fwd_int8(
-        xg, qa, sa, qb, sb, tile_adapter, interpret=_interpret()
+        xg, qa, sa, qb, sb, tile_adapter,
+        tm=tm, grid_order=grid_order, interpret=_interpret(),
+    )
+    return out[dest]
+
+
+def _grouped_rows_q4(
+    x: jax.Array, qa: jax.Array, sa: jax.Array, qb: jax.Array, sb: jax.Array,
+    code: jax.Array, idx: jax.Array,
+    tm: Optional[int] = None, grid_order: Optional[str] = None,
+) -> jax.Array:
+    tm, grid_order = _resolve_tm(tm), _resolve_order(grid_order)
+    dest, tile_adapter, m_pad = _grouping_plan(idx, qa.shape[0], x.shape[1], tm)
+    xg = _grouped_scatter(x, dest, m_pad, 1)
+    out = K.skip_lora_grouped_fwd_q4(
+        xg, qa, sa, qb, sb, code.reshape(1, 16), tile_adapter,
+        tm=tm, grid_order=grid_order, interpret=_interpret(),
     )
     return out[dest]
 
@@ -221,6 +285,7 @@ def _grouped_rows_int8(
 def skip_lora_grouped(
     acts: jax.Array, a_pool: jax.Array, b_pool: jax.Array, idx: jax.Array,
     *, use_kernel: bool = True,
+    tm: Optional[int] = None, grid_order: Optional[str] = None,
 ) -> jax.Array:
     """Multi-tenant fused skip-sum: row b gets its own adapter stack.
 
@@ -242,7 +307,7 @@ def skip_lora_grouped(
     x = acts.reshape(l, bsz * s, d)
     row_idx = jnp.repeat(idx, s)
     if use_kernel:
-        out = _grouped_rows(x, a_pool, b_pool, row_idx)
+        out = _grouped_rows(x, a_pool, b_pool, row_idx, tm, grid_order)
     else:
         out = R.skip_lora_grouped_ref(x, a_pool, b_pool, row_idx)
     return out.reshape(bsz, s, d)
@@ -272,72 +337,135 @@ def _mask_slots(grad: jax.Array, live: jax.Array) -> jax.Array:
     return jnp.where(live[:, None, None, None], grad, jnp.zeros_like(grad))
 
 
-@jax.custom_vjp
-def _grouped_rows_train(x: jax.Array, a_pool: jax.Array, b_pool: jax.Array, idx: jax.Array) -> jax.Array:
-    """x: (L, M, D), pools (N, L, D, R)/(N, L, R, D), idx: (M,) -> (M, D).
-    Differentiable in the pools; x and idx are data."""
-    return _grouped_rows(x, a_pool, b_pool, idx)
-
-
-def _grouped_train_fwd(x, a_pool, b_pool, idx):
-    return _grouped_rows_train(x, a_pool, b_pool, idx), (x, a_pool, b_pool, idx)
-
-
-def _grouped_train_bwd(res, g):
-    x, a_pool, b_pool, idx = res
-    dest, tile_adapter, m_pad = _grouping_plan(idx, a_pool.shape[0], x.shape[1])
+def _grouped_pool_grads(x, a_pool, b_pool, idx, g, tm):
+    """Shared backward body for every trainable grouped variant: scatter rows
+    + cotangent into the forward's padded layout, run the grouped backward
+    kernel, mask slots with no rows to exact zero. x: (L, M, D); g: (M, D)."""
+    dest, tile_adapter, m_pad = _grouping_plan(idx, a_pool.shape[0], x.shape[1], tm)
     xg = _grouped_scatter(x, dest, m_pad, 1)
     gg = _grouped_scatter(g.astype(x.dtype), dest, m_pad, 0)
     ga, gb = K.skip_lora_grouped_bwd(
-        xg, a_pool, b_pool, gg, tile_adapter, interpret=_interpret()
+        xg, a_pool, b_pool, gg, tile_adapter, tm=tm, interpret=_interpret()
     )
     live = _live_slot_mask(idx, a_pool.shape[0])
     ga = _mask_slots(ga, live).astype(a_pool.dtype)
     gb = _mask_slots(gb, live).astype(b_pool.dtype)
-    return (
-        jnp.zeros_like(x),                      # cached activations are data
-        ga,
-        gb,
-        np.zeros(idx.shape, jax.dtypes.float0),  # int row->slot map
+    return ga, gb
+
+
+# custom_vjp functions can't carry static kwargs, so each (tm, grid_order)
+# pair gets its own cached VJP'd callable — the public wrappers resolve the
+# process default and fetch from here. The cache is tiny (one entry per
+# distinct tuned parameter set seen in-process).
+
+
+@functools.lru_cache(maxsize=None)
+def _grouped_train_fn(tm: int, grid_order: str):
+    @jax.custom_vjp
+    def rows_train(x, a_pool, b_pool, idx):
+        """x: (L, M, D), pools (N, L, D, R)/(N, L, R, D), idx: (M,) -> (M, D).
+        Differentiable in the pools; x and idx are data."""
+        return _grouped_rows(x, a_pool, b_pool, idx, tm, grid_order)
+
+    def fwd(x, a_pool, b_pool, idx):
+        return rows_train(x, a_pool, b_pool, idx), (x, a_pool, b_pool, idx)
+
+    def bwd(res, g):
+        x, a_pool, b_pool, idx = res
+        ga, gb = _grouped_pool_grads(x, a_pool, b_pool, idx, g, tm)
+        return (
+            jnp.zeros_like(x),                      # cached activations are data
+            ga,
+            gb,
+            np.zeros(idx.shape, jax.dtypes.float0),  # int row->slot map
+        )
+
+    rows_train.defvjp(fwd, bwd)
+    return rows_train
+
+
+@functools.lru_cache(maxsize=None)
+def _grouped_train_int8_fn(tm: int, grid_order: str):
+    @jax.custom_vjp
+    def rows_train_int8(q, s, a_pool, b_pool, idx):
+        """Raw-int8-activation rows -> (M, D) bf16; differentiable in the pools."""
+        dest, tile_adapter, m_pad = _grouping_plan(idx, a_pool.shape[0], q.shape[1], tm)
+        qg = _grouped_scatter(q, dest, m_pad, 1)
+        sg = _grouped_scatter(s, dest, m_pad, 1)
+        out = K.skip_lora_grouped_fwd_actint8(
+            qg, sg, a_pool, b_pool, tile_adapter, tm=tm, interpret=_interpret()
+        )
+        return out[dest]
+
+    def fwd(q, s, a_pool, b_pool, idx):
+        return rows_train_int8(q, s, a_pool, b_pool, idx), (q, s, a_pool, b_pool, idx)
+
+    def bwd(res, g):
+        q, s, a_pool, b_pool, idx = res
+        # The forward never materialises the dequantised rows (dequant is
+        # fused); the adapter grads need them once — this is the only bf16 copy.
+        ga, gb = _grouped_pool_grads(_dequant_rows(q, s), a_pool, b_pool, idx, g, tm)
+        return (
+            np.zeros(q.shape, jax.dtypes.float0),
+            jnp.zeros_like(s),
+            ga,
+            gb,
+            np.zeros(idx.shape, jax.dtypes.float0),
+        )
+
+    rows_train_int8.defvjp(fwd, bwd)
+    return rows_train_int8
+
+
+@functools.lru_cache(maxsize=None)
+def _grouped_train_q4_fn(tm: int, grid_order: str):
+    @jax.custom_vjp
+    def rows_train_q4(x, qa, sa, qb, sb, code, idx):
+        """Packed-4-bit pools -> (M, D). Differentiable in the SCALES
+        (sa, sb) only — quantisation-aware scale refinement; the packed
+        nibble payload and codebook are data."""
+        return _grouped_rows_q4(x, qa, sa, qb, sb, code, idx, tm, grid_order)
+
+    def fwd(x, qa, sa, qb, sb, code, idx):
+        return rows_train_q4(x, qa, sa, qb, sb, code, idx), (x, qa, sa, qb, sb, code, idx)
+
+    def bwd(res, g):
+        x, qa, sa, qb, sb, code, idx = res
+        # pool[n,l,i,j] = code[nib[n,l,i,j]] * scale[n,l,i] — linear in the
+        # scale with coefficient "unit pool" u = code[nib]. Run the float
+        # grouped backward on the dequantised pools, then chain-rule onto the
+        # scales: g_scale[n,l,i] = sum_j g_pool[n,l,i,j] * u[n,l,i,j].
+        ua = jnp.take(code, Q.unpack_nibbles(qa).astype(jnp.int32), axis=0)
+        ub = jnp.take(code, Q.unpack_nibbles(qb).astype(jnp.int32), axis=0)
+        a_pool = (ua * sa[..., None]).astype(x.dtype)
+        b_pool = (ub * sb[..., None]).astype(x.dtype)
+        ga, gb = _grouped_pool_grads(x, a_pool, b_pool, idx, g, tm)
+        gsa = jnp.sum(ga.astype(jnp.float32) * ua, axis=-1).astype(sa.dtype)
+        gsb = jnp.sum(gb.astype(jnp.float32) * ub, axis=-1).astype(sb.dtype)
+        return (
+            jnp.zeros_like(x),
+            np.zeros(qa.shape, jax.dtypes.float0),   # packed payload is data
+            gsa,
+            np.zeros(qb.shape, jax.dtypes.float0),
+            gsb,
+            jnp.zeros_like(code),                    # codebook is a constant
+            np.zeros(idx.shape, jax.dtypes.float0),
+        )
+
+    rows_train_q4.defvjp(fwd, bwd)
+    return rows_train_q4
+
+
+def _grouped_rows_train(x, a_pool, b_pool, idx, tm=None, grid_order=None):
+    return _grouped_train_fn(_resolve_tm(tm), _resolve_order(grid_order))(
+        x, a_pool, b_pool, idx
     )
 
 
-_grouped_rows_train.defvjp(_grouped_train_fwd, _grouped_train_bwd)
-
-
-@jax.custom_vjp
-def _grouped_rows_train_int8(
-    q: jax.Array, s: jax.Array, a_pool: jax.Array, b_pool: jax.Array, idx: jax.Array
-) -> jax.Array:
-    """Raw-int8-activation rows -> (M, D) bf16; differentiable in the pools."""
-    dest, tile_adapter, m_pad = _grouping_plan(idx, a_pool.shape[0], q.shape[1])
-    qg = _grouped_scatter(q, dest, m_pad, 1)
-    sg = _grouped_scatter(s, dest, m_pad, 1)
-    out = K.skip_lora_grouped_fwd_actint8(
-        qg, sg, a_pool, b_pool, tile_adapter, interpret=_interpret()
+def _grouped_rows_train_int8(q, s, a_pool, b_pool, idx, tm=None, grid_order=None):
+    return _grouped_train_int8_fn(_resolve_tm(tm), _resolve_order(grid_order))(
+        q, s, a_pool, b_pool, idx
     )
-    return out[dest]
-
-
-def _grouped_train_int8_fwd(q, s, a_pool, b_pool, idx):
-    return _grouped_rows_train_int8(q, s, a_pool, b_pool, idx), (q, s, a_pool, b_pool, idx)
-
-
-def _grouped_train_int8_bwd(res, g):
-    q, s, a_pool, b_pool, idx = res
-    # The forward never materialises the dequantised rows (dequant is fused);
-    # the adapter grads need them once — this is the only bf16 copy.
-    _, ga, gb, _ = _grouped_train_bwd((_dequant_rows(q, s), a_pool, b_pool, idx), g)
-    return (
-        np.zeros(q.shape, jax.dtypes.float0),
-        jnp.zeros_like(s),
-        ga,
-        gb,
-        np.zeros(idx.shape, jax.dtypes.float0),
-    )
-
-
-_grouped_rows_train_int8.defvjp(_grouped_train_int8_fwd, _grouped_train_int8_bwd)
 
 
 def freeze_pool_slots(pool: jax.Array, freeze_mask: jax.Array) -> jax.Array:
@@ -358,6 +486,8 @@ def skip_lora_grouped_train(
     *,
     use_kernel: bool = True,
     freeze_mask: Optional[jax.Array] = None,
+    tm: Optional[int] = None,
+    grid_order: Optional[str] = None,
 ) -> jax.Array:
     """Trainable multi-tenant skip-sum: same contract as
     ``skip_lora_grouped`` but differentiable in the pools — the fleet
@@ -380,7 +510,7 @@ def skip_lora_grouped_train(
     x = acts.reshape(l, bsz * s, d)
     row_idx = jnp.repeat(idx, s)
     if use_kernel:
-        out = _grouped_rows_train(x, a_pool, b_pool, row_idx)
+        out = _grouped_rows_train(x, a_pool, b_pool, row_idx, tm, grid_order)
     else:
         out = R.skip_lora_grouped_ref(x, a_pool, b_pool, row_idx)
     return out.reshape(bsz, s, d)
@@ -395,6 +525,8 @@ def skip_lora_grouped_train_int8(
     *,
     use_kernel: bool = True,
     freeze_mask: Optional[jax.Array] = None,
+    tm: Optional[int] = None,
+    grid_order: Optional[str] = None,
 ) -> jax.Array:
     """Trainable grouped skip-sum over a raw int8 activation cache.
 
@@ -412,7 +544,7 @@ def skip_lora_grouped_train_int8(
     sc = jax.lax.stop_gradient(acts_scale).reshape(l, bsz * s)
     row_idx = jnp.repeat(idx, s)
     if use_kernel:
-        out = _grouped_rows_train_int8(q, sc, a_pool, b_pool, row_idx)
+        out = _grouped_rows_train_int8(q, sc, a_pool, b_pool, row_idx, tm, grid_order)
     else:
         out = R.skip_lora_grouped_actint8_ref(q, sc, a_pool, b_pool, row_idx)
     return out.reshape(bsz, s, d)
@@ -427,6 +559,8 @@ def skip_lora_grouped_int8(
     idx: jax.Array,
     *,
     use_kernel: bool = True,
+    tm: Optional[int] = None,
+    grid_order: Optional[str] = None,
 ) -> jax.Array:
     """Multi-tenant skip-sum over an int8-compressed adapter pool.
 
@@ -444,7 +578,83 @@ def skip_lora_grouped_int8(
     x = acts.reshape(l, bsz * s, d)
     row_idx = jnp.repeat(idx, s)
     if use_kernel:
-        out = _grouped_rows_int8(x, qa, sa, qb, sb, row_idx)
+        out = _grouped_rows_int8(x, qa, sa, qb, sb, row_idx, tm, grid_order)
     else:
         out = R.skip_lora_grouped_int8_ref(x, qa, sa, qb, sb, row_idx)
+    return out.reshape(bsz, s, d)
+
+
+def skip_lora_grouped_q4(
+    acts: jax.Array,
+    qa: jax.Array,
+    sa: jax.Array,
+    qb: jax.Array,
+    sb: jax.Array,
+    code: jax.Array,
+    idx: jax.Array,
+    *,
+    use_kernel: bool = True,
+    tm: Optional[int] = None,
+    grid_order: Optional[str] = None,
+) -> jax.Array:
+    """Multi-tenant skip-sum over a packed-4-bit adapter pool (int4 or nf4).
+
+    acts: (L, B, S, D) live activations (float); qa: (N, L, D, R//2) packed
+    nibble payload, sa: (N, L, D) fp32 scales; qb: (N, L, R, D//2), sb:
+    (N, L, R); code: (16,) fp32 codebook; idx: (B,) int32. Nibble unpack +
+    codebook dequant happen on the gathered blocks inside the kernel
+    (``use_kernel=False``: dequantise-then-oracle jnp path). Serve-only."""
+    from repro.kernels.skip_lora import ref as R
+
+    acts = jax.lax.stop_gradient(acts)
+    sa = jax.lax.stop_gradient(sa)
+    sb = jax.lax.stop_gradient(sb)
+    l, bsz, s, d = acts.shape
+    x = acts.reshape(l, bsz * s, d)
+    row_idx = jnp.repeat(idx, s)
+    if use_kernel:
+        out = _grouped_rows_q4(x, qa, sa, qb, sb, code, row_idx, tm, grid_order)
+    else:
+        out = R.skip_lora_grouped_q4_ref(x, qa, sa, qb, sb, code, row_idx)
+    return out.reshape(bsz, s, d)
+
+
+def skip_lora_grouped_train_q4(
+    acts: jax.Array,
+    qa: jax.Array,
+    sa: jax.Array,
+    qb: jax.Array,
+    sb: jax.Array,
+    code: jax.Array,
+    idx: jax.Array,
+    *,
+    use_kernel: bool = True,
+    freeze_mask: Optional[jax.Array] = None,
+    tm: Optional[int] = None,
+    grid_order: Optional[str] = None,
+) -> jax.Array:
+    """Trainable grouped skip-sum over packed-4-bit pools.
+
+    4-bit slots train by QUANTISATION-AWARE SCALE REFINEMENT: the packed
+    nibble payload is frozen data and gradients flow into (sa, sb) only —
+    pool[i, j] = code[nib] * scale[i] is linear in the scale, so the VJP
+    runs the float grouped backward on the dequantised pools and contracts
+    the result against the unit (scale-1) pools. Slots with no rows in the
+    batch and ``freeze_mask`` slots get exact-zero scale grads, same
+    contract as the float/int8 trainable paths."""
+    from repro.kernels.skip_lora import ref as R
+
+    acts = jax.lax.stop_gradient(acts)
+    if freeze_mask is not None:
+        sa = freeze_pool_slots(sa, freeze_mask)
+        sb = freeze_pool_slots(sb, freeze_mask)
+    l, bsz, s, d = acts.shape
+    x = acts.reshape(l, bsz * s, d)
+    row_idx = jnp.repeat(idx, s)
+    if use_kernel:
+        out = _grouped_train_q4_fn(_resolve_tm(tm), _resolve_order(grid_order))(
+            x, qa, sa, qb, sb, code, row_idx
+        )
+    else:
+        out = R.skip_lora_grouped_q4_ref(x, qa, sa, qb, sb, code, row_idx)
     return out.reshape(bsz, s, d)

@@ -1,0 +1,115 @@
+"""Sub-int8 adapter quantisation: packed 4-bit codebook formats (int4, nf4).
+
+Both formats share ONE storage layout so the grouped kernel, the oracle,
+and the pool machinery need a single dequant path:
+
+  - payload: two 4-bit codebook indices packed per byte along the LAST
+    axis (even positions in the low nibble, odd in the high nibble) —
+    ``(..., K)`` float rows become ``(..., K // 2)`` uint8;
+  - scale:   fp32 rowwise absmax over the last axis, ``(...,)``;
+  - code:    a 16-entry fp32 codebook of levels in ``[-8/7, 1]``.
+
+Dequant is ``code[nibble] * scale[..., None]`` for either format — the only
+difference between int4 and nf4 is WHICH codebook the indices address:
+
+  - ``int4``: uniform symmetric levels ``(i - 8) / 7`` for i in 0..15
+    (quantise clips to [-7, 7], so index 0 is never produced);
+  - ``nf4``: the QLoRA NormalFloat4 levels — the 16 quantiles of a standard
+    normal, information-optimal for the normally-distributed weights LoRA
+    factors actually have (PAPERS.md: TrainDeeploy's sub-int8 arithmetic).
+
+A zero row quantises to the codebook's exact-zero level (int4 index 8,
+nf4 index 7) with scale 0, so the pool's pinned zero slot dequantises to
+EXACT zeros — base-model rows stay bitwise base-model through a q4 pool.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: Uniform symmetric int4 levels: dequant (nib - 8) / 7 * absmax.
+INT4_CODE = ((jnp.arange(16) - 8) / 7.0).astype(jnp.float32)
+
+#: QLoRA NormalFloat4 levels (Dettmers et al., 2023), exact-zero at index 7.
+NF4_CODE = jnp.asarray(
+    [
+        -1.0,
+        -0.6961928009986877,
+        -0.5250730514526367,
+        -0.39491748809814453,
+        -0.28444138169288635,
+        -0.18477343022823334,
+        -0.09105003625154495,
+        0.0,
+        0.07958029955625534,
+        0.16093020141124725,
+        0.24611230194568634,
+        0.33791524171829224,
+        0.44070982933044434,
+        0.5626170039176941,
+        0.7229568362236023,
+        1.0,
+    ],
+    jnp.float32,
+)
+
+Q4_KINDS = ("int4", "nf4")
+
+
+def codebook(kind: str) -> jax.Array:
+    if kind == "int4":
+        return INT4_CODE
+    if kind == "nf4":
+        return NF4_CODE
+    raise ValueError(f"unknown 4-bit kind {kind!r} (want one of {Q4_KINDS})")
+
+
+def pack_nibbles(nib: jax.Array) -> jax.Array:
+    """(..., K) uint8 values in [0, 15] -> (..., K // 2) packed bytes.
+
+    Even last-axis positions land in the low nibble, odd in the high one
+    (``unpack_nibbles`` is the exact inverse). K must be even."""
+    if nib.shape[-1] % 2:
+        raise ValueError(f"last axis {nib.shape[-1]} must be even to pack")
+    lo = nib[..., 0::2].astype(jnp.uint8)
+    hi = nib[..., 1::2].astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed: jax.Array) -> jax.Array:
+    """(..., P) packed bytes -> (..., 2P) uint8 nibble indices in [0, 15]."""
+    lo = packed & jnp.uint8(0x0F)
+    hi = (packed >> 4) & jnp.uint8(0x0F)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(packed.shape[:-1] + (2 * packed.shape[-1],))
+
+
+def quantize_q4(x: jax.Array, kind: str) -> tuple[jax.Array, jax.Array]:
+    """Rowwise (last-axis) 4-bit quantisation into the shared layout.
+
+    x: (..., K) float, K even -> (packed (..., K // 2) uint8,
+    scale (...,) fp32 rowwise absmax). Dequant: ``code[nib] * scale``."""
+    x = jnp.asarray(x, jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=-1)
+    safe = jnp.where(scale > 0, scale, 1.0)[..., None]
+    if kind == "int4":
+        q = jnp.clip(jnp.round(x / safe * 7.0), -7, 7)
+        nib = (q + 8).astype(jnp.uint8)
+    elif kind == "nf4":
+        xn = x / safe
+        nib = jnp.argmin(
+            jnp.abs(xn[..., None] - NF4_CODE), axis=-1
+        ).astype(jnp.uint8)
+    else:
+        raise ValueError(f"unknown 4-bit kind {kind!r} (want one of {Q4_KINDS})")
+    return pack_nibbles(nib), scale
+
+
+def dequantize_q4(
+    packed: jax.Array, scale: jax.Array, code: jax.Array
+) -> jax.Array:
+    """Inverse of ``quantize_q4``: (..., P) bytes + (...,) scales -> (..., 2P)
+    fp32. ``code`` is the 16-entry codebook the indices address."""
+    nib = unpack_nibbles(packed)
+    return jnp.take(code, nib.astype(jnp.int32), axis=0) * scale[..., None]

@@ -76,6 +76,30 @@ def skip_lora_grouped_int8_ref(
     return skip_lora_grouped_ref(x, a_pool, b_pool, idx)
 
 
+def skip_lora_grouped_q4_ref(
+    x: jnp.ndarray,
+    qa: jnp.ndarray,
+    sa: jnp.ndarray,
+    qb: jnp.ndarray,
+    sb: jnp.ndarray,
+    code: jnp.ndarray,
+    idx: jnp.ndarray,
+) -> jnp.ndarray:
+    """Packed-4-bit-pool oracle: unpack + codebook-dequantise the whole pool,
+    then the float oracle. Differentiable in (sa, sb) by plain autodiff —
+    the gradient baseline for the q4 scale-training VJP.
+
+    qa: (N, L, D, R//2) uint8 packed nibbles with sa (N, L, D) fp32 scales;
+    qb: (N, L, R, D//2) with sb (N, L, R); code: 16-entry fp32 codebook
+    (int4 or nf4 levels, see ``kernels.skip_lora.quant``)."""
+    from repro.kernels.skip_lora import quant as Q
+
+    code = code.reshape(16)
+    a_pool = Q.dequantize_q4(qa, sa, code)
+    b_pool = Q.dequantize_q4(qb, sb, code)
+    return skip_lora_grouped_ref(x, a_pool, b_pool, idx)
+
+
 def skip_lora_grouped_bwd_ref(
     x: jnp.ndarray,
     a_pool: jnp.ndarray,

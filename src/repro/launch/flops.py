@@ -74,10 +74,17 @@ def readout_flops(cfg: ModelConfig, tokens: float) -> float:
     return 2.0 * tokens * cfg.d_model * cfg.vocab_size
 
 
-def model_flops(cfg: ModelConfig, shape_name: str, step: str) -> float:
-    """Global (all-chips) useful FLOPs for one step."""
-    shape = SHAPES[shape_name]
-    b, s = shape.batch, shape.seq
+def model_flops(cfg: ModelConfig, shape_name, step: str) -> float:
+    """Global (all-chips) useful FLOPs for one step.
+
+    ``shape_name`` is either a registered ``SHAPES`` key or an explicit
+    ``(batch, seq)`` pair — benchmark code measures at shapes that are not
+    registry cells."""
+    if isinstance(shape_name, str):
+        shape = SHAPES[shape_name]
+        b, s = shape.batch, shape.seq
+    else:
+        b, s = shape_name
     tokens = float(b * s)
     n = _matmul_params(cfg)
 

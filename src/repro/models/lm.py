@@ -291,15 +291,23 @@ def serve_decode_grouped(
     idx: jax.Array,                # (B,) int32
     *,
     use_kernel: bool = True,
+    fuse_skip: bool = False,
 ) -> tuple[jax.Array, Params]:
     """One grouped decode step: per-row adapters via one fused gather-and-
-    sum over the (L, B, 1, D) collected block inputs."""
+    sum over the (L, B, 1, D) collected block inputs.
+
+    ``fuse_skip=True`` inlines the skip term as dense per-row math instead
+    of a grouped kernel dispatch, so the whole step compiles to ONE fused
+    XLA program (backbone + skip) — see ``grouped_skip_sum``. Token output
+    at temperature 0 is identical either way (tested)."""
     from repro.core.adapter_pool import grouped_skip_sum
 
     out = lm_forward(
         params, cfg, token, mode="decode", caches=caches, pos=pos, collect_acts=True
     )
-    skip = grouped_skip_sum(out["acts"], pools, idx, use_kernel=use_kernel)
+    skip = grouped_skip_sum(
+        out["acts"], pools, idx, use_kernel=use_kernel, fused=fuse_skip
+    )
     y = out["y_base"] + skip.astype(out["y_base"].dtype)
     logits = readout(params, cfg, y)
     return logits, out["caches"]
@@ -394,6 +402,7 @@ def decode_step(
     pools: Optional[dict[str, jax.Array]] = None,
     idx: Optional[jax.Array] = None,
     use_kernel: bool = True,
+    fuse_skip: bool = False,
 ) -> tuple[tuple, jax.Array]:
     """One explicitly resumable decode step (the Lingvo ``Step.FProp``
     idiom: per-step state in, per-step state out — SNIPPETS.md §3).
@@ -411,7 +420,8 @@ def decode_step(
     tok, pos, caches, key = carry
     if pools is not None:
         logits, caches = serve_decode_grouped(
-            params, cfg, tok, pos, caches, pools, idx, use_kernel=use_kernel
+            params, cfg, tok, pos, caches, pools, idx,
+            use_kernel=use_kernel, fuse_skip=fuse_skip,
         )
     else:
         logits, caches = serve_decode(
@@ -435,6 +445,7 @@ def decode_scan(
     pools: Optional[dict[str, jax.Array]] = None,
     idx: Optional[jax.Array] = None,
     use_kernel: bool = True,
+    fuse_skip: bool = False,
     unroll: int = 1,
 ) -> tuple[jax.Array, Params]:
     """Generate ``max_new`` tokens as one ``lax.scan`` dispatch.
@@ -455,7 +466,7 @@ def decode_scan(
         tok = carry[0]
         new_carry, _ = decode_step(
             params, cfg, carry, temperature=temperature, adapters=adapters,
-            pools=pools, idx=idx, use_kernel=use_kernel,
+            pools=pools, idx=idx, use_kernel=use_kernel, fuse_skip=fuse_skip,
         )
         return new_carry, tok
 
