@@ -1,0 +1,261 @@
+"""Control-plane benchmark: the operational safety story, measured.
+
+Three claims of the adapter control plane (DESIGN.md §13), each a CI gate
+in ``BENCH_control.json``:
+
+- **The gate fires on a poisoned corpus**: a tenant whose cache partition
+  is recycled (``release``) and refilled with constant-label garbage
+  regresses on its clean held-out rows when it re-adapts, and the
+  regression gate refuses the write-back — the served slot keeps the
+  pre-poison version, so serve quality is monotone non-regressing on
+  held-out data *by mechanism*, not by luck.
+- **Rollback restores the pre-poison version bitwise**: with the gate
+  disabled (``threshold=inf``) the poisoned write-back lands; one
+  ``rollback(tenant)`` restores the archived payload bit-for-bit (pool
+  storage layout, quantised or not), brings back its recorded eval loss,
+  and the tenant's served tokens return to exactly the pre-poison stream.
+- **Shadow eval is near-free**: pre/post held-out loss rides the SAME
+  fused scan dispatch as the cached training epoch (two extra cache
+  gathers + grouped skip-sums, zero backbone forwards), so a gated adapt
+  must stay within 10% wall-clock of an ungated one
+  (``shadow_eval_overhead_x`` < 1.10).
+
+The shadow split measures against the tenant's held-out rows, so the
+poison deliberately leaves those rows' labels clean: garbage that also
+lands in the held-out set corrupts the measurement itself, and the gate
+cannot (and should not be expected to) see the regression. The gate's
+guarantee is conditional on the held-out rows being representative; this
+bench exercises exactly that contract.
+
+Oracle (jnp) kernel path on CPU like the other benches. Run:
+
+  PYTHONPATH=src python -m benchmarks.control_bench [--quick]
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.core import lm_skiplora as SL
+from repro.core.control_plane import ControlConfig
+from repro.core.runtime import SessionRuntime
+from repro.models.lm import init_lm
+
+
+def _session(cfg, sl, params, *, n_t, spt, seq, control):
+    return SessionRuntime(
+        cfg, sl, params, max_tenants=n_t, samples_per_tenant=spt, seq=seq,
+        lr=5e-2, control=control,
+    )
+
+
+def _clean_batch(cfg, t, rows, seq, seed=11):
+    k1, k2 = jax.random.split(jax.random.fold_in(jax.random.key(seed), t))
+    toks = jax.random.randint(k1, (rows, seq), 0, cfg.vocab_size)
+    labs = jax.random.randint(k2, (rows, seq), 0, cfg.vocab_size)
+    return toks, labs
+
+
+def _poison_batch(cfg, params, rows, seq, *, holdout_every):
+    """Garbage labels on the partition's TRAIN rows; the rows the shadow
+    split holds out (``(r+1) % holdout_every == 0``) keep the BASE model's
+    own argmax as labels — the distribution the tenant was serving well.
+    All rows share one context, so training on the garbage tears down
+    exactly the calibration the held-out rows measure: the regression is
+    large and monotone. (Random held-out labels would be confounded by the
+    entropy-raising side effect of any training — a more uniform predictive
+    distribution *lowers* expected loss on random targets.)"""
+    from repro.models.lm import lm_forward, readout
+
+    rng = np.random.default_rng(23)
+    row = rng.integers(0, cfg.vocab_size, (1, seq)).astype(np.int32)
+    logits = readout(params, cfg, lm_forward(params, cfg, jnp.asarray(row))["h"])
+    base_best = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+    garbage = rng.integers(0, cfg.vocab_size, (1, seq)).astype(np.int32)
+    toks = np.repeat(row, rows, 0)
+    labs = np.repeat(garbage, rows, 0)
+    held = (np.arange(rows) + 1) % holdout_every == 0
+    labs[held] = base_best
+    return toks, labs
+
+
+def _slot_payload(rt, tenant):
+    shard = rt.pool.shards[rt.pool.shard_of(tenant)]
+    return {n: np.asarray(v) for n, v in shard.slot_payload(tenant).items()}
+
+
+def _poison_victim(cfg, params, rt, victim, spt, seq, holdout_every):
+    """The recycle-then-garbage scenario: the victim's cache partition is
+    released (its pool slot stays registered and serving) and refilled
+    with a poisoned corpus, so the next adapt trains from fresh state on
+    ~pure garbage — and its write-back is still a RE-registration, which
+    is what the gate guards."""
+    rt.release(victim)
+    rt.ingest(victim, *_poison_batch(
+        cfg, params, spt, seq, holdout_every=holdout_every
+    ))
+
+
+def control_bench(quick: bool = False):
+    """Returns (csv rows, BENCH_control.json payload with "_gates")."""
+    cfg = reduce_config(get_config("stablelm-1.6b"))
+    sl = SL.SkipLoRAConfig(rank=4, mode="full", cache_dtype="float32")
+    params = init_lm(jax.random.key(0), cfg)
+
+    n_t = 2 if quick else 4
+    spt = 16
+    seq = 8 if quick else 16
+    epochs = 2 if quick else 4
+    poison_epochs = 3 * epochs   # long enough to regress decisively
+    bpt = 4
+    ctl = ControlConfig(
+        holdout_every=4, threshold=0.0, mode="reject", history_depth=2
+    )
+    names = list(range(n_t))
+    victim = 0
+
+    rows: list[tuple[str, float]] = []
+    gates: dict[str, bool] = {}
+
+    # ---- leg 1: the gate fires on a poisoned corpus ------------------------
+    rt = _session(cfg, sl, params, n_t=n_t, spt=spt, seq=seq, control=ctl)
+    for t in names:
+        rt.ingest(t, *_clean_batch(cfg, t, spt, seq))
+    rt.adapt(names, epochs=epochs, batch_per_tenant=bpt,
+             key=jax.random.key(3))
+    clean = {t: rec for t, rec in rt.control_metrics()["tenants"]}
+    served_clean = _slot_payload(rt, victim)
+    _poison_victim(cfg, params, rt, victim, spt, seq, ctl.holdout_every)
+    rt.adapt([victim], epochs=poison_epochs, batch_per_tenant=bpt,
+             key=jax.random.key(5))
+    cm = rt.control_metrics()
+    victim_rec = {t: rec for t, rec in cm["tenants"]}[victim]
+    served_after = _slot_payload(rt, victim)
+    slot_kept_old = all(
+        np.array_equal(served_clean[n], served_after[n]) for n in served_clean
+    )
+    # The served slot's recorded held-out loss never regressed past the
+    # threshold: a reject leaves the clean version's record in place.
+    served_eval = rt.pool.version_info(victim)["eval_loss"]
+    gates["gate_fires_on_poison"] = (
+        victim_rec["decision"] == "reject"
+        and victim_rec["delta"] > ctl.threshold
+        and slot_kept_old
+        and served_eval is not None
+        and served_eval <= clean[victim]["post"] + ctl.threshold
+    )
+    rows += [
+        ("control/poison_pre_loss", float(victim_rec["pre"])),
+        ("control/poison_post_loss", float(victim_rec["post"])),
+        ("control/poison_delta", float(victim_rec["delta"])),
+        ("control/gate_rejected", float(cm["rejected"])),
+    ]
+
+    # ---- leg 2: rollback restores the pre-poison version bitwise -----------
+    open_ctl = ControlConfig(
+        holdout_every=4, threshold=float("inf"), mode="reject",
+        history_depth=2,
+    )
+    rt2 = _session(cfg, sl, params, n_t=n_t, spt=spt, seq=seq,
+                   control=open_ctl)
+    prompts = jax.random.randint(
+        jax.random.key(7), (1, 6), 0, cfg.vocab_size
+    )
+    for t in names:
+        rt2.ingest(t, *_clean_batch(cfg, t, spt, seq))
+    rt2.adapt(names, epochs=epochs, batch_per_tenant=bpt,
+              key=jax.random.key(3))
+    pre_poison = _slot_payload(rt2, victim)
+    pre_poison_eval = rt2.pool.version_info(victim)["eval_loss"]
+    toks_clean = np.asarray(rt2.serve([victim], prompts, max_new=8))
+    _poison_victim(cfg, params, rt2, victim, spt, seq, open_ctl.holdout_every)
+    rt2.adapt([victim], epochs=poison_epochs, batch_per_tenant=bpt,
+              key=jax.random.key(5))
+    toks_poisoned = np.asarray(rt2.serve([victim], prompts, max_new=8))
+    restored = rt2.rollback(victim)
+    post_roll = _slot_payload(rt2, victim)
+    toks_rolled = np.asarray(rt2.serve([victim], prompts, max_new=8))
+    gates["rollback_bitwise"] = all(
+        np.array_equal(pre_poison[n], post_roll[n]) for n in pre_poison
+    )
+    gates["rollback_restores_eval"] = (
+        restored["eval_loss"] == pre_poison_eval
+        and rt2.pool.version_info(victim)["eval_loss"] == pre_poison_eval
+    )
+    gates["rollback_restores_serve"] = np.array_equal(
+        toks_clean, toks_rolled
+    )
+    rows += [
+        ("control/rollback_eval_loss", float(restored["eval_loss"])),
+        ("control/poison_serve_diverged",
+         float(not np.array_equal(toks_clean, toks_poisoned))),
+    ]
+
+    # ---- leg 3: shadow eval adds < 10% wall-clock to adapt -----------------
+    # Measures the EVAL machinery (two fused-in cache gathers + grouped
+    # skip-sums, one host sync for the gate decision), so the gate is held
+    # open (threshold=inf): a firing gate would split the accepted/rejected
+    # tenants into different trajectory groups and retrace mid-timing.
+    # Warm-up runs the same epoch count as the timed calls so every
+    # (eval_pre, eval_post) jit entry compiles before the clock starts.
+    epochs_timed = 16 if quick else 8  # quick's tiny steps need more epochs
+                                       # to amortise the per-adapt host sync
+
+    def timed_adapt(control):
+        rt3 = _session(cfg, sl, params, n_t=n_t, spt=spt, seq=seq,
+                       control=control)
+        for t in names:
+            rt3.ingest(t, *_clean_batch(cfg, t, spt, seq))
+        rt3.adapt(names, epochs=epochs_timed, batch_per_tenant=bpt,
+                  key=jax.random.key(3))     # warm-up: compiles the entries
+        best = float("inf")
+        for _ in range(7 if quick else 5):  # quick's ~20ms adapts are noisy:
+                                            # more best-of trials, still cheap
+            t0 = time.perf_counter()
+            rt3.adapt(names, epochs=epochs_timed, batch_per_tenant=bpt)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_plain = timed_adapt(None)
+    t_gated = timed_adapt(open_ctl)
+    overhead = t_gated / t_plain
+    gates["shadow_eval_overhead_lt_10pct"] = overhead < 1.10
+    rows += [
+        ("control/adapt_plain_s", t_plain),
+        ("control/adapt_gated_s", t_gated),
+        ("control/shadow_eval_overhead_x", overhead),
+    ]
+
+    payload = {key: val for key, val in rows}
+    payload["_gates"] = {k: bool(v) for k, v in gates.items()}
+    return rows, payload
+
+
+def main(argv=None) -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="BENCH_control.json")
+    args = ap.parse_args(argv)
+    rows, payload = control_bench(quick=args.quick)
+    print("name,value")
+    for name, val in rows:
+        print(f"{name},{val:.6f}")
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {args.json}")
+    broken = [k for k, ok in payload["_gates"].items() if not ok]
+    if broken:
+        raise SystemExit(f"control gates broken: {broken}")
+    print(f"gates OK: {sorted(payload['_gates'])}")
+
+
+if __name__ == "__main__":
+    main()

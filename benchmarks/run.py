@@ -27,6 +27,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        control_bench,
         fleet_bench,
         kernel_bench,
         lm_bench,
@@ -53,6 +54,16 @@ def main() -> None:
             json.dump(payload, f, indent=2, sort_keys=True)
         return rows
 
+    def control_section():
+        rows, payload = control_bench.control_bench(quick=args.quick)
+        with open("BENCH_control.json", "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        gates = payload["_gates"]
+        if not all(gates.values()):
+            raise RuntimeError(f"control gates broken: "
+                               f"{[k for k, ok in gates.items() if not ok]}")
+        return rows
+
     sections = [
         ("serve_decode", lambda: serve_bench.decode_dispatch(
             gen=16 if args.quick else 64)),
@@ -60,6 +71,7 @@ def main() -> None:
             gen=8 if args.quick else 32)),
         ("serving_slo", serving_section),
         ("kernel_speed", kernel_section),
+        ("control", control_section),
         ("runtime", lambda: runtime_bench.runtime_session(quick=args.quick)),
         ("fleet", lambda: fleet_bench.fleet_vs_sequential(quick=args.quick)),
         ("table2", lambda: paper_tables.table2_breakdown()),

@@ -188,10 +188,24 @@ def restore_runtime_session(path: str, runtime) -> dict:
 class CheckpointManager:
     """Keep-K rotation + convenience save/restore-latest."""
 
-    def __init__(self, directory: str, *, keep: int = 3, save_every: int = 100):
+    def __init__(
+        self,
+        directory: str,
+        *,
+        keep: int = 3,
+        save_every: int = 100,
+        tmp_grace_s: float = 3600.0,
+    ):
         self.directory = directory
         self.keep = keep
         self.save_every = save_every
+        #: How old (mtime) a ``ckpt_*.tmp`` dir must be before gc reaps it.
+        #: Reaping unconditionally would race a concurrent atomic write: a
+        #: supervisor-restarted sibling (or an overlapping async save) has a
+        #: live tmp dir between ``makedirs`` and ``rename``, and deleting it
+        #: mid-write corrupts that save. A *stale* tmp dir — older than any
+        #: plausible in-flight write — really is a crash leftover.
+        self.tmp_grace_s = float(tmp_grace_s)
         os.makedirs(directory, exist_ok=True)
 
     def should_save(self, step: int) -> bool:
@@ -214,10 +228,20 @@ class CheckpointManager:
         cands = sorted(
             d for d in os.listdir(self.directory) if d.startswith("ckpt_")
         )
-        # Drop stale tmp dirs (crashed writes) and old checkpoints.
+        # Drop STALE tmp dirs (crashed writes) and old checkpoints. A fresh
+        # tmp dir may be a concurrent write's staging area (see
+        # ``tmp_grace_s``) — leave it alone until it ages past the grace
+        # window.
+        now = time.time()
         for d in cands:
             if d.endswith(".tmp"):
-                shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
+                full = os.path.join(self.directory, d)
+                try:
+                    age = now - os.path.getmtime(full)
+                except OSError:
+                    continue  # renamed/removed under us: someone finished it
+                if age >= self.tmp_grace_s:
+                    shutil.rmtree(full, ignore_errors=True)
         cands = [d for d in cands if not d.endswith(".tmp")]
         for d in cands[: -self.keep]:
             shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)

@@ -38,6 +38,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import donate_argnums
 from repro.core.lm_skiplora import quantize_int8
@@ -58,12 +59,22 @@ _set_slot = jax.jit(
 ZERO_SLOT = 0
 
 
+#: Regression-gate decisions a write-back can carry (DESIGN.md §13).
+#: "accept" installs the payload; "reject" and "quarantine" both leave the
+#: slot serving its current version (the difference — whether the caller's
+#: training state advances — is session policy, not pool mechanism).
+GATE_DECISIONS = ("accept", "reject", "quarantine")
+
+
 @dataclasses.dataclass
 class PoolStats:
     registrations: int = 0
     evictions: int = 0
     lookups: int = 0
     misses: int = 0
+    rollbacks: int = 0
+    gate_rejected: int = 0
+    gate_quarantined: int = 0
 
     def as_rows(self, prefix: str = "adapter_pool") -> list[tuple[str, float]]:
         return [
@@ -71,6 +82,9 @@ class PoolStats:
             (f"{prefix}/evictions", float(self.evictions)),
             (f"{prefix}/lookups", float(self.lookups)),
             (f"{prefix}/misses", float(self.misses)),
+            (f"{prefix}/rollbacks", float(self.rollbacks)),
+            (f"{prefix}/gate_rejected", float(self.gate_rejected)),
+            (f"{prefix}/gate_quarantined", float(self.gate_quarantined)),
         ]
 
 
@@ -90,14 +104,23 @@ class AdapterPool:
         compress: Optional[str] = None,
         dtype=jnp.float32,
         device=None,
+        history: int = 0,
     ):
         if n_slots < 2:
             raise ValueError("need >= 2 slots (slot 0 is pinned to zeros)")
         if compress not in (None, "int8") + q4.Q4_KINDS:
             raise ValueError(f"unknown compression {compress!r}")
+        if history < 0:
+            raise ValueError(f"history depth {history} < 0")
         self.n_slots = n_slots
         self.rank = rank
         self.compress = compress
+        #: Versioned slots: how many *previous* payloads each tenant keeps
+        #: (0 = versioning off, the historical pool). Each re-registration
+        #: pushes the outgoing payload (in pool storage layout, so restores
+        #: are bitwise) onto the tenant's bounded history; ``rollback``
+        #: pops it back into the slot.
+        self.history_depth = history
         #: Device the data plane is committed to (``None``: jax default).
         #: A mesh-native session commits each shard's pool to that shard's
         #: device, so serve/adapt dispatches against it stay device-local.
@@ -135,6 +158,13 @@ class AdapterPool:
         self._lru: OrderedDict[Any, int] = OrderedDict()
         self._free: list[int] = list(range(n_slots - 1, 0, -1))
         self._pinned: set = set()
+        #: tenant -> oldest..newest previous-version records, each
+        #: {"payload": {pool-array name: np.ndarray slot slice},
+        #:  "step": int, "eval_loss": float|None}; bounded at
+        #: ``history_depth`` entries per tenant.
+        self._hist: dict[Any, list[dict]] = {}
+        #: tenant -> {"step", "eval_loss"} of the *current* slot payload.
+        self._vmeta: dict[Any, dict] = {}
         #: bumps whenever the tenant->slot map changes (new assignment,
         #: eviction, restore) — NOT on LRU touches, which keep slots stable.
         #: Callers may cache ``lookup`` results keyed on this (the session
@@ -204,12 +234,101 @@ class AdapterPool:
                         "pinned: cannot evict for a new registration"
                     )
                 slot = self._lru.pop(victim)
+                self._drop_versions(victim)
                 self.stats.evictions += 1
             else:
                 slot = self._free.pop()
             self._lru[tenant] = slot
             self.version += 1
         return slot
+
+    # -- versioned slots (control plane, DESIGN.md §13) -----------------------
+
+    def _payload_names(self) -> list[str]:
+        """Per-slot pool arrays — everything ``pools()`` serves except the
+        shared 4-bit codebook, which is a pool constant, not slot state."""
+        return [n for n in self.pools() if n != "code"]
+
+    def slot_payload(self, tenant) -> dict[str, jax.Array]:
+        """The tenant's current slot content in storage layout (quantised
+        pools stay quantised — the version a rollback would need to restore
+        bitwise)."""
+        slot = self._lru[tenant]
+        return {n: self.pools()[n][slot] for n in self._payload_names()}
+
+    def _push_history(self, tenant) -> None:
+        """Archive the tenant's outgoing slot payload (+ its version meta)
+        before an overwrite. Host copies: history must survive the donated
+        in-place slot write that replaces the live buffers."""
+        if self.history_depth < 1:
+            return
+        meta = self._vmeta.get(tenant, {})
+        rec = {
+            "payload": {
+                n: np.asarray(v) for n, v in self.slot_payload(tenant).items()
+            },
+            "step": int(meta.get("step", 0)),
+            "eval_loss": meta.get("eval_loss"),
+        }
+        h = self._hist.setdefault(tenant, [])
+        h.append(rec)
+        del h[: -self.history_depth]
+
+    def _drop_versions(self, tenant) -> None:
+        self._hist.pop(tenant, None)
+        self._vmeta.pop(tenant, None)
+
+    def history_len(self, tenant) -> int:
+        return len(self._hist.get(tenant, ()))
+
+    def version_info(self, tenant) -> dict:
+        """{"step", "eval_loss", "history"} of the tenant's served version
+        (KeyError if unregistered)."""
+        if tenant not in self._lru:
+            raise KeyError(f"tenant {tenant!r} has no registered adapters")
+        meta = self._vmeta.get(tenant, {})
+        return {
+            "step": int(meta.get("step", 0)),
+            "eval_loss": meta.get("eval_loss"),
+            "history": self.history_len(tenant),
+        }
+
+    def set_eval_loss(self, tenant, eval_loss) -> None:
+        """Stamp the served version's held-out loss (the gate's baseline
+        record) without touching the payload."""
+        if tenant not in self._lru:
+            raise KeyError(f"tenant {tenant!r} has no registered adapters")
+        meta = self._vmeta.setdefault(tenant, {"step": 0, "eval_loss": None})
+        meta["eval_loss"] = None if eval_loss is None else float(eval_loss)
+
+    def rollback(self, tenant) -> dict:
+        """Restore the tenant's previous adapter version into its slot —
+        bitwise, since history stores the storage-layout payload — and bump
+        ``version`` so every slot-index memo keyed on it invalidates.
+        Returns the restored version's {"step", "eval_loss"}. Raises
+        KeyError when the tenant has no archived version to roll back to."""
+        if tenant not in self._lru:
+            raise KeyError(f"tenant {tenant!r} has no registered adapters")
+        h = self._hist.get(tenant)
+        if not h:
+            raise KeyError(f"tenant {tenant!r} has no version history")
+        rec = h.pop()
+        if not h:
+            del self._hist[tenant]
+        s = jnp.asarray(self._lru[tenant], jnp.int32)
+        for name, arr in rec["payload"].items():
+            attr = "_" + name.lower()
+            cur = getattr(self, attr)
+            val = jnp.asarray(arr, cur.dtype)
+            if self.device is not None:
+                val = jax.device_put(val, self.device)
+            setattr(self, attr, _set_slot(cur, s, val))
+        self._vmeta[tenant] = {
+            "step": rec["step"], "eval_loss": rec["eval_loss"]
+        }
+        self.version += 1
+        self.stats.rollbacks += 1
+        return {"step": rec["step"], "eval_loss": rec["eval_loss"]}
 
     # -- session pinning ----------------------------------------------------
 
@@ -230,11 +349,13 @@ class AdapterPool:
     def pinned(self) -> set:
         return set(self._pinned)
 
-    def register(self, tenant, adapters: Params) -> int:
+    def register(self, tenant, adapters: Params, *, meta: Optional[dict] = None) -> int:
         """Install a tenant's fine-tuned {"A": (L,D,R), "B": (L,R,D)} stack.
 
-        Re-registering overwrites in place (a fresh on-device fine-tune).
-        A full pool evicts the least-recently-served tenant.
+        Re-registering overwrites in place (a fresh on-device fine-tune),
+        archiving the outgoing payload when ``history > 0``. A full pool
+        evicts the least-recently-served tenant. ``meta`` optionally stamps
+        the new version's {"step", "eval_loss"}.
 
         Off-CPU the slot write donates the pool buffers (an in-place
         O(L*D*R) write, never a full-pool copy) — any dict previously
@@ -242,19 +363,41 @@ class AdapterPool:
         registration and never register mid-flight of a computation that
         still holds the old arrays.
         """
+        if tenant in self._lru:
+            self._push_history(tenant)
         slot = self._assign_slot(tenant)
         self._write_slot(slot, adapters)
+        self._vmeta[tenant] = {
+            "step": int((meta or {}).get("step", 0)),
+            "eval_loss": (meta or {}).get("eval_loss"),
+        }
         self.stats.registrations += 1
         return slot
 
-    def register_many(self, tenants, stacked: Params) -> list[int]:
+    def register_many(
+        self,
+        tenants,
+        stacked: Params,
+        *,
+        gate=None,
+        meta: Optional[dict] = None,
+    ) -> list[int]:
         """Batched registration of a fleet-trained stack: tenant
         ``tenants[i]`` gets ``{"A": stacked["A"][i], "B": stacked["B"][i]}``
         installed via ONE donated scatter per pool array (the fleet
         trainer's write-back path — an in-place O(T*L*D*R) write, never a
         full-pool copy, same donation caveats as ``register``). Returns the
         assigned slots, LRU/eviction semantics identical to T sequential
-        ``register`` calls."""
+        ``register`` calls.
+
+        ``gate`` is the control plane's write-back hook (DESIGN.md §13): a
+        callable ``tenant -> decision`` drawn from ``GATE_DECISIONS``,
+        consulted only for *re*-registrations (a fresh tenant has no served
+        version to protect, so its first write-back always lands). A
+        non-"accept" decision drops the tenant's rows from the scatter —
+        the slot keeps serving the previous version bitwise — and bumps the
+        matching gate counter. ``meta`` maps tenant -> {"step", "eval_loss"}
+        stamped onto versions that do land."""
         tenants = list(tenants)
         if len(set(tenants)) != len(tenants):
             raise ValueError("duplicate tenants in batched registration")
@@ -272,8 +415,41 @@ class AdapterPool:
                 f"stacked shapes {a.shape}/{b.shape} != "
                 f"{(len(tenants),) + self._shape_a}/{(len(tenants),) + self._shape_b}"
             )
-        slots = [self._assign_slot(t) for t in tenants]
-        sv = jnp.asarray(slots, jnp.int32)
+        write_idx: list[int] = []
+        for i, t in enumerate(tenants):
+            decision = "accept"
+            if gate is not None and t in self._lru:
+                decision = gate(t)
+                if decision not in GATE_DECISIONS:
+                    raise ValueError(f"gate decision {decision!r} for {t!r}")
+            if decision == "accept":
+                if t in self._lru:
+                    self._push_history(t)
+                write_idx.append(i)
+            elif decision == "reject":
+                self.stats.gate_rejected += 1
+            else:
+                self.stats.gate_quarantined += 1
+        writes = set(write_idx)
+        slots = []
+        for i, t in enumerate(tenants):
+            if i in writes:
+                slots.append(self._assign_slot(t))
+                self._vmeta[t] = {
+                    "step": int((meta or {}).get(t, {}).get("step", 0)),
+                    "eval_loss": (meta or {}).get(t, {}).get("eval_loss"),
+                }
+            else:
+                # Gated out: slot, payload, and version meta all stay on the
+                # previous version; still an LRU touch (the tenant was live).
+                self._lru.move_to_end(t)
+                slots.append(self._lru[t])
+        if not write_idx:
+            return slots
+        if len(write_idx) < len(tenants):
+            w = np.asarray(write_idx)
+            a, b = a[w], b[w]
+        sv = jnp.asarray([slots[i] for i in write_idx], jnp.int32)
         if self.compress in q4.Q4_KINDS:
             # Rowwise (last-axis) quantisation is per-slot independent, so
             # quantising the whole stack at once matches per-slot writes.
@@ -293,7 +469,7 @@ class AdapterPool:
         else:
             self._a = _set_slot(self._a, sv, a.astype(self._a.dtype))
             self._b = _set_slot(self._b, sv, b.astype(self._b.dtype))
-        self.stats.registrations += len(tenants)
+        self.stats.registrations += len(write_idx)
         return slots
 
     def evict(self, tenant) -> None:
@@ -303,6 +479,7 @@ class AdapterPool:
                 "unpin before evicting"
             )
         slot = self._lru.pop(tenant)
+        self._drop_versions(tenant)
         self._free.append(slot)
         self.version += 1
         self.stats.evictions += 1
@@ -362,22 +539,66 @@ class AdapterPool:
 
     def slot_table(self) -> dict:
         """JSON-able control plane: LRU-ordered (tenant, slot) pairs, free
-        list, pinned tenants. Tenant ids must be JSON-serialisable for this
-        to round-trip through a checkpoint manifest."""
+        list, pinned tenants, plus the versioning plane — per-tenant version
+        meta and history *metadata* ([step, eval_loss] per archived version,
+        oldest..newest; payload arrays travel via ``state_arrays``, keyed
+        ``hist/h{j}`` in the same LRU x depth enumeration order). Tenant ids
+        must be JSON-serialisable for this to round-trip through a
+        checkpoint manifest."""
         return {
             "lru": [[t, s] for t, s in self._lru.items()],
             "free": list(self._free),
             "pinned": [t for t in self._lru if t in self._pinned],
+            "history_depth": self.history_depth,
+            "meta": [
+                [t, [m["step"], m["eval_loss"]]]
+                for t, m in ((t, self._vmeta[t]) for t in self._lru)
+                if t in self._vmeta
+            ],
+            "history": [
+                [t, [[r["step"], r["eval_loss"]] for r in self._hist[t]]]
+                for t in self._lru
+                if self._hist.get(t)
+            ],
         }
 
-    def load_state(self, arrays: dict[str, jax.Array], table: dict) -> None:
-        """Restore the data plane (a ``pools()``-layout dict) and control
-        plane (a ``slot_table()`` dict) saved from a pool of identical
-        geometry — the checkpoint restore path."""
+    def _hist_enumeration(self) -> list[tuple[Any, int]]:
+        """(tenant, depth-index) pairs in the deterministic order history
+        payload arrays are keyed under in ``state_arrays`` — LRU order,
+        oldest..newest within a tenant — matching ``slot_table()``'s
+        "history" entry row for row."""
+        out = []
+        for t in self._lru:
+            for j in range(len(self._hist.get(t, ()))):
+                out.append((t, j))
+        return out
+
+    def state_arrays(self) -> dict:
+        """Everything array-valued a checkpoint must carry: the data plane
+        under "data" (``pools()`` layout) and archived version payloads
+        under "hist" as flat ``h{k}/{name}`` sub-dicts (enumeration order
+        per ``_hist_enumeration``; metadata to reassemble lives in
+        ``slot_table()``)."""
+        hist = {}
+        for k, (t, j) in enumerate(self._hist_enumeration()):
+            hist[f"h{k}"] = dict(self._hist[t][j]["payload"])
+        return {"data": dict(self.pools()), "hist": hist}
+
+    def load_state(self, arrays: dict, table: dict) -> None:
+        """Restore the data plane and control plane saved from a pool of
+        identical geometry — the checkpoint restore path. ``arrays`` is a
+        ``state_arrays()`` layout ({"data": ..., "hist": ...}); a flat
+        ``pools()`` dict (the pre-versioning layout) is also accepted, with
+        no history."""
+        if "data" in arrays:
+            data = arrays["data"]
+            hist_payloads = arrays.get("hist", {})
+        else:
+            data, hist_payloads = arrays, {}
         want = set(self.pools())
-        if set(arrays) != want:
-            raise ValueError(f"pool arrays {set(arrays)} != expected {want}")
-        for name, arr in arrays.items():
+        if set(data) != want:
+            raise ValueError(f"pool arrays {set(data)} != expected {want}")
+        for name, arr in data.items():
             cur = self.pools()[name]
             arr = jnp.asarray(arr, cur.dtype)
             if arr.shape != cur.shape:
@@ -390,6 +611,32 @@ class AdapterPool:
         self._lru = OrderedDict((t, int(s)) for t, s in table["lru"])
         self._free = [int(s) for s in table["free"]]
         self._pinned = set(table.get("pinned", ()))
+        self._vmeta = {
+            t: {"step": int(step), "eval_loss": loss}
+            for t, (step, loss) in table.get("meta", [])
+        }
+        self._hist = {}
+        hist_meta = {t: metas for t, metas in table.get("history", [])}
+        k = 0
+        for t in self._lru:
+            for step, loss in hist_meta.get(t, ()):
+                payload = hist_payloads.get(f"h{k}")
+                if payload is None:
+                    raise ValueError(
+                        f"history payload h{k} (tenant {t!r}) missing from "
+                        "checkpoint arrays"
+                    )
+                self._hist.setdefault(t, []).append({
+                    "payload": {n: np.asarray(v) for n, v in payload.items()},
+                    "step": int(step),
+                    "eval_loss": loss,
+                })
+                k += 1
+        if k != len(hist_payloads):
+            raise ValueError(
+                f"{len(hist_payloads)} history payloads in checkpoint, "
+                f"manifest accounts for {k}"
+            )
         self.version += 1
 
 
@@ -431,16 +678,18 @@ class ShardedAdapterPool:
         devices: Optional[list] = None,
         compress: Optional[str] = None,
         dtype=jnp.float32,
+        history: int = 0,
     ):
         if n_shards < 1:
             raise ValueError(f"need >= 1 shard, got {n_shards}")
         devs = list(devices) if devices else [None]
         self.n_shards = n_shards
         self.compress = compress
+        self.history_depth = history
         self.shards = [
             AdapterPool(
                 n_slots_per_shard, cfg, rank, compress=compress, dtype=dtype,
-                device=devs[s % len(devs)],
+                device=devs[s % len(devs)], history=history,
             )
             for s in range(n_shards)
         ]
@@ -536,15 +785,29 @@ class ShardedAdapterPool:
             agg.evictions += p.stats.evictions
             agg.lookups += p.stats.lookups
             agg.misses += p.stats.misses
+            agg.rollbacks += p.stats.rollbacks
+            agg.gate_rejected += p.stats.gate_rejected
+            agg.gate_quarantined += p.stats.gate_quarantined
         return agg
 
-    def register(self, tenant, adapters: Params) -> int:
-        return self.shards[self.place(tenant)].register(tenant, adapters)
+    def register(self, tenant, adapters: Params, *, meta: Optional[dict] = None) -> int:
+        return self.shards[self.place(tenant)].register(
+            tenant, adapters, meta=meta
+        )
 
-    def register_many(self, tenants, stacked: Params) -> list[int]:
+    def register_many(
+        self,
+        tenants,
+        stacked: Params,
+        *,
+        gate=None,
+        meta: Optional[dict] = None,
+    ) -> list[int]:
         """Batched write-back, routed by placement. The mesh-native adapt
         path calls this with a same-shard group (one donated scatter on that
-        shard's device); mixed groups split into one write per shard."""
+        shard's device); mixed groups split into one write per shard.
+        ``gate``/``meta`` semantics per ``AdapterPool.register_many`` —
+        both are tenant-keyed, so they pass through to shards unsplit."""
         tenants = list(tenants)
         by_shard: dict[int, list[int]] = {}
         for i, t in enumerate(tenants):
@@ -562,9 +825,23 @@ class ShardedAdapterPool:
                 if self.shards[s].device is not None:
                     sub = jax.device_put(sub, self.shards[s].device)
             for i, slot in zip(rows, self.shards[s].register_many(
-                    [tenants[i] for i in rows], sub)):
+                    [tenants[i] for i in rows], sub, gate=gate, meta=meta)):
                 slots[i] = slot
         return slots
+
+    # -- versioned slots (routed by placement) --------------------------------
+
+    def rollback(self, tenant) -> dict:
+        return self.shards[self.shard_of(tenant)].rollback(tenant)
+
+    def version_info(self, tenant) -> dict:
+        return self.shards[self.shard_of(tenant)].version_info(tenant)
+
+    def history_len(self, tenant) -> int:
+        return self.shards[self.shard_of(tenant)].history_len(tenant)
+
+    def set_eval_loss(self, tenant, eval_loss) -> None:
+        self.shards[self.shard_of(tenant)].set_eval_loss(tenant, eval_loss)
 
     def evict(self, tenant) -> None:
         self.shards[self.shard_of(tenant)].evict(tenant)
@@ -587,9 +864,10 @@ class ShardedAdapterPool:
 
     # -- session state (checkpoint plane) ------------------------------------
 
-    def state_arrays(self) -> dict[str, dict[str, jax.Array]]:
-        """Per-shard data planes, keyed ``"s<shard>"`` (checkpoint layout)."""
-        return {f"s{i}": p.pools() for i, p in enumerate(self.shards)}
+    def state_arrays(self) -> dict:
+        """Per-shard state (data plane + archived version payloads), keyed
+        ``"s<shard>"`` (checkpoint layout)."""
+        return {f"s{i}": p.state_arrays() for i, p in enumerate(self.shards)}
 
     def slot_table(self) -> dict:
         """JSON-able control plane: the placement map + per-shard tables."""

@@ -62,6 +62,65 @@ def index_matrix(
     return ids, valid.reshape(steps, bs)
 
 
+def shadow_split(
+    n_rows: int, *, every: Optional[int]
+) -> tuple[np.ndarray, np.ndarray]:
+    """Deterministic held-out split of a tenant's ingested rows: local row
+    ``r`` is held out iff ``(r + 1) % every == 0`` (every ``every``-th row).
+
+    The rule is a pure function of the row id — no RNG — which gives the
+    control plane (DESIGN.md §13) the two properties shadow eval needs:
+
+      - *stable under append*: ingesting more rows never reassigns an
+        existing row between the train and eval sides, so a tenant's eval
+        set only ever grows, and a restored session splits identically;
+      - *trainer-visible*: the train side is exactly the complement, so the
+        epoch planner can permute train rows only (``holdout_every`` below)
+        while eval rows stay untouched by any optimizer step.
+
+    Row 0 is always a train row (``every >= 2`` enforced), so a tenant with
+    any data can always train; tenants with ``n_rows < every`` simply have
+    an empty eval set (the regression gate stays inactive for them).
+    Returns (train_ids, eval_ids), both sorted ascending.
+    """
+    ids = np.arange(n_rows)
+    if every is None:
+        return ids, np.empty(0, dtype=ids.dtype)
+    if every < 2:
+        raise ValueError(f"holdout every {every} < 2 leaves no train rows")
+    hold = (ids + 1) % every == 0
+    return ids[~hold], ids[hold]
+
+
+def fleet_eval_index(
+    n_tenants: int,
+    samples_per_tenant: int,
+    *,
+    holdout_every: int,
+    partitions: Optional[Sequence[int]] = None,
+    partition_stride: Optional[int] = None,
+) -> np.ndarray:
+    """(N * n_eval,) global sample ids of every tenant's held-out rows,
+    tenant-contiguous in fleet order (the layout ``per_tenant_loss``
+    reduces over). Deterministic — the eval visitation is the identity
+    order of ``shadow_split``'s eval side, no RNG stream — so pre- and
+    post-adapt eval read the identical rows. Partition/stride semantics
+    match ``fleet_index_matrix``."""
+    stride = (
+        partition_stride if partition_stride is not None else samples_per_tenant
+    )
+    parts = list(partitions) if partitions is not None else list(range(n_tenants))
+    if len(parts) != n_tenants:
+        raise ValueError(f"{len(parts)} partitions for {n_tenants} tenants")
+    _, eval_ids = shadow_split(samples_per_tenant, every=holdout_every)
+    if eval_ids.size == 0:
+        raise ValueError(
+            f"no held-out rows: {samples_per_tenant} rows at "
+            f"holdout_every={holdout_every}"
+        )
+    return np.concatenate([part * stride + eval_ids for part in parts])
+
+
 def fleet_index_matrix(
     epoch: int,
     n_tenants: int,
@@ -73,6 +132,7 @@ def fleet_index_matrix(
     partition_stride: Optional[int] = None,
     streams: Optional[Sequence[int]] = None,
     tail: str = "wrap",
+    holdout_every: Optional[int] = None,
 ) -> np.ndarray | tuple[np.ndarray, np.ndarray]:
     """(steps, N * bpt) global sample ids of a tenant-contiguous fleet epoch.
 
@@ -94,6 +154,11 @@ def fleet_index_matrix(
     allocation stride so partially-filled partitions still address their
     own rows. Tail semantics per ``index_matrix``; ``tail="mask"``
     additionally returns the stacked validity mask.
+
+    ``holdout_every`` activates the shadow split (``shadow_split``): each
+    tenant's epoch permutes its *train* rows only — every ``holdout_every``-
+    th ingested row is reserved for held-out eval and never appears in a
+    training batch. ``None`` (the default) is bitwise the historical plan.
     """
     stride = partition_stride if partition_stride is not None else samples_per_tenant
     if stride < samples_per_tenant:
@@ -106,9 +171,17 @@ def fleet_index_matrix(
     strm = list(streams) if streams is not None else parts
     if len(strm) != n_tenants:
         raise ValueError(f"{len(strm)} streams for {n_tenants} tenants")
+    train_rows, _ = shadow_split(samples_per_tenant, every=holdout_every)
+    if train_rows.size == 0:
+        raise ValueError("shadow split left no train rows")
     cols, masks = [], []
     for part, stream in zip(parts, strm):
-        perm = epoch_permutation(seed + stream, epoch, samples_per_tenant)
+        # The permutation is drawn over the train count and mapped through
+        # the (sorted) train ids, so the holdout-free plan (train_rows ==
+        # arange(n)) is bitwise the historical one.
+        perm = train_rows[
+            epoch_permutation(seed + stream, epoch, train_rows.size)
+        ]
         planned = index_matrix(perm, batch_per_tenant, tail=tail)
         if tail == "mask":
             planned, valid = planned

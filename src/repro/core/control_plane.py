@@ -1,0 +1,199 @@
+"""Adapter control plane: shadow eval, regression gate, rollback policy.
+
+The bitwise-parity story (DESIGN.md §9–§10) guarantees *reproducibility*
+of online adaptation, not *quality*: a fleet that adapts millions of
+tenant adapters in place has no way to notice when an ``adapt`` step made
+a tenant worse. This module is the policy half of the fix (DESIGN.md §13):
+
+  - **shadow eval** — every tenant reserves a deterministic held-out slice
+    of its ingested rows (``batch_plan.shadow_split``: local row ``r`` is
+    held out iff ``(r + 1) % holdout_every == 0``). The session runtime
+    computes pre-/post-adapt held-out loss inside the same fused scan
+    dispatch as training, reading the *cached* activations — shadow eval
+    never runs the frozen backbone again.
+  - **regression gate** — a write-back whose held-out loss regressed by
+    more than ``threshold`` is not installed. ``mode="reject"`` also
+    freezes the tenant's training state (the next adapt retrains the same
+    rows from the served version); ``mode="quarantine"`` lets training
+    state advance but keeps serving the old version and flags the tenant
+    for operator attention.
+  - **rollback ledger** — gate decisions, eval deltas, and rollback counts
+    per tenant, surfaced through ``launch/run.py --json`` and
+    ``benchmarks/control_bench.py``.
+
+The *mechanism* lives elsewhere: ``AdapterPool`` owns versioned slots and
+enforces the gate inside ``register_many`` (a non-accept decision drops
+the tenant's rows from the donated scatter), ``SessionRuntime`` owns the
+eval dispatch and the reject/quarantine state semantics. This module only
+decides and records — it holds no device arrays, so its whole state is a
+small JSON-able dict that rides a checkpoint manifest.
+
+Everything here is opt-in: a session without a ``ControlConfig`` plans,
+trains, and writes back bitwise as before.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+GATE_MODES = ("reject", "quarantine")
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlConfig:
+    """Control-plane policy knobs (DESIGN.md §13).
+
+    holdout_every: every N-th ingested row per tenant is held out for
+        shadow eval (>= 2; row 0 always trains). Tenants with fewer rows
+        than ``holdout_every`` have an empty eval set and pass ungated.
+    threshold: max tolerated held-out regression, ``post - pre`` in nats.
+        0.0 = any regression gates; ``float("inf")`` = gate never fires
+        (eval/metrics only).
+    mode: what a gated write-back does to the tenant's *training* state —
+        "reject" freezes it (retrain from the served version next adapt),
+        "quarantine" advances it but keeps serving the old payload and
+        flags the tenant.
+    history_depth: previous adapter versions kept per tenant for
+        ``rollback`` (>= 1 so the gate always has a version to protect).
+    """
+
+    holdout_every: int = 4
+    threshold: float = 0.0
+    mode: str = "reject"
+    history_depth: int = 2
+
+    def __post_init__(self):
+        if self.holdout_every < 2:
+            raise ValueError(
+                f"holdout_every {self.holdout_every} < 2 leaves no train rows"
+            )
+        if self.mode not in GATE_MODES:
+            raise ValueError(f"unknown gate mode {self.mode!r}")
+        if self.history_depth < 1:
+            raise ValueError(
+                f"history_depth {self.history_depth} < 1: the gate needs at "
+                "least one archived version to protect"
+            )
+
+
+class ControlPlane:
+    """Per-tenant gate ledger: decides write-backs, records the outcomes.
+
+    One instance per session. Tenant keys are whatever the session uses
+    (ints or strings); state round-trips through JSON as lists of pairs,
+    so int tenant ids survive a manifest (JSON objects would stringify
+    them).
+    """
+
+    def __init__(self, config: ControlConfig):
+        self.config = config
+        #: tenant -> {"pre", "post", "delta", "decision", "step"} of the
+        #: most recent gated adapt (None fields while no eval ran).
+        self._last: dict[Any, dict] = {}
+        #: tenants currently quarantined (served from the pre-adapt
+        #: version, flagged for re-adapt / operator attention).
+        self._quarantined: set = set()
+        self.accepted = 0
+        self.rejected = 0
+        self.quarantined = 0
+        self.rollbacks = 0
+
+    # -- decisions -----------------------------------------------------------
+
+    def decide(self, tenant, pre: Optional[float], post: Optional[float]) -> str:
+        """Gate one tenant's write-back from its held-out losses.
+
+        ``None`` (no eval rows, or first-ever version) always accepts: a
+        fresh tenant has no served version to protect, and a tenant below
+        ``holdout_every`` rows has nothing to measure. Otherwise the
+        write-back is gated iff ``post - pre > threshold``.
+        """
+        if pre is None or post is None:
+            return "accept"
+        if post - pre > self.config.threshold:
+            return self.config.mode
+        return "accept"
+
+    def record(
+        self,
+        tenant,
+        decision: str,
+        *,
+        pre: Optional[float] = None,
+        post: Optional[float] = None,
+        step: int = 0,
+    ) -> None:
+        """Ledger one gate outcome (the runtime calls this right after
+        write-back, whatever ``decide`` said)."""
+        self._last[tenant] = {
+            "pre": pre,
+            "post": post,
+            "delta": None if pre is None or post is None else post - pre,
+            "decision": decision,
+            "step": int(step),
+        }
+        if decision == "accept":
+            self.accepted += 1
+            self._quarantined.discard(tenant)
+        elif decision == "reject":
+            self.rejected += 1
+        elif decision == "quarantine":
+            self.quarantined += 1
+            self._quarantined.add(tenant)
+        else:
+            raise ValueError(f"unknown gate decision {decision!r}")
+
+    def record_rollback(self, tenant) -> None:
+        self.rollbacks += 1
+        self._quarantined.discard(tenant)
+        self._last.pop(tenant, None)
+
+    # -- introspection -------------------------------------------------------
+
+    def is_quarantined(self, tenant) -> bool:
+        return tenant in self._quarantined
+
+    def quarantined_tenants(self) -> list:
+        return sorted(self._quarantined, key=repr)
+
+    def last(self, tenant) -> Optional[dict]:
+        rec = self._last.get(tenant)
+        return dict(rec) if rec is not None else None
+
+    def metrics(self) -> dict:
+        """JSON-able ledger snapshot (the ``--json`` / bench surface)."""
+        return {
+            "config": {
+                "holdout_every": self.config.holdout_every,
+                "threshold": self.config.threshold,
+                "mode": self.config.mode,
+                "history_depth": self.config.history_depth,
+            },
+            "accepted": self.accepted,
+            "rejected": self.rejected,
+            "quarantined": self.quarantined,
+            "rollbacks": self.rollbacks,
+            "quarantined_tenants": self.quarantined_tenants(),
+            "tenants": [[t, dict(rec)] for t, rec in self._last.items()],
+        }
+
+    # -- checkpoint plane ----------------------------------------------------
+
+    def state(self) -> dict:
+        """JSON-able state for a checkpoint manifest. Tenant-keyed maps go
+        as lists of pairs so int tenant ids round-trip."""
+        return {
+            "last": [[t, dict(rec)] for t, rec in self._last.items()],
+            "quarantined": list(self._quarantined),
+            "counters": [
+                self.accepted, self.rejected, self.quarantined, self.rollbacks,
+            ],
+        }
+
+    def load_state(self, state: dict) -> None:
+        self._last = {t: dict(rec) for t, rec in state.get("last", [])}
+        self._quarantined = set(state.get("quarantined", ()))
+        acc, rej, quar, rb = state.get("counters", (0, 0, 0, 0))
+        self.accepted, self.rejected = int(acc), int(rej)
+        self.quarantined, self.rollbacks = int(quar), int(rb)

@@ -302,6 +302,85 @@ def make_fleet_cached_epoch(
     return jax.jit(epoch, donate_argnums=d(1, 2))
 
 
+def make_fleet_eval_loss(
+    cfg: ModelConfig,
+    sl: SL.SkipLoRAConfig,
+    n_tenants: int,
+    *,
+    use_kernel: bool = True,
+    jit: bool = True,
+):
+    """Per-tenant held-out loss from cached values — the shadow-eval body
+    (DESIGN.md §13). The backbone term (``y_base``) is already in the cache
+    from the populate forward, so eval is the same backbone-free grouped
+    skip-sum + CE a cached training step runs, minus the gradient: zero
+    extra forwards over the backbone, ever.
+
+    eval_loss: (params, stacked, vals, row_tenant) -> (N,) per-tenant loss.
+    """
+    dtype = model_dtype(cfg)
+
+    def eval_loss(params, stacked, vals, row_tenant):
+        _, per = fleet_cached_loss(
+            params, cfg, sl, stacked, vals, row_tenant, n_tenants, dtype,
+            use_kernel=use_kernel,
+        )
+        return per
+
+    return jax.jit(eval_loss) if jit else eval_loss
+
+
+def make_fleet_cached_epoch_eval(
+    cfg: ModelConfig,
+    sl: SL.SkipLoRAConfig,
+    optimizer,
+    n_tenants: int,
+    *,
+    use_kernel: bool = True,
+    eval_pre: bool = True,
+    eval_post: bool = True,
+    donate: bool = False,
+):
+    """``make_fleet_cached_epoch`` with shadow eval folded into the SAME
+    fused dispatch: the held-out per-tenant loss is computed from the
+    cached rows immediately before the epoch's scan (``eval_pre``) and/or
+    immediately after it (``eval_post``) — one compiled program, so eval
+    adds two cache gathers and two grouped skip-sums to an epoch of
+    training steps, not an extra dispatch (and never a backbone forward).
+
+    epoch: (params, stacked, opt_state, cache, idx_mat, row_tenant,
+            eval_idx, eval_row_tenant)
+        -> (stacked, opt_state, losses (steps, N), pre (N,)|None, post (N,)|None)
+    """
+    step = make_fleet_cached_step_from_vals(
+        cfg, sl, optimizer, n_tenants, use_kernel=use_kernel
+    )
+    ev = make_fleet_eval_loss(
+        cfg, sl, n_tenants, use_kernel=use_kernel, jit=False
+    )
+
+    def epoch(params, stacked, opt_state, cache, idx_mat, row_tenant,
+              eval_idx, eval_row_tenant):
+        def held_out(t):
+            return ev(params, t, cache_read(cache, eval_idx), eval_row_tenant)
+
+        pre = held_out(stacked) if eval_pre else None
+
+        def body(carry, idx):
+            t, o = carry
+            t, o, per = step(params, t, o, cache_read(cache, idx), row_tenant)
+            return (t, o), per
+
+        (stacked, opt_state), losses = jax.lax.scan(
+            body, (stacked, opt_state), idx_mat
+        )
+        post = held_out(stacked) if eval_post else None
+        return stacked, opt_state, losses, pre, post
+
+    d = donate_argnums if donate else (lambda *a: ())
+    return jax.jit(epoch, donate_argnums=d(1, 2))
+
+
 def make_fleet_populate_epoch(
     cfg: ModelConfig,
     sl: SL.SkipLoRAConfig,

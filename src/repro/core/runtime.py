@@ -76,6 +76,7 @@ from repro.core import fleet_finetune as FF
 from repro.core import lm_skiplora as SL
 from repro.core.adapter_pool import ShardedAdapterPool
 from repro.core.cache_engine import CacheStats, TieredCacheEngine
+from repro.core.control_plane import ControlConfig, ControlPlane
 from repro.models.config import ModelConfig
 from repro.runtime.sharding import (
     make_mesh,
@@ -391,6 +392,7 @@ class SessionRuntime:
         mesh=None,
         placement_shards: Optional[int] = None,
         idx_memo_slots: int = 256,
+        control: Optional[ControlConfig] = None,
     ):
         if sl.mode not in ("full", "int8"):
             raise ValueError(
@@ -409,6 +411,14 @@ class SessionRuntime:
         self.seed = seed
         self.optimizer = optimizer if optimizer is not None else adamw(lr)
         self._opt_key = ("adamw", lr) if optimizer is None else ("custom", id(optimizer))
+        #: Adapter control plane (DESIGN.md §13) — strictly opt-in: with
+        #: ``control=None`` (the default) the session plans, trains, and
+        #: writes back bitwise the historical trajectory. With a
+        #: ``ControlConfig``: every tenant's epoch plan excludes its
+        #: held-out rows, ``adapt`` computes pre/post shadow-eval loss in
+        #: the same fused dispatch as training, and write-back is gated.
+        self.control_cfg = control
+        self.control = ControlPlane(control) if control is not None else None
 
         # -- mesh + logical shard layout ------------------------------------
         if mesh is None:
@@ -473,6 +483,7 @@ class SessionRuntime:
             pool_slots if pool_slots is not None else tenants_per_shard + 1,
             cfg, sl.rank, n_shards=self.n_shards,
             devices=self._shard_device, compress=pool_compress,
+            history=control.history_depth if control is not None else 0,
         )
         self._tenants: dict[Any, TenantState] = {}
         #: Per-shard free cache partitions (global partition ids; partition
@@ -822,11 +833,28 @@ class SessionRuntime:
             mu=_maybe_stack([st.opt_mu for st in states]),
             nu=_maybe_stack([st.opt_nu for st in states]),
         ), device)
-        bpt = min(batch_per_tenant, spt)
+        # Shadow split (DESIGN.md §13): with a control plane, each tenant's
+        # epoch permutes its TRAIN rows only; every holdout_every-th ingested
+        # row is reserved for held-out eval. holdout=None is bitwise the
+        # historical plan.
+        holdout = (
+            self.control_cfg.holdout_every if self.control is not None else None
+        )
+        train_rows, eval_rows = batch_plan.shadow_split(spt, every=holdout)
+        do_eval = self.control is not None and eval_rows.size > 0
+        bpt = min(batch_per_tenant, train_rows.size)
         row_tenant = FF.fleet_row_tenant(n, bpt)
         partitions = [st.partition for st in states]
+        local_parts = [p // self.n_shards for p in partitions]
         fn_key = (self.cfg, self.sl, n, self.use_kernel, self._opt_key)
         resident = engine.capacity >= engine.num_samples
+
+        if do_eval:
+            eval_idx = jnp.asarray(batch_plan.fleet_eval_index(
+                n, spt, holdout_every=holdout, partitions=local_parts,
+                partition_stride=self.samples_per_tenant,
+            ))
+            eval_row_tenant = FF.fleet_row_tenant(n, eval_rows.size)
 
         if resident:
             epoch_fn = compiled(
@@ -849,6 +877,22 @@ class SessionRuntime:
                     use_kernel=self.use_kernel,
                 )),
             )
+            if do_eval:
+                ev_fn = compiled(
+                    ("fleet_eval", *fn_key),
+                    lambda: FF.make_fleet_eval_loss(
+                        self.cfg, self.sl, n, use_kernel=self.use_kernel,
+                    ),
+                )
+
+        pre_loss = post_loss = None
+        if do_eval and not resident:
+            # Streaming path: eval rides separate (still backbone-free)
+            # dispatches over the engine-read cached rows.
+            pre_loss = ev_fn(
+                self._shard_params[shard], stacked,
+                engine.read(eval_idx), eval_row_tenant,
+            )
 
         all_losses = []
         steps_per_epoch = 0
@@ -858,12 +902,35 @@ class SessionRuntime:
             # elastically restored) session replays identical orders.
             idx_mat = batch_plan.fleet_index_matrix(
                 epoch0 + e, n, spt, bpt, seed=self.seed,
-                partitions=[p // self.n_shards for p in partitions],
+                partitions=local_parts,
                 streams=partitions,
                 partition_stride=self.samples_per_tenant,
+                holdout_every=holdout,
             )
             steps_per_epoch = idx_mat.shape[0]
-            if resident:
+            want_pre = do_eval and resident and e == 0
+            want_post = do_eval and resident and e == epochs - 1
+            if want_pre or want_post:
+                # Shadow eval folded into the SAME fused dispatch as the
+                # training scan (one jit per (pre, post) flag pair).
+                eval_epoch_fn = compiled(
+                    ("fleet_cached_epoch_eval", *fn_key, want_pre, want_post),
+                    lambda: FF.make_fleet_cached_epoch_eval(
+                        self.cfg, self.sl, self.optimizer, n,
+                        use_kernel=self.use_kernel,
+                        eval_pre=want_pre, eval_post=want_post, donate=False,
+                    ),
+                )
+                stacked, opt_state, ls, pre, post = eval_epoch_fn(
+                    self._shard_params[shard], stacked, opt_state, cache,
+                    jnp.asarray(idx_mat), row_tenant,
+                    eval_idx, eval_row_tenant,
+                )
+                if want_pre:
+                    pre_loss = pre
+                if want_post:
+                    post_loss = post
+            elif resident:
                 stacked, opt_state, ls = epoch_fn(
                     self._shard_params[shard], stacked, opt_state, cache,
                     jnp.asarray(idx_mat), row_tenant,
@@ -875,19 +942,88 @@ class SessionRuntime:
                 )
             all_losses.append(ls)
 
+        if do_eval and not resident:
+            post_loss = ev_fn(
+                self._shard_params[shard], stacked,
+                engine.read(eval_idx), eval_row_tenant,
+            )
+
         # Deterministic from the plan — int(opt_state.step) would sync the
         # device and serialise the per-shard groups we just overlapped.
         step_after = step0 + steps_per_epoch * epochs
+
+        if self.control is None:
+            for g, (t, st) in enumerate(zip(group, states)):
+                st.adapters = jax.tree.map(lambda x: x[g], stacked)
+                st.opt_mu = _maybe_slice(opt_state.mu, g)
+                st.opt_nu = _maybe_slice(opt_state.nu, g)
+                st.step = step_after
+                st.epochs_done = epoch0 + epochs
+            self.pool.register_many(group, stacked)
+            for t in group:
+                self.pool.pin(t)  # in-flight session state: never LRU-evicted
+            return all_losses, "scan" if resident else "stream"
+
+        # -- gated write-back (control plane on) -----------------------------
+        # The gate needs the eval losses on host NOW, which synchronises this
+        # group before the next one dispatches — the (documented, opt-in)
+        # price of deciding a write-back on its measured outcome.
+        pre_np = None if pre_loss is None else np.asarray(pre_loss)
+        post_np = None if post_loss is None else np.asarray(post_loss)
+        decisions: dict[Any, str] = {}
+        meta: dict[Any, dict] = {}
+        for g, t in enumerate(group):
+            pre_g = None if pre_np is None else float(pre_np[g])
+            post_g = None if post_np is None else float(post_np[g])
+            if not self.pool.has(t):
+                # First-ever write-back: no served version to protect (and
+                # the pool would have no slot to keep serving from).
+                dec = "accept"
+            else:
+                dec = self.control.decide(t, pre_g, post_g)
+            decisions[t] = dec
+            meta[t] = {"step": step_after, "eval_loss": post_g}
+            self.control.record(t, dec, pre=pre_g, post=post_g, step=step_after)
+            self.counters[f"control/{dec}"] += 1
         for g, (t, st) in enumerate(zip(group, states)):
+            if decisions[t] == "reject":
+                # Training state frozen with the served version: the next
+                # adapt retrains the same plan from the same state.
+                continue
             st.adapters = jax.tree.map(lambda x: x[g], stacked)
             st.opt_mu = _maybe_slice(opt_state.mu, g)
             st.opt_nu = _maybe_slice(opt_state.nu, g)
             st.step = step_after
             st.epochs_done = epoch0 + epochs
-        self.pool.register_many(group, stacked)
+        self.pool.register_many(
+            group, stacked, gate=decisions.__getitem__, meta=meta,
+        )
         for t in group:
             self.pool.pin(t)  # in-flight session state: never LRU-evicted
         return all_losses, "scan" if resident else "stream"
+
+    # -- control plane -------------------------------------------------------
+
+    def rollback(self, tenant) -> dict:
+        """Serve-plane rollback: restore the tenant's previous adapter
+        version into its pool slot — bitwise, from the slot's archived
+        storage-layout payload — and bump the pool version so every serve
+        slot-index memo (the runtime's ``_idx_cache``, the scheduler's
+        refresh key) invalidates. Training state is NOT rewound: quantised
+        pools are lossy, so the archived payload cannot reconstruct float
+        training state — a rolled-back tenant keeps its optimizer
+        trajectory and simply *serves* the older version until a future
+        gated adapt produces an acceptable one. Requires a pool built with
+        version history (a session with a ``ControlConfig``)."""
+        meta = self.pool.rollback(tenant)
+        if self.control is not None:
+            self.control.record_rollback(tenant)
+        self.counters["control/rollbacks"] += 1
+        return meta
+
+    def control_metrics(self) -> Optional[dict]:
+        """The control plane's JSON-able ledger (None when disabled)."""
+        return None if self.control is None else self.control.metrics()
 
     # -- introspection -------------------------------------------------------
 
@@ -975,8 +1111,16 @@ class SessionRuntime:
             "layout": {"seq": self.seq, "rank": self.sl.rank,
                        "mode": self.sl.mode,
                        "samples_per_tenant": self.samples_per_tenant,
-                       "n_shards": self.n_shards},
+                       "n_shards": self.n_shards,
+                       # Restore-compatibility keys: a restore into a
+                       # differently-configured session must fail loudly,
+                       # not silently reinterpret packed pool bytes.
+                       "pool_compress": self.pool.compress,
+                       "pool_slots": self.pool.shards[0].n_slots,
+                       "max_tenants": self.max_tenants},
         }
+        if self.control is not None:
+            meta["control"] = self.control.state()
         return arrays, meta
 
     def load_session_state(self, arrays: dict, meta: dict) -> None:
@@ -995,6 +1139,28 @@ class SessionRuntime:
         if saved != (self.seq, self.sl.rank, self.sl.mode,
                      self.samples_per_tenant, self.n_shards):
             raise ValueError(f"session layout {lay} != runtime configuration")
+        # Pool layout must match EXACTLY: an int4/nf4 checkpoint restored
+        # into an int8 (or float) pool would silently reinterpret packed
+        # payload bytes; a different slot count scrambles slot indices.
+        # (Keys absent from pre-control checkpoints are not checked.)
+        for k, mine in (
+            ("pool_compress", self.pool.compress),
+            ("pool_slots", self.pool.shards[0].n_slots),
+            ("max_tenants", self.max_tenants),
+        ):
+            if k in lay and lay[k] != mine:
+                raise ValueError(
+                    f"checkpoint {k}={lay[k]!r} != this runtime's {mine!r}: "
+                    "restore requires an identically-configured session"
+                )
+        if "control" in meta:
+            if self.control is None:
+                raise ValueError(
+                    "checkpoint carries control-plane state (gate ledger, "
+                    "quarantine set) but this runtime was built without a "
+                    "ControlConfig — restoring would silently drop it"
+                )
+            self.control.load_state(meta["control"])
         for ent in meta["tenants"]:
             st = TenantState(
                 partition=int(ent["partition"]),

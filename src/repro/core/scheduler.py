@@ -90,8 +90,16 @@ class Request:
     finished_at: Optional[float] = None
     tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    #: Terminal failure: the dispatch this request was admitted into raised.
+    #: The request is ``done`` (it will never produce tokens) and ``result``
+    #: re-raises the stored error.
+    error: Optional[BaseException] = None
 
     def result(self) -> np.ndarray:
+        if self.error is not None:
+            raise RuntimeError(
+                f"request {self.rid} failed in dispatch"
+            ) from self.error
         if not self.done:
             raise RuntimeError(f"request {self.rid} still in flight")
         return np.asarray(self.tokens[: self.max_new], np.int32)
@@ -446,11 +454,15 @@ class RequestScheduler:
                 self.rt.cfg, self.rt.use_kernel, self.chunk, self.max_seq,
                 a, p, getattr(self.rt, "decode_fuse", False),
             )
-            lb.caches, lb.tok, lb.pos, toks, tok0 = fn(
-                params, pools, jnp.asarray(lb.idx), new_tokens, new_lens,
-                new_idx, new_rows, lb.caches, lb.tok, lb.pos, lb.active,
-                lb.temps, key,
-            )
+            try:
+                lb.caches, lb.tok, lb.pos, toks, tok0 = fn(
+                    params, pools, jnp.asarray(lb.idx), new_tokens, new_lens,
+                    new_idx, new_rows, lb.caches, lb.tok, lb.pos, lb.active,
+                    lb.temps, key,
+                )
+            except Exception as err:
+                self._abort_admits(lb, admits, rows, err)
+                raise
             self.counters["dispatch/admit"] += 1
             return shard, list(zip(admits, rows)), (toks, tok0)
         fn = _sched_step_fn(
@@ -463,6 +475,27 @@ class RequestScheduler:
         )
         self.counters["dispatch/step"] += 1
         return shard, [], (toks, None)
+
+    def _abort_admits(self, lb: _LiveBatch, admits, rows, err) -> None:
+        """Unwind a failed dispatch's admissions: the rows just claimed go
+        back to the free list and each admitted tenant's in-flight count
+        comes back down — otherwise one raising dispatch permanently leaks
+        batch rows AND pins the tenant at its cap (every later admission of
+        that tenant would be skipped forever). The requests are terminally
+        failed (``error`` set; ``result()`` re-raises), not re-queued: the
+        caller sees the raise and owns the retry policy."""
+        now = time.perf_counter()
+        for req, row in zip(admits, rows):
+            lb.rows[row] = None
+            lb.active[row] = False
+            self._in_flight[req.tenant] -= 1
+            if self._in_flight[req.tenant] <= 0:
+                del self._in_flight[req.tenant]
+            req.done = True
+            req.error = err
+            req.finished_at = now
+            self.counters["failed"] += 1
+        lb.idx_version = None  # occupancy changed again: re-resolve slots
 
     def _harvest(self, shard: int, admitted, out) -> None:
         lb = self._batch(shard)

@@ -62,7 +62,24 @@ def _parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--rank", type=int, default=8)
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--mode", default="full", choices=["full", "int8"])
-    ap.add_argument("--pool-compress", choices=["int8"], default=None)
+    ap.add_argument("--pool-compress", choices=["int8", "int4", "nf4"],
+                    default=None)
+    ap.add_argument("--control", action="store_true",
+                    help="enable the adapter control plane (DESIGN.md §13): "
+                         "per-tenant shadow eval inside adapt, regression "
+                         "gate on write-back, versioned slots with rollback")
+    ap.add_argument("--control-threshold", type=float, default=0.0,
+                    help="max tolerated held-out regression (post - pre) "
+                         "before the gate fires")
+    ap.add_argument("--control-mode", default="reject",
+                    choices=["reject", "quarantine"],
+                    help="what a gated write-back does to training state")
+    ap.add_argument("--holdout-every", type=int, default=4,
+                    help="every N-th ingested row per tenant is held out "
+                         "for shadow eval")
+    ap.add_argument("--history-depth", type=int, default=2,
+                    help="previous adapter versions kept per tenant for "
+                         "rollback")
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--hbm-mb", type=float, default=0.0,
                     help="cache HBM budget in MiB; 0 = fully device-resident")
@@ -116,6 +133,7 @@ def main(argv=None) -> dict:
 
     from repro.configs import get_config, reduce_config
     from repro.core import lm_skiplora as SL
+    from repro.core.control_plane import ControlConfig
     from repro.core.runtime import SessionRuntime
     from repro.models.lm import init_lm
     from repro.runtime.fault import SessionSupervisor, elastic_session_mesh
@@ -140,6 +158,15 @@ def main(argv=None) -> dict:
                            cache_dtype="float32",
                            use_fused_kernel=args.use_kernel)
     params = init_lm(jax.random.key(0), cfg)
+    control_cfg = (
+        ControlConfig(
+            holdout_every=args.holdout_every,
+            threshold=args.control_threshold,
+            mode=args.control_mode,
+            history_depth=args.history_depth,
+        )
+        if args.control else None
+    )
     names = [f"tenant-{t}" for t in range(args.tenants)]
     prompts = jax.random.randint(
         jax.random.key(1), (args.tenants + 1, args.prompt_len), 0, cfg.vocab_size
@@ -156,7 +183,7 @@ def main(argv=None) -> dict:
             seq=args.seq, lr=args.lr, use_kernel=args.use_kernel,
             pool_compress=args.pool_compress,
             hbm_budget_bytes=(int(args.hbm_mb * 2**20) if args.hbm_mb > 0 else None),
-            mesh=mesh, placement_shards=n_shards,
+            mesh=mesh, placement_shards=n_shards, control=control_cfg,
         )
 
     # ---- the event stream: one closure per serve / ingest / adapt ---------
@@ -252,7 +279,7 @@ def main(argv=None) -> dict:
                 hbm_budget_bytes=(
                     int(args.hbm_mb * 2**20) if args.hbm_mb > 0 else None
                 ),
-                mesh=mesh, placement_shards=n_shards,
+                mesh=mesh, placement_shards=n_shards, control=control_cfg,
             )
 
         raw_events = list(events)
@@ -290,6 +317,14 @@ def main(argv=None) -> dict:
         "session/shards": float(n_shards),
         **stats,
     }
+    cm = rt.control_metrics()
+    if cm is not None:
+        # Scalar gate counters flatten next to the runtime counters; the
+        # full per-tenant ledger (eval deltas, decisions) nests under
+        # "control" in the JSON dump.
+        for k in ("accepted", "rejected", "quarantined", "rollbacks"):
+            metrics[f"control/{k}"] = float(cm[k])
+        metrics["control"] = cm
     print(f"\nsession: {args.tenants} tenants x {args.rounds} rounds on "
           f"{args.devices} device(s) / {n_shards} shard(s) in "
           f"{session_s:.2f}s ({metrics['session/tenants_per_s']:.2f} "

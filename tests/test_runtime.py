@@ -348,6 +348,77 @@ class TestCheckpoint:
             np.asarray(rt_new.serve(["u0", "u1"], prompts, max_new=3)),
         )
 
+    @pytest.mark.parametrize("compress", ["int4", "nf4"])
+    @pytest.mark.parametrize("shards", [1, 2])
+    def test_quantized_pool_roundtrip_bitwise(self, cfg, params, tmp_path,
+                                              compress, shards):
+        """Quantised pool state is bytes, not values: packed nibbles,
+        rowwise scales, and the 16-entry codebook must survive save ->
+        restore bit-for-bit (a value-level round-trip would silently
+        requantise), single-shard and logically sharded alike — and the
+        restored session serves the identical token streams."""
+        from repro.checkpoint.checkpoint import (
+            restore_runtime_session,
+            save_runtime_session,
+        )
+
+        kw = {"pool_compress": compress}
+        if shards > 1:
+            kw["placement_shards"] = shards
+        tokens, labels = make_data(cfg, 2, 4, 8)
+        prompts = jax.random.randint(jax.random.key(9), (2, 6), 0, cfg.vocab_size)
+
+        rt = make_runtime(cfg, params, **kw)
+        for t in range(2):
+            rt.ingest(f"u{t}", tokens[t], labels[t])
+        rt.adapt(epochs=1, batch_per_tenant=2, key=jax.random.key(3))
+        served = np.asarray(rt.serve(["u0", "u1"], prompts, max_new=3))
+        path = save_runtime_session(str(tmp_path), 1, rt)
+
+        rt_new = make_runtime(cfg, params, **kw)
+        restore_runtime_session(path, rt_new)
+        for t in ("u0", "u1"):
+            old = rt.pool.shards[rt.pool.shard_of(t)].slot_payload(t)
+            new = rt_new.pool.shards[rt_new.pool.shard_of(t)].slot_payload(t)
+            assert set(old) == set(new) == {"qa4", "sa", "qb4", "sb"}
+            for n in old:
+                a, b = np.asarray(old[n]), np.asarray(new[n])
+                assert a.dtype == b.dtype
+                np.testing.assert_array_equal(a, b)
+        for s in range(shards):
+            np.testing.assert_array_equal(
+                np.asarray(rt.pool.shards[s].pools()["code"]),
+                np.asarray(rt_new.pool.shards[s].pools()["code"]),
+            )
+        np.testing.assert_array_equal(
+            served, np.asarray(rt_new.serve(["u0", "u1"], prompts, max_new=3))
+        )
+
+    def test_restore_rejects_mismatched_pool_configuration(
+        self, cfg, params, tmp_path
+    ):
+        """The manifest records the pool compress kind, slot count, and
+        tenant capacity; a restore into a differently-built session must
+        fail loudly — an int4 checkpoint loaded into an int8 or float pool
+        would silently reinterpret packed payload bytes."""
+        from repro.checkpoint.checkpoint import (
+            restore_runtime_session,
+            save_runtime_session,
+        )
+
+        rt = make_runtime(cfg, params, pool_compress="int4")
+        tokens, labels = make_data(cfg, 1, 4, 8)
+        rt.ingest("u0", tokens[0], labels[0])
+        rt.adapt(epochs=1, batch_per_tenant=2, key=jax.random.key(3))
+        path = save_runtime_session(str(tmp_path), 0, rt)
+        for bad in (
+            {"pool_compress": "int8"},   # different packed byte layout
+            {"pool_compress": None},     # float pool
+            {"pool_compress": "int4", "n_t": 3},   # slot count / capacity
+        ):
+            with pytest.raises(ValueError, match="identically-configured"):
+                restore_runtime_session(path, make_runtime(cfg, params, **bad))
+
     def test_restore_requires_fresh_runtime(self, cfg, params, tmp_path):
         from repro.checkpoint.checkpoint import (
             restore_runtime_session,

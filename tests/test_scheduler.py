@@ -226,6 +226,56 @@ class TestSchedulerLoop:
         assert all(r.done for r in reqs)
         assert sched.counters["tokens"] == 40
 
+    def test_failed_dispatch_unwinds_admissions(self, cfg, params, monkeypatch):
+        """A dispatch that raises (device OOM, kernel failure) must not leak
+        its admissions: the claimed rows return to the free list, the
+        tenant's in-flight count comes back down, the requests are
+        terminally failed (``result()`` re-raises), and the scheduler keeps
+        serving — the same tenant's NEXT request completes solo-bitwise."""
+        import repro.core.scheduler as sched_mod
+
+        rt = adapted_runtime(cfg, params)
+        sched = RequestScheduler(
+            rt, max_batch=2, max_prompt=4, max_new_cap=3, admit_bucket=2,
+            inflight_per_tenant=2, chunk=2,
+        )
+        real = sched_mod._sched_admit_fn
+        armed = {"on": True}
+
+        def flaky(*a, **kw):
+            if armed["on"]:
+                armed["on"] = False
+
+                def boom(*args, **kwargs):
+                    raise RuntimeError("injected device failure")
+
+                return boom
+            return real(*a, **kw)
+
+        monkeypatch.setattr(sched_mod, "_sched_admit_fn", flaky)
+        prompts = np.asarray(jax.random.randint(
+            jax.random.key(12), (3, 4), 0, cfg.vocab_size
+        ))
+        bad0 = sched.submit("u0", prompts[0], max_new=3)
+        bad1 = sched.submit("u1", prompts[1], max_new=3)
+        with pytest.raises(RuntimeError, match="injected device failure"):
+            sched.step()
+        for bad in (bad0, bad1):
+            assert bad.done and bad.error is not None
+            with pytest.raises(RuntimeError, match="failed in dispatch"):
+                bad.result()
+        assert not sched._in_flight            # counts unwound, not pinned
+        assert not sched._pending              # failed, not re-queued
+        assert sched.counters["failed"] == 2
+        lb = sched._batches[sched._shard_of("u0")]
+        assert len(lb.free_rows()) == sched.max_batch   # rows recycled
+
+        ok = sched.submit("u0", prompts[2], max_new=3)  # same tenant reuses
+        sched.drain()                                   # the freed capacity
+        solo = rt.serve(["u0"], jnp.asarray(prompts[2:3]), max_new=3)
+        np.testing.assert_array_equal(ok.result(), np.asarray(solo)[0])
+        assert sched.counters["completed"] == 1
+
     def test_ingest_runs_at_step_boundaries(self, cfg, params):
         """enqueue_ingest work executes between decode dispatches and
         lands in the tenant's cache partition exactly like direct ingest."""

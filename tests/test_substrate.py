@@ -180,11 +180,29 @@ class TestCheckpoint:
     def test_crash_leaves_no_corrupt_latest(self, tmp_path):
         mgr = CheckpointManager(str(tmp_path), keep=3)
         mgr.save(1, {"x": jnp.ones(())})
-        # Simulate a crashed write: stale tmp dir.
-        os.makedirs(tmp_path / "ckpt_00000002.tmp")
+        # Simulate a crashed write: a tmp dir older than the grace window.
+        stale = tmp_path / "ckpt_00000002.tmp"
+        os.makedirs(stale)
+        old = os.path.getmtime(stale) - mgr.tmp_grace_s - 1
+        os.utime(stale, (old, old))
         assert latest_checkpoint(str(tmp_path)).endswith("ckpt_00000001")
-        mgr.save(3, {"x": jnp.ones(())})  # gc removes the tmp
-        assert not (tmp_path / "ckpt_00000002.tmp").exists()
+        mgr.save(3, {"x": jnp.ones(())})  # gc removes the stale tmp
+        assert not stale.exists()
+
+    def test_gc_spares_in_flight_tmp_within_grace(self, tmp_path):
+        """A *fresh* tmp dir is an atomic write racing this process — gc
+        reaping it would corrupt the concurrent save between its array
+        writes and the rename (the old gc deleted every tmp it saw)."""
+        mgr = CheckpointManager(str(tmp_path), keep=1)
+        live = tmp_path / "ckpt_00000009.tmp"
+        os.makedirs(live)
+        mgr.save(1, {"x": jnp.ones(())})
+        assert live.exists()
+        # Once it ages past the window the same dir is crash debris.
+        old = os.path.getmtime(live) - mgr.tmp_grace_s - 1
+        os.utime(live, (old, old))
+        mgr.save(2, {"x": jnp.ones(())})
+        assert not live.exists()
 
 
 class TestFaultTolerance:
