@@ -114,8 +114,51 @@ def replay(rt, trace: list[dict], *, mode: str, max_batch: int,
         "latency_p99_s": float(np.percentile(lat, 99)),
         "dispatches": int(sched.counters["dispatch/admit"]
                           + sched.counters["dispatch/step"]),
+        "quality": sched.quality_metrics(),
         "tokens": [r.result().tolist() for r in reqs],
     }
+
+
+def quality_section(*, n_samples: int = 4, seq: int = 8, rounds: int = 3) -> dict:
+    """Gate events on the serving surface: a control plane set up so every
+    write-back regresses past the threshold — each adapt round is rejected,
+    the rejection streak trips the automatic rollback, and the scheduler's
+    ``quality_metrics()`` view carries the whole ledger (decisions, rollback
+    counters, quarantine set) into the SLO payload next to latency."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduce_config
+    from repro.core import lm_skiplora as SL
+    from repro.core.control_plane import ControlConfig
+    from repro.core.runtime import SessionRuntime
+    from repro.models.lm import init_lm
+
+    cfg = reduce_config(get_config("stablelm-1.6b"))
+    params = init_lm(jax.random.key(0), cfg)
+    rt = SessionRuntime(
+        cfg, SL.SkipLoRAConfig(rank=4), params, max_tenants=2,
+        samples_per_tenant=rounds * n_samples, seq=seq,
+        control=ControlConfig(holdout_every=2, threshold=-1.0, mode="reject",
+                              auto_rollback_after=2),
+    )
+    rng = np.random.default_rng(5)
+    names = ["qa", "qb"]
+    for _ in range(rounds):
+        for t in names:
+            rt.ingest(
+                t,
+                jnp.asarray(rng.integers(0, cfg.vocab_size, (n_samples, seq))),
+                jnp.asarray(rng.integers(0, cfg.vocab_size, (n_samples, seq))),
+            )
+        rt.adapt(names, epochs=1, key=jax.random.key(6))
+    sched = rt.attach_scheduler(max_batch=2, max_prompt=seq, max_new_cap=8)
+    prompts = rng.integers(0, cfg.vocab_size, (2, seq), dtype=np.int32)
+    reqs = [rt.enqueue_serve(t, prompts[i], max_new=4)
+            for i, t in enumerate([None, names[0]])]
+    rt.drain()
+    for r in reqs:
+        r.result()
+    return sched.quality_metrics()
 
 
 def serving_slo(*, quick: bool = False, requests: int = 24, lam: float = 200.0,
@@ -157,7 +200,12 @@ def serving_slo(*, quick: bool = False, requests: int = 24, lam: float = 200.0,
         cont["tokens"][i] == seq["tokens"][i] for i in temp0
     )
     speedup = cont["tok_per_s"] / seq["tok_per_s"]
+    # Three rounds minimum even for --quick: the first write-back per tenant
+    # always accepts (nothing to protect), so the 2-rejection streak that
+    # trips the automatic rollback needs rounds 2 and 3.
+    quality = quality_section(rounds=3)
     payload = {
+        "quality_events": quality,
         "requests": requests,
         "poisson_rate_per_s": lam,
         "max_batch": max_batch,
@@ -180,6 +228,8 @@ def serving_slo(*, quick: bool = False, requests: int = 24, lam: float = 200.0,
         ("serving/sequential_latency_p99_s", seq["latency_p99_s"]),
         ("serving/temp0_bitwise_match", 1.0 if bitwise else 0.0),
         ("serving/decode_retraces_after_warmup", float(retraces)),
+        ("serving/gate_rejected", float(quality["gate"]["rejected"])),
+        ("serving/gate_auto_rollbacks", float(quality["gate"]["auto_rollbacks"])),
     ]
     return rows, payload
 
@@ -217,6 +267,12 @@ def main() -> None:
         raise SystemExit(
             f"{payload['decode_retraces_after_warmup']} decode retraces "
             "across the trace's temperatures"
+        )
+    q = payload["quality_events"]["gate"]
+    if q["rejected"] == 0 or q["auto_rollbacks"] == 0:
+        raise SystemExit(
+            "quality section produced no gate events "
+            f"(rejected={q['rejected']}, auto_rollbacks={q['auto_rollbacks']})"
         )
 
 

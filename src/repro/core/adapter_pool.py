@@ -918,7 +918,12 @@ def grouped_skip_sum(
         skip_lora_grouped_int8,
         skip_lora_grouped_q4,
     )
+    from repro.runtime.sharding import constrain
 
+    # Under a model-axis scope the stacked activations stay partitioned over
+    # L: each shard contracts only its resident blocks' skip terms and GSPMD
+    # stitches the (B, S, D) result with one reduce. No-op on 1-D meshes.
+    acts = constrain(acts, "layers", None, None, None)
     use_kernel = use_kernel and not fused
     if "qa4" in pools:
         return skip_lora_grouped_q4(

@@ -56,14 +56,25 @@ class ControlConfig:
         flags the tenant.
     history_depth: previous adapter versions kept per tenant for
         ``rollback`` (>= 1 so the gate always has a version to protect).
+    auto_rollback_after: N consecutive gated (non-accept) write-backs for
+        the same tenant trigger an automatic ``rollback(tenant)`` plus an
+        optimizer-state reset in the runtime — the served version is
+        presumed stale-bad, not merely one noisy epoch. ``None`` (default)
+        disables the policy; the manual ``rollback`` path is unaffected.
     """
 
     holdout_every: int = 4
     threshold: float = 0.0
     mode: str = "reject"
     history_depth: int = 2
+    auto_rollback_after: Optional[int] = None
 
     def __post_init__(self):
+        if self.auto_rollback_after is not None and self.auto_rollback_after < 1:
+            raise ValueError(
+                f"auto_rollback_after {self.auto_rollback_after} < 1 would "
+                "roll back unconditionally"
+            )
         if self.holdout_every < 2:
             raise ValueError(
                 f"holdout_every {self.holdout_every} < 2 leaves no train rows"
@@ -94,10 +105,14 @@ class ControlPlane:
         #: tenants currently quarantined (served from the pre-adapt
         #: version, flagged for re-adapt / operator attention).
         self._quarantined: set = set()
+        #: tenant -> consecutive non-accept gate decisions (the
+        #: auto-rollback trigger; reset by an accept or any rollback).
+        self._consec_gated: dict[Any, int] = {}
         self.accepted = 0
         self.rejected = 0
         self.quarantined = 0
         self.rollbacks = 0
+        self.auto_rollbacks = 0
 
     # -- decisions -----------------------------------------------------------
 
@@ -136,17 +151,31 @@ class ControlPlane:
         if decision == "accept":
             self.accepted += 1
             self._quarantined.discard(tenant)
+            self._consec_gated.pop(tenant, None)
         elif decision == "reject":
             self.rejected += 1
+            self._consec_gated[tenant] = self._consec_gated.get(tenant, 0) + 1
         elif decision == "quarantine":
             self.quarantined += 1
             self._quarantined.add(tenant)
+            self._consec_gated[tenant] = self._consec_gated.get(tenant, 0) + 1
         else:
             raise ValueError(f"unknown gate decision {decision!r}")
 
-    def record_rollback(self, tenant) -> None:
+    def should_auto_rollback(self, tenant) -> bool:
+        """True when the auto-rollback policy fires for this tenant: the
+        config enables it and the tenant's consecutive non-accept streak
+        reached ``auto_rollback_after``. The runtime consults this right
+        after ``record``; the streak resets on accept or on any rollback."""
+        after = self.config.auto_rollback_after
+        return after is not None and self._consec_gated.get(tenant, 0) >= after
+
+    def record_rollback(self, tenant, *, auto: bool = False) -> None:
         self.rollbacks += 1
+        if auto:
+            self.auto_rollbacks += 1
         self._quarantined.discard(tenant)
+        self._consec_gated.pop(tenant, None)
         self._last.pop(tenant, None)
 
     # -- introspection -------------------------------------------------------
@@ -169,11 +198,13 @@ class ControlPlane:
                 "threshold": self.config.threshold,
                 "mode": self.config.mode,
                 "history_depth": self.config.history_depth,
+                "auto_rollback_after": self.config.auto_rollback_after,
             },
             "accepted": self.accepted,
             "rejected": self.rejected,
             "quarantined": self.quarantined,
             "rollbacks": self.rollbacks,
+            "auto_rollbacks": self.auto_rollbacks,
             "quarantined_tenants": self.quarantined_tenants(),
             "tenants": [[t, dict(rec)] for t, rec in self._last.items()],
         }
@@ -186,14 +217,22 @@ class ControlPlane:
         return {
             "last": [[t, dict(rec)] for t, rec in self._last.items()],
             "quarantined": list(self._quarantined),
+            "gated_streaks": [[t, n] for t, n in self._consec_gated.items()],
             "counters": [
                 self.accepted, self.rejected, self.quarantined, self.rollbacks,
+                self.auto_rollbacks,
             ],
         }
 
     def load_state(self, state: dict) -> None:
         self._last = {t: dict(rec) for t, rec in state.get("last", [])}
         self._quarantined = set(state.get("quarantined", ()))
-        acc, rej, quar, rb = state.get("counters", (0, 0, 0, 0))
+        self._consec_gated = {
+            t: int(n) for t, n in state.get("gated_streaks", [])
+        }
+        # Pre-auto-rollback manifests stored 4 counters; pad the 5th.
+        counters = list(state.get("counters", ())) + [0] * 5
+        acc, rej, quar, rb, arb = counters[:5]
         self.accepted, self.rejected = int(acc), int(rej)
         self.quarantined, self.rollbacks = int(quar), int(rb)
+        self.auto_rollbacks = int(arb)

@@ -58,6 +58,7 @@ from repro.kernels.skip_lora.ops import (
 from repro.models.config import ModelConfig
 from repro.models.lm import lm_forward, lm_loss_rows, model_dtype
 from repro.optim.optimizers import adamw, apply_updates
+from repro.runtime.sharding import constrain
 
 Params = Any
 
@@ -147,6 +148,10 @@ def blocked_skip_sum(
     a_pool: (N, L, D, R); b_pool: (N, L, R, D) -> (B, S, D).
     """
     acts = jax.lax.stop_gradient(acts)
+    # Model-axis sessions keep the cached activations partitioned over L so
+    # each shard sums its resident blocks' terms; the tenant-major einsum
+    # below then needs exactly one cross-shard reduce for the (tmd) output.
+    acts = constrain(acts, "layers", None, None, None)
     l, b, s, d = acts.shape
     at = acts.reshape(l, n_tenants, (b // n_tenants) * s, d)
     z = jnp.einsum("ltmd,tldr->tlmr", at, a_pool.astype(acts.dtype))

@@ -79,16 +79,22 @@ from repro.core.cache_engine import CacheStats, TieredCacheEngine
 from repro.core.control_plane import ControlConfig, ControlPlane
 from repro.models.config import ModelConfig
 from repro.runtime.sharding import (
+    ShardScope,
     make_mesh,
     replicate_backbone,
+    scope_ctx,
     session_devices,
+    session_mesh_layout,
     session_param_specs,
+    shard_backbone,
+    shard_submesh,
     specs_all_replicated,
 )
 from repro.models.lm import (
     decode_scan,
     ingest_prefill,
     init_serve_caches,
+    pipeline_stage_params,
     sample_token,
     serve_decode,
     serve_prefill,
@@ -136,39 +142,55 @@ def _cached_fn(name: str, cfg, make, extras: tuple = ()):
     return compiled((name, cfg, *extras), make)
 
 
-def _prefill_fn(cfg):
+# Every compiled-fn factory takes an optional ``scope`` (a hashable
+# ``ShardScope`` or None): the fn body runs under ``scope_ctx(scope)`` so the
+# model's ``constrain`` calls see the scope AT TRACE TIME — whenever jit
+# retraces (new shapes, new statics), not just on the first call — and the
+# scope rides the cache key so a 2-D session and a 1-device session never
+# share a trace. ``scope=None`` traces with no constraints: bitwise the
+# historical single/data-axis programs.
+
+
+def _prefill_fn(cfg, scope=None):
     def make():
         def f(params, tokens, caches, adapters):
-            return serve_prefill(params, cfg, tokens, caches, adapters=adapters)
+            with scope_ctx(scope):
+                return serve_prefill(
+                    params, cfg, tokens, caches, adapters=adapters
+                )
 
         return jax.jit(f)
 
-    return _cached_fn("prefill", cfg, make)
+    return _cached_fn("prefill", cfg, make, (scope,))
 
 
-def _prefill_grouped_fn(cfg, use_kernel: bool):
+def _prefill_grouped_fn(cfg, use_kernel: bool, scope=None):
     def make():
         def f(params, tokens, caches, pools, idx):
-            return serve_prefill_grouped(
-                params, cfg, tokens, caches, pools, idx, use_kernel=use_kernel
-            )
+            with scope_ctx(scope):
+                return serve_prefill_grouped(
+                    params, cfg, tokens, caches, pools, idx,
+                    use_kernel=use_kernel,
+                )
 
         return jax.jit(f)
 
-    return _cached_fn("prefill_grouped", cfg, make, (use_kernel,))
+    return _cached_fn("prefill_grouped", cfg, make, (use_kernel, scope))
 
 
-def _decode_scan_fn(cfg, use_kernel: bool = True, fuse_skip: bool = False):
+def _decode_scan_fn(cfg, use_kernel: bool = True, fuse_skip: bool = False,
+                    scope=None):
     def make():
         def f(params, tok0, pos0, caches, key, adapters, pools, idx,
               max_new, temperature, unroll):
             _mark_trace("decode_scan")
-            return decode_scan(
-                params, cfg, tok0, pos0, caches, key,
-                max_new=max_new, temperature=temperature, adapters=adapters,
-                pools=pools, idx=idx, use_kernel=use_kernel,
-                fuse_skip=fuse_skip, unroll=unroll,
-            )
+            with scope_ctx(scope):
+                return decode_scan(
+                    params, cfg, tok0, pos0, caches, key,
+                    max_new=max_new, temperature=temperature,
+                    adapters=adapters, pools=pools, idx=idx,
+                    use_kernel=use_kernel, fuse_skip=fuse_skip, unroll=unroll,
+                )
 
         # Donate the KV caches: the scan's carry updates them in place
         # (off-CPU; the CPU backend has no donation and would only warn).
@@ -183,29 +205,33 @@ def _decode_scan_fn(cfg, use_kernel: bool = True, fuse_skip: bool = False):
             donate_argnums=donate_argnums(3),
         )
 
-    return _cached_fn("decode_scan", cfg, make, (use_kernel, fuse_skip))
+    return _cached_fn("decode_scan", cfg, make, (use_kernel, fuse_skip, scope))
 
 
-def _decode_step_fn(cfg):
+def _decode_step_fn(cfg, scope=None):
     def make():
         def f(params, tok, pos, caches, adapters):
-            return serve_decode(params, cfg, tok, pos, caches, adapters=adapters)
+            with scope_ctx(scope):
+                return serve_decode(
+                    params, cfg, tok, pos, caches, adapters=adapters
+                )
 
         return jax.jit(f)
 
-    return _cached_fn("decode_step", cfg, make)
+    return _cached_fn("decode_step", cfg, make, (scope,))
 
 
-def _ingest_fn(cfg, use_kernel: bool):
+def _ingest_fn(cfg, use_kernel: bool, scope=None):
     def make():
         def f(params, tokens, pools, idx):
-            return ingest_prefill(
-                params, cfg, tokens, pools, idx, use_kernel=use_kernel
-            )
+            with scope_ctx(scope):
+                return ingest_prefill(
+                    params, cfg, tokens, pools, idx, use_kernel=use_kernel
+                )
 
         return jax.jit(f)
 
-    return _cached_fn("ingest", cfg, make, (use_kernel,))
+    return _cached_fn("ingest", cfg, make, (use_kernel, scope))
 
 
 # ---------------------------------------------------------------------------
@@ -238,16 +264,22 @@ def generate(
     temperature: float = 0.0,
     rng: Optional[jax.Array] = None,
     unroll: int = 1,
+    scope=None,
 ):
     """Batched generation, scan-fused: 1 prefill dispatch + 1 decode-scan
-    dispatch for all ``max_new`` tokens. Returns (B, max_new) int32."""
+    dispatch for all ``max_new`` tokens. Returns (B, max_new) int32.
+    ``scope`` (a ``ShardScope``) traces the dispatches with that mesh's
+    activation constraints — required when ``params`` is model-axis
+    sharded."""
     b, s = tokens.shape
     caches = init_serve_caches(cfg, b, s + max_new)
-    logits, caches = _prefill_fn(cfg)(params, tokens, caches, adapters_stack)
+    logits, caches = _prefill_fn(cfg, scope)(
+        params, tokens, caches, adapters_stack
+    )
     tok0, key = sample_token(
         logits, rng if rng is not None else _default_rng(), temperature
     )
-    toks, _ = _decode_scan_fn(cfg)(
+    toks, _ = _decode_scan_fn(cfg, scope=scope)(
         params, tok0, jnp.asarray(s, jnp.int32), caches, key,
         adapters_stack, None, None, max_new,
         jnp.asarray(temperature, jnp.float32), unroll,
@@ -268,22 +300,24 @@ def generate_grouped(
     use_kernel: bool = True,
     fuse_skip: bool = False,
     unroll: int = 1,
+    scope=None,
 ):
     """Multi-tenant generation: batch row b decodes under adapter slot
     idx[b] gathered from the stacked pool (float, raw-int8, or packed-4-bit
     layout, see ``AdapterPool.pools()``). Same two-dispatch structure as
     ``generate``. ``fuse_skip`` inlines the decode skip term as dense math
     (one fused XLA step program instead of backbone + grouped kernel);
-    prefill keeps the grouped kernel either way."""
+    prefill keeps the grouped kernel either way. ``scope`` traces with a
+    model-axis mesh's activation constraints (sharded-backbone serving)."""
     b, s = tokens.shape
     caches = init_serve_caches(cfg, b, s + max_new)
-    logits, caches = _prefill_grouped_fn(cfg, use_kernel)(
+    logits, caches = _prefill_grouped_fn(cfg, use_kernel, scope)(
         params, tokens, caches, pools, idx
     )
     tok0, key = sample_token(
         logits, rng if rng is not None else _default_rng(), temperature
     )
-    toks, _ = _decode_scan_fn(cfg, use_kernel, fuse_skip)(
+    toks, _ = _decode_scan_fn(cfg, use_kernel, fuse_skip, scope)(
         params, tok0, jnp.asarray(s, jnp.int32), caches, key,
         None, pools, idx, max_new,
         jnp.asarray(temperature, jnp.float32), unroll,
@@ -368,6 +402,15 @@ class SessionRuntime:
     is derived from the ``runtime.sharding`` rule table
     (``session_param_specs``): all-replicated on a data-only mesh, realised
     as per-shard committed replicas.
+
+    On a 2-D ``(data, model)`` mesh each logical shard instead owns a
+    model-axis device *group* holding ONE Megatron-sharded backbone replica
+    (``shard_backbone`` over the shard's submesh): per-device backbone
+    bytes drop ~Mx and every serve/ingest/adapt dispatch traces under the
+    shard's ``ShardScope`` so activations carry the matching constraints.
+    ``pipeline_stages=N`` (N == model-axis size) additionally precomputes a
+    GPipe stage split of the backbone for the scheduler's pipelined
+    admission prefill (``models.lm.pipeline_sched_prefill``).
     """
 
     def __init__(
@@ -391,6 +434,7 @@ class SessionRuntime:
         seed: int = 0,
         mesh=None,
         placement_shards: Optional[int] = None,
+        pipeline_stages: int = 0,
         idx_memo_slots: int = 256,
         control: Optional[ControlConfig] = None,
     ):
@@ -425,9 +469,13 @@ class SessionRuntime:
             mesh = make_mesh((1,), ("data",), devices=jax.devices()[:1])
         self.mesh = mesh
         self.devices = session_devices(mesh)
+        n_groups = len(self.devices)
+        _, n_model, _ = session_mesh_layout(mesh)
+        self.model_parallel = n_model
+        self.pipeline_stages = int(pipeline_stages)
         self.n_shards = (
             int(placement_shards) if placement_shards is not None
-            else len(self.devices)
+            else n_groups
         )
         if self.n_shards < 1:
             raise ValueError(f"placement_shards {self.n_shards} < 1")
@@ -436,19 +484,85 @@ class SessionRuntime:
                 f"max_tenants {max_tenants} must divide over "
                 f"{self.n_shards} shards"
             )
-        self._shard_device = [
-            self.devices[s % len(self.devices)] for s in range(self.n_shards)
-        ]
-        # Backbone placement from the runtime.sharding rule table: on a
-        # session mesh every AxisRules-derived spec resolves to replication
-        # (session_devices above already rejected >1 non-data axes), which
-        # replicate_backbone realises as one committed replica per device.
-        assert specs_all_replicated(session_param_specs(params, mesh))
-        replicas = replicate_backbone(params, self.devices)
-        self._shard_params = [
-            replicas[s % len(self.devices)] for s in range(self.n_shards)
-        ]
+        if self.pipeline_stages:
+            if self.pipeline_stages != n_model or n_model < 2:
+                raise ValueError(
+                    f"pipeline_stages={self.pipeline_stages} must equal the "
+                    f"mesh's model-axis size ({n_model}, >= 2): the stages "
+                    "repurpose each shard's tensor-parallel device group"
+                )
+            if pool_compress is not None:
+                raise ValueError(
+                    "pipeline serve reads the adapter pool per stage and "
+                    "needs the float layout: pool_compress must be None"
+                )
+        if n_model > 1:
+            # 2-D (data x model) mesh: each logical shard's backbone is ONE
+            # Megatron-sharded replica over its model-axis device group (the
+            # ``data`` axis still shards tenants exactly as PR 5). The
+            # grouped Pallas kernels don't partition under GSPMD, so 2-D
+            # sessions take the dense skip-sum paths.
+            if use_kernel:
+                raise ValueError(
+                    "grouped Pallas kernels do not partition over a model "
+                    "axis; build (data, model) sessions with use_kernel=False"
+                )
+            submeshes = [
+                shard_submesh(mesh, s % n_groups) for s in range(self.n_shards)
+            ]
+            self._scope = [ShardScope(sm) for sm in submeshes]
+            # Per-shard "device" becomes a replicated NamedSharding over the
+            # shard's submesh: every existing device_put call site (pool,
+            # cache engine, adapt state) then commits its arrays onto the
+            # whole group, which is what lets them enter one jit alongside
+            # the model-sharded backbone.
+            self._shard_device = [
+                jax.sharding.NamedSharding(sm, jax.sharding.PartitionSpec())
+                for sm in submeshes
+            ]
+            self._shard_params = []
+            for s in range(self.n_shards):
+                self._shard_params.append(
+                    shard_backbone(params, submeshes[s]) if s < n_groups
+                    else self._shard_params[s % n_groups]
+                )
+        else:
+            self._scope = [None] * self.n_shards
+            self._shard_device = [
+                self.devices[s % n_groups] for s in range(self.n_shards)
+            ]
+            # Backbone placement from the runtime.sharding rule table: on a
+            # data-only session mesh every AxisRules-derived spec resolves to
+            # replication, which replicate_backbone realises as one committed
+            # replica per device.
+            assert specs_all_replicated(session_param_specs(params, mesh))
+            replicas = replicate_backbone(params, self.devices)
+            self._shard_params = [
+                replicas[s % n_groups] for s in range(self.n_shards)
+            ]
         self.params = self._shard_params[0]
+        # Pipeline partitioning of the same submesh devices: the backbone
+        # re-stacked into n_stages contiguous layer blocks, leading axis
+        # sharded over the (renamed-in-place) model axis so stage i's block
+        # lives wholly on device i of each shard's group.
+        self._stage_blocks: list = [None] * self.n_shards
+        self._stage_valid: list = [None] * self.n_shards
+        if self.pipeline_stages:
+            blocks, valid = pipeline_stage_params(
+                params, cfg, self.pipeline_stages
+            )
+            for s in range(self.n_shards):
+                if s < n_groups:
+                    stage_sh = jax.sharding.NamedSharding(
+                        submeshes[s], jax.sharding.PartitionSpec("model")
+                    )
+                    self._stage_blocks[s] = jax.tree.map(
+                        lambda x: jax.device_put(x, stage_sh), blocks
+                    )
+                    self._stage_valid[s] = jax.device_put(valid, stage_sh)
+                else:
+                    self._stage_blocks[s] = self._stage_blocks[s % n_groups]
+                    self._stage_valid[s] = self._stage_valid[s % n_groups]
 
         # -- per-shard engines, pools, partitions ---------------------------
         tenants_per_shard = max_tenants // self.n_shards
@@ -603,6 +717,7 @@ class SessionRuntime:
             toks = generate(
                 self.params, self.cfg, prompts, max_new=max_new,
                 temperature=temperature, rng=rng, unroll=unroll,
+                scope=self._scope[0],
             )
         else:
             variant = "int8" if self.pool.compress == "int8" else "float"
@@ -653,7 +768,7 @@ class SessionRuntime:
             self.pool.shard_pools(s), idx,
             max_new=max_new, temperature=temperature, rng=rng,
             use_kernel=self.use_kernel, fuse_skip=self.decode_fuse,
-            unroll=unroll,
+            unroll=unroll, scope=self._scope[s],
         )
 
     # -- request-level surface (continuous batching; core.scheduler) ---------
@@ -718,9 +833,9 @@ class SessionRuntime:
         s = self._shard_of_partition(st.partition)
         who = [tenant if self.pool.has(tenant) else None] * b
         idx = self.pool.lookup_local(s, who)
-        logits, acts, y_base = _ingest_fn(self.cfg, self.use_kernel)(
-            self._shard_params[s], tokens, self.pool.shard_pools(s), idx
-        )
+        logits, acts, y_base = _ingest_fn(
+            self.cfg, self.use_kernel, self._scope[s]
+        )(self._shard_params[s], tokens, self.pool.shard_pools(s), idx)
         values = SL._encode_acts(acts, None, self.sl)
         values["y_base"] = y_base
         values["labels"] = labels
@@ -846,7 +961,12 @@ class SessionRuntime:
         row_tenant = FF.fleet_row_tenant(n, bpt)
         partitions = [st.partition for st in states]
         local_parts = [p // self.n_shards for p in partitions]
-        fn_key = (self.cfg, self.sl, n, self.use_kernel, self._opt_key)
+        # The shard's scope rides the compiled-fn key AND wraps every
+        # dispatch below: the fleet-epoch jits trace lazily (first call, and
+        # every shape retrace), so the model-axis constrains must be in the
+        # ambient context whenever a trace can happen.
+        scope = self._scope[shard]
+        fn_key = (self.cfg, self.sl, n, self.use_kernel, self._opt_key, scope)
         resident = engine.capacity >= engine.num_samples
 
         if do_eval:
@@ -889,10 +1009,11 @@ class SessionRuntime:
         if do_eval and not resident:
             # Streaming path: eval rides separate (still backbone-free)
             # dispatches over the engine-read cached rows.
-            pre_loss = ev_fn(
-                self._shard_params[shard], stacked,
-                engine.read(eval_idx), eval_row_tenant,
-            )
+            with scope_ctx(scope):
+                pre_loss = ev_fn(
+                    self._shard_params[shard], stacked,
+                    engine.read(eval_idx), eval_row_tenant,
+                )
 
         all_losses = []
         steps_per_epoch = 0
@@ -921,32 +1042,36 @@ class SessionRuntime:
                         eval_pre=want_pre, eval_post=want_post, donate=False,
                     ),
                 )
-                stacked, opt_state, ls, pre, post = eval_epoch_fn(
-                    self._shard_params[shard], stacked, opt_state, cache,
-                    jnp.asarray(idx_mat), row_tenant,
-                    eval_idx, eval_row_tenant,
-                )
+                with scope_ctx(scope):
+                    stacked, opt_state, ls, pre, post = eval_epoch_fn(
+                        self._shard_params[shard], stacked, opt_state, cache,
+                        jnp.asarray(idx_mat), row_tenant,
+                        eval_idx, eval_row_tenant,
+                    )
                 if want_pre:
                     pre_loss = pre
                 if want_post:
                     post_loss = post
             elif resident:
-                stacked, opt_state, ls = epoch_fn(
-                    self._shard_params[shard], stacked, opt_state, cache,
-                    jnp.asarray(idx_mat), row_tenant,
-                )
+                with scope_ctx(scope):
+                    stacked, opt_state, ls = epoch_fn(
+                        self._shard_params[shard], stacked, opt_state, cache,
+                        jnp.asarray(idx_mat), row_tenant,
+                    )
             else:
-                stacked, opt_state, ls = FF.fleet_cached_epoch_via_engine(
-                    step_fn, self._shard_params[shard], stacked, opt_state,
-                    engine, idx_mat, row_tenant,
-                )
+                with scope_ctx(scope):
+                    stacked, opt_state, ls = FF.fleet_cached_epoch_via_engine(
+                        step_fn, self._shard_params[shard], stacked, opt_state,
+                        engine, idx_mat, row_tenant,
+                    )
             all_losses.append(ls)
 
         if do_eval and not resident:
-            post_loss = ev_fn(
-                self._shard_params[shard], stacked,
-                engine.read(eval_idx), eval_row_tenant,
-            )
+            with scope_ctx(scope):
+                post_loss = ev_fn(
+                    self._shard_params[shard], stacked,
+                    engine.read(eval_idx), eval_row_tenant,
+                )
 
         # Deterministic from the plan — int(opt_state.step) would sync the
         # device and serialise the per-shard groups we just overlapped.
@@ -1000,6 +1125,23 @@ class SessionRuntime:
         )
         for t in group:
             self.pool.pin(t)  # in-flight session state: never LRU-evicted
+        # Auto-rollback policy (ControlConfig.auto_rollback_after): a tenant
+        # whose last N gated write-backs all failed is presumed to be
+        # diverging, not noisy — restore its previous served version (when
+        # the slot has archived history; a first-version tenant has nothing
+        # older) and reset its optimizer trajectory so the next adapt
+        # restarts clean from the adapters it actually serves.
+        for g, (t, st) in enumerate(zip(group, states)):
+            if decisions[t] == "accept" or not self.control.should_auto_rollback(t):
+                continue
+            if self.pool.has(t) and self.pool.history_len(t) > 0:
+                self.pool.rollback(t)
+            st.opt_mu = _maybe_zeros(st.opt_mu)
+            st.opt_nu = _maybe_zeros(st.opt_nu)
+            st.step = 0
+            self.control.record_rollback(t, auto=True)
+            self.counters["control/rollbacks"] += 1
+            self.counters["control/auto_rollbacks"] += 1
         return all_losses, "scan" if resident else "stream"
 
     # -- control plane -------------------------------------------------------
@@ -1117,7 +1259,16 @@ class SessionRuntime:
                        # not silently reinterpret packed pool bytes.
                        "pool_compress": self.pool.compress,
                        "pool_slots": self.pool.shards[0].n_slots,
-                       "max_tenants": self.max_tenants},
+                       "max_tenants": self.max_tenants,
+                       # Informational (NOT restore-compared): the mesh a
+                       # session ran on is a placement detail — an elastic
+                       # restart restores the same logical layout onto any
+                       # (data, model) mesh with matching logical shards.
+                       "mesh_shape": [int(n) for n in np.shape(
+                           np.asarray(self.mesh.devices))],
+                       "mesh_axes": list(self.mesh.axis_names),
+                       "model_parallel": self.model_parallel,
+                       "pipeline_stages": self.pipeline_stages},
         }
         if self.control is not None:
             meta["control"] = self.control.state()
@@ -1224,3 +1375,9 @@ def _maybe_slice(tree: Optional[Params], i: int) -> Optional[Params]:
     if tree is None:
         return None
     return jax.tree.map(lambda x: x[i], tree)
+
+
+def _maybe_zeros(tree: Optional[Params]) -> Optional[Params]:
+    if tree is None:
+        return None
+    return jax.tree.map(jnp.zeros_like, tree)

@@ -66,7 +66,13 @@ import numpy as np
 from repro.core import batch_plan, donate_argnums
 from repro.core import runtime as RT
 from repro.models.blocks import ATTN_KINDS
-from repro.models.lm import decode_step, sample_token, sched_prefill
+from repro.models.lm import (
+    decode_step,
+    pipeline_sched_prefill,
+    sample_token,
+    sched_prefill,
+)
+from repro.runtime.sharding import scope_ctx
 
 Params = Any
 
@@ -160,54 +166,107 @@ def _chunk_scan(params, cfg, use_kernel, fuse, chunk, pools, idx, caches, tok,
 
 
 def _sched_step_fn(cfg, use_kernel: bool, chunk: int, max_seq: int,
-                   fuse: bool = False):
+                   fuse: bool = False, scope=None):
     def make():
         def f(params, pools, idx, caches, tok, pos, active, temps, key):
             RT._mark_trace("sched_step")
-            return _chunk_scan(
-                params, cfg, use_kernel, fuse, chunk, pools, idx, caches,
-                tok, pos, active, temps, key, max_seq,
-            )
+            with scope_ctx(scope):
+                return _chunk_scan(
+                    params, cfg, use_kernel, fuse, chunk, pools, idx, caches,
+                    tok, pos, active, temps, key, max_seq,
+                )
 
         return jax.jit(f, donate_argnums=donate_argnums(3))
 
     return RT.compiled(
-        ("sched_step", cfg, use_kernel, chunk, max_seq, fuse), make
+        ("sched_step", cfg, use_kernel, chunk, max_seq, fuse, scope), make
     )
 
 
 def _sched_admit_fn(cfg, use_kernel: bool, chunk: int, max_seq: int,
-                    bucket: int, prompt: int, fuse: bool = False):
+                    bucket: int, prompt: int, fuse: bool = False, scope=None):
     def make():
         def f(params, pools, idx, new_tokens, new_lens, new_idx, new_rows,
               caches, tok, pos, active, temps, key):
             RT._mark_trace("sched_admit")
-            akey, key = jax.random.split(key)
-            logits, new_caches = sched_prefill(
-                params, cfg, new_tokens, new_lens, pools, new_idx,
-                use_kernel=use_kernel,
-            )
-            b = tok.shape[0]
-            row_t = jnp.take(temps, jnp.clip(new_rows, 0, b - 1))
-            tok0, _ = sample_token(logits, akey, row_t)
-            tok = tok.at[new_rows].set(tok0, mode="drop")
-            pos = pos.at[new_rows].set(new_lens.astype(pos.dtype), mode="drop")
-            caches = jax.tree.map(
-                lambda live, new: live.at[..., new_rows, 0:prompt, :, :].set(
-                    new.astype(live.dtype), mode="drop"
-                ),
-                caches, new_caches,
-            )
-            caches, tok, pos, toks = _chunk_scan(
-                params, cfg, use_kernel, fuse, chunk, pools, idx, caches,
-                tok, pos, active, temps, key, max_seq,
-            )
-            return caches, tok, pos, toks, tok0
+            with scope_ctx(scope):
+                akey, key = jax.random.split(key)
+                logits, new_caches = sched_prefill(
+                    params, cfg, new_tokens, new_lens, pools, new_idx,
+                    use_kernel=use_kernel,
+                )
+                b = tok.shape[0]
+                row_t = jnp.take(temps, jnp.clip(new_rows, 0, b - 1))
+                tok0, _ = sample_token(logits, akey, row_t)
+                tok = tok.at[new_rows].set(tok0, mode="drop")
+                pos = pos.at[new_rows].set(
+                    new_lens.astype(pos.dtype), mode="drop"
+                )
+                caches = jax.tree.map(
+                    lambda live, new: live.at[
+                        ..., new_rows, 0:prompt, :, :
+                    ].set(new.astype(live.dtype), mode="drop"),
+                    caches, new_caches,
+                )
+                caches, tok, pos, toks = _chunk_scan(
+                    params, cfg, use_kernel, fuse, chunk, pools, idx, caches,
+                    tok, pos, active, temps, key, max_seq,
+                )
+                return caches, tok, pos, toks, tok0
 
         return jax.jit(f, donate_argnums=donate_argnums(7))
 
     return RT.compiled(
-        ("sched_admit", cfg, use_kernel, chunk, max_seq, bucket, prompt, fuse),
+        ("sched_admit", cfg, use_kernel, chunk, max_seq, bucket, prompt, fuse,
+         scope),
+        make,
+    )
+
+
+def _sched_admit_pipe_fn(cfg, use_kernel: bool, chunk: int, max_seq: int,
+                         bucket: int, prompt: int, fuse: bool, scope,
+                         n_micro: int):
+    """Pipelined admission: the prefill runs as ``n_micro`` GPipe
+    microbatches over the stage-split backbone (``pipeline_sched_prefill``,
+    stages = the shard's model-axis devices), then the identical
+    sample/scatter/chunk-scan tail as ``_sched_admit_fn``. The stage
+    params/valid mask are jit *arguments* (leading axis sharded over the
+    model axis), never trace constants."""
+
+    def make():
+        def f(params, stage_blocks, valid, pools, idx, new_tokens, new_lens,
+              new_idx, new_rows, caches, tok, pos, active, temps, key):
+            RT._mark_trace("sched_admit_pipe")
+            with scope_ctx(scope):
+                akey, key = jax.random.split(key)
+                logits, new_caches = pipeline_sched_prefill(
+                    params, cfg, stage_blocks, valid, new_tokens, new_lens,
+                    pools, new_idx, mesh=scope.mesh, n_micro=n_micro,
+                )
+                b = tok.shape[0]
+                row_t = jnp.take(temps, jnp.clip(new_rows, 0, b - 1))
+                tok0, _ = sample_token(logits, akey, row_t)
+                tok = tok.at[new_rows].set(tok0, mode="drop")
+                pos = pos.at[new_rows].set(
+                    new_lens.astype(pos.dtype), mode="drop"
+                )
+                caches = jax.tree.map(
+                    lambda live, new: live.at[
+                        ..., new_rows, 0:prompt, :, :
+                    ].set(new.astype(live.dtype), mode="drop"),
+                    caches, new_caches,
+                )
+                caches, tok, pos, toks = _chunk_scan(
+                    params, cfg, use_kernel, fuse, chunk, pools, idx, caches,
+                    tok, pos, active, temps, key, max_seq,
+                )
+                return caches, tok, pos, toks, tok0
+
+        return jax.jit(f, donate_argnums=donate_argnums(9))
+
+    return RT.compiled(
+        ("sched_admit_pipe", cfg, use_kernel, chunk, max_seq, bucket, prompt,
+         fuse, scope, n_micro),
         make,
     )
 
@@ -225,10 +284,22 @@ class _LiveBatch:
     def __init__(self, cfg, max_batch: int, max_seq: int, device):
         from repro.models.lm import init_serve_caches
 
-        with jax.default_device(device):
-            self.caches = init_serve_caches(cfg, max_batch, max_seq)
-            self.tok = jnp.zeros((max_batch, 1), jnp.int32)
-            self.pos = jnp.zeros((max_batch,), jnp.int32)
+        if isinstance(device, jax.sharding.Sharding):
+            # 2-D shard: the "device" is a replicated NamedSharding over the
+            # shard's model-axis group (jax.default_device only accepts a
+            # bare Device) — commit the fresh state onto the whole group.
+            self.caches = jax.device_put(
+                init_serve_caches(cfg, max_batch, max_seq), device
+            )
+            self.tok = jax.device_put(
+                jnp.zeros((max_batch, 1), jnp.int32), device
+            )
+            self.pos = jax.device_put(jnp.zeros((max_batch,), jnp.int32), device)
+        else:
+            with jax.default_device(device):
+                self.caches = init_serve_caches(cfg, max_batch, max_seq)
+                self.tok = jnp.zeros((max_batch, 1), jnp.int32)
+                self.pos = jnp.zeros((max_batch,), jnp.int32)
         self.rows: list[Optional[Request]] = [None] * max_batch
         self.active = np.zeros((max_batch,), bool)
         self.temps = np.zeros((max_batch,), np.float32)
@@ -264,6 +335,7 @@ class RequestScheduler:
         inflight_per_tenant: int = 2,
         chunk: int = 4,
         mode: str = "continuous",
+        microbatch: int = 0,
     ):
         if mode not in ("continuous", "sequential"):
             raise ValueError(f"unknown scheduler mode {mode!r}")
@@ -284,6 +356,27 @@ class RequestScheduler:
         self.inflight_per_tenant = inflight_per_tenant
         self.chunk = chunk
         self.mode = mode
+        # Pipelined admission (runtime built with pipeline_stages=N): the
+        # admission prefill runs as GPipe microbatches of ``microbatch``
+        # rows each, so the dispatch width pads up to n_micro * microbatch
+        # (_DROP_ROW rows, free). More microbatches per dispatch -> smaller
+        # bubble: predicted_bubble() = (P-1)/(n_micro+P-1).
+        stages = int(getattr(runtime, "pipeline_stages", 0) or 0)
+        self.pipeline = stages > 1
+        if self.pipeline:
+            mb = int(microbatch) if microbatch else 1
+            if mb < 1:
+                raise ValueError(f"microbatch {microbatch} < 1")
+            self.pipe_microbatch = mb
+            self.n_micro = -(-admit_bucket // mb)
+            self.admit_pad = self.n_micro * mb
+        elif microbatch:
+            raise ValueError(
+                "microbatch is a pipelined-admission knob; the runtime was "
+                "built without pipeline_stages"
+            )
+        else:
+            self.admit_pad = admit_bucket
         self.counters = Counter()
         self._pending: deque[Request] = deque()
         self._ingest_queue: deque[IngestRequest] = deque()
@@ -323,6 +416,44 @@ class RequestScheduler:
         return req
 
     # -- shard routing -------------------------------------------------------
+
+    def _scope_of(self, shard: int):
+        """The shard's ``ShardScope`` (None on 1-D sessions): rides every
+        dispatch's compiled-fn key and wraps its trace so model-axis
+        sessions bake the right activation constraints."""
+        scopes = getattr(self.rt, "_scope", None)
+        return None if scopes is None else scopes[shard]
+
+    def predicted_bubble(self) -> Optional[float]:
+        """GPipe bubble fraction the pipelined admission is scheduled at
+        (None without pipelining) — the serving bench's bar for 'pipeline
+        serve within the predicted bubble of the non-pipelined path'."""
+        if not self.pipeline:
+            return None
+        from repro.runtime.pipeline_par import bubble_fraction
+
+        return bubble_fraction(self.n_micro, self.rt.pipeline_stages)
+
+    def quality_metrics(self) -> dict:
+        """Control-plane gate events, shaped for the serving metrics
+        surface: SLO dashboards read quality events (gate decisions,
+        rollbacks, quarantines) next to latency. Empty gate section when
+        the runtime has no control plane."""
+        out: dict[str, Any] = {
+            k.split("/", 1)[1]: int(v)
+            for k, v in sorted(self.rt.counters.items())
+            if k.startswith("control/")
+        }
+        cm = getattr(self.rt, "control_metrics", lambda: None)()
+        if cm is not None:
+            out["gate"] = {
+                k: cm[k] for k in (
+                    "accepted", "rejected", "quarantined", "rollbacks",
+                    "auto_rollbacks",
+                )
+            }
+            out["quarantined_tenants"] = cm["quarantined_tenants"]
+        return out
 
     def _shard_of(self, tenant) -> int:
         """Serve placement: a tenant with a pool slot decodes on its slot's
@@ -439,8 +570,9 @@ class RequestScheduler:
             jax.random.fold_in(self._base_key, self._dispatches), shard
         )
         self._dispatches += 1
+        scope = self._scope_of(shard)
         if admits:
-            a, p = self.admit_bucket, self.max_prompt
+            a, p = self.admit_pad, self.max_prompt
             new_tokens = np.zeros((a, p), np.int32)
             new_lens = np.ones((a,), np.int32)
             new_rows = np.full((a,), _DROP_ROW, np.int32)
@@ -450,24 +582,40 @@ class RequestScheduler:
                 new_lens[j] = req.prompt.size
                 new_rows[j] = row
             new_idx = lb.idx[np.minimum(new_rows, self.max_batch - 1)]
-            fn = _sched_admit_fn(
-                self.rt.cfg, self.rt.use_kernel, self.chunk, self.max_seq,
-                a, p, getattr(self.rt, "decode_fuse", False),
-            )
-            try:
-                lb.caches, lb.tok, lb.pos, toks, tok0 = fn(
+            if self.pipeline:
+                fn = _sched_admit_pipe_fn(
+                    self.rt.cfg, self.rt.use_kernel, self.chunk, self.max_seq,
+                    a, p, getattr(self.rt, "decode_fuse", False), scope,
+                    self.n_micro,
+                )
+                args = (
+                    params, self.rt._stage_blocks[shard],
+                    self.rt._stage_valid[shard], pools, jnp.asarray(lb.idx),
+                    new_tokens, new_lens, new_idx, new_rows, lb.caches,
+                    lb.tok, lb.pos, lb.active, lb.temps, key,
+                )
+            else:
+                fn = _sched_admit_fn(
+                    self.rt.cfg, self.rt.use_kernel, self.chunk, self.max_seq,
+                    a, p, getattr(self.rt, "decode_fuse", False), scope,
+                )
+                args = (
                     params, pools, jnp.asarray(lb.idx), new_tokens, new_lens,
                     new_idx, new_rows, lb.caches, lb.tok, lb.pos, lb.active,
                     lb.temps, key,
                 )
+            try:
+                lb.caches, lb.tok, lb.pos, toks, tok0 = fn(*args)
             except Exception as err:
                 self._abort_admits(lb, admits, rows, err)
                 raise
-            self.counters["dispatch/admit"] += 1
+            self.counters[
+                "dispatch/admit_pipe" if self.pipeline else "dispatch/admit"
+            ] += 1
             return shard, list(zip(admits, rows)), (toks, tok0)
         fn = _sched_step_fn(
             self.rt.cfg, self.rt.use_kernel, self.chunk, self.max_seq,
-            getattr(self.rt, "decode_fuse", False),
+            getattr(self.rt, "decode_fuse", False), scope,
         )
         lb.caches, lb.tok, lb.pos, toks = fn(
             params, pools, jnp.asarray(lb.idx), lb.caches, lb.tok, lb.pos,

@@ -68,6 +68,7 @@ def lm_forward(
     dtype = model_dtype(cfg)
     h = embed(params["embed"], tokens, scale_by_sqrt_dim=cfg.scale_embed_by_sqrt_dim, dtype=dtype)
     h = splice_prefix(h, prefix_embeds)
+    h = constrain(h, "batch", "seq", None)
     out = stack_forward(
         params["stack"],
         h,
@@ -101,6 +102,8 @@ def readout(params: Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
     logits = unembed(table, hn)
     if cfg.final_softcap:
         logits = softcap(logits, cfg.final_softcap)
+    if logits.ndim == 3:
+        logits = constrain(logits, "logits_batch", None, "vocab")
     return logits
 
 
@@ -520,3 +523,132 @@ def sched_prefill(
         y_last = y_last + skip.astype(y_last.dtype)
     logits = readout(params, cfg, y_last)
     return logits, out["caches"]
+
+
+# ---------------------------------------------------------------------------
+# Pipelined admission prefill (pipeline_stages=N on SessionRuntime)
+# ---------------------------------------------------------------------------
+
+
+def _flat_layers(stack: Params, cfg: ModelConfig) -> list[Params]:
+    """Unstack the periods/remainder layout into a flat per-layer list in
+    execution order (layer l = p * period + pos; remainder at the tail)."""
+    layers = []
+    for p in range(cfg.n_periods):
+        for i in range(len(cfg.pattern)):
+            layers.append(
+                jax.tree.map(lambda x, p=p: x[p], stack["periods"][i])
+            )
+    layers.extend(stack["remainder"])
+    return layers
+
+
+def _caches_from_flat(flat: Params, cfg: ModelConfig) -> Params:
+    """Invert ``_flat_layers`` for caches: (L, B, S, ...) leaves back into
+    the periods/remainder layout ``init_serve_caches`` produces."""
+    n_per, period = cfg.n_periods, cfg.period
+    periods = [
+        jax.tree.map(lambda x, i=i: x[i : n_per * period : period], flat)
+        for i in range(period)
+    ]
+    remainder = [
+        jax.tree.map(lambda x, j=j: x[n_per * period + j], flat)
+        for j in range(len(cfg.remainder_pattern))
+    ]
+    return {"periods": periods, "remainder": remainder}
+
+
+def pipeline_stage_params(
+    params: Params, cfg: ModelConfig, n_stages: int
+) -> tuple[Params, jax.Array]:
+    """Split the backbone stack into pipeline stages for
+    ``pipeline_sched_prefill``. Returns ``(stage_blocks, valid)`` from
+    ``runtime.pipeline_par.split_stages`` (leaves (n_stages, Lp, ...));
+    the caller commits them P("model") over the shard's device group."""
+    from repro.runtime.pipeline_par import split_stages
+
+    kinds = set(cfg.layer_kinds())
+    if len(kinds) != 1 or not kinds <= set(B.ATTN_KINDS):
+        raise NotImplementedError(
+            f"pipeline serve needs a uniform attention-only stack; "
+            f"config has {sorted(kinds)}"
+        )
+    return split_stages(_flat_layers(params["stack"], cfg), n_stages)
+
+
+def pipeline_sched_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    stage_blocks: Params,          # from pipeline_stage_params, P("model")
+    valid: jax.Array,              # (n_stages, Lp) bool
+    tokens: jax.Array,             # (A, P) int32, right-padded per row
+    lens: jax.Array,               # (A,) int32
+    pools: dict[str, jax.Array],   # float AdapterPool layout {"A","B"}
+    idx: jax.Array,                # (A,) int32 slot per row
+    *,
+    mesh,
+    axis: str = "model",
+    n_micro: int,
+) -> tuple[jax.Array, Params]:
+    """``sched_prefill`` over GPipe stages: the model-axis device group runs
+    the backbone as ``n_stages`` pipeline stages over ``n_micro``
+    microbatches, each stage accumulating its resident layers' skip-LoRA
+    terms from block inputs (``runtime.pipeline_par.pipeline_prefill``).
+    Temp-0 tokens match ``sched_prefill`` (same ``max(len,1)-1`` padding
+    semantics); caches come back in the standard periods layout at (A, P)
+    so the scheduler's admission scatter is path-agnostic."""
+    from repro.runtime.pipeline_par import pipeline_prefill
+
+    a, p_len = tokens.shape
+    if a % n_micro:
+        raise ValueError(f"admission width {a} not divisible into {n_micro} microbatches")
+    mb = a // n_micro
+    n_stages = mesh.shape[axis]
+    dtype = model_dtype(cfg)
+    h = embed(
+        params["embed"], tokens,
+        scale_by_sqrt_dim=cfg.scale_embed_by_sqrt_dim, dtype=dtype,
+    )
+    x_micro = h.reshape(n_micro, mb, p_len, h.shape[-1])
+    lens_m = lens.reshape(n_micro, mb)
+    idx_m = idx.reshape(n_micro, mb)
+    lp = jax.tree.leaves(stage_blocks)[0].shape[1]
+    l_pad = n_stages * lp
+    if not (isinstance(pools.get("A"), jax.Array) or hasattr(pools.get("A"), "shape")):
+        raise NotImplementedError("pipeline serve needs a float adapter pool")
+
+    def stage_pool(w):
+        # (n_slots, L, ...) -> (n_stages, Lp, n_slots, ...); zero pad rows.
+        w = jnp.swapaxes(w, 0, 1)
+        w = jnp.pad(w, ((0, l_pad - w.shape[0]),) + ((0, 0),) * (w.ndim - 1))
+        return w.reshape((n_stages, lp) + w.shape[1:])
+
+    kind = cfg.layer_kinds()[0]
+
+    def block_fn(p_l, hh):
+        cache = B.init_block_cache(kind, mb, p_len, cfg, jnp.bfloat16)
+        h2, c_new, _ = B.block_forward(
+            kind, p_l, hh, cfg, mode="prefill", cache=cache
+        )
+        return h2, c_new
+
+    y, skip, stage_caches = pipeline_prefill(
+        stage_blocks, stage_pool(pools["A"]), stage_pool(pools["B"]), valid,
+        x_micro, lens_m, idx_m, block_fn, mesh=mesh, axis=axis,
+    )
+    y = y.reshape(a, p_len, -1)
+    skip = skip.reshape(a, -1)
+    last = (jnp.maximum(lens, 1) - 1).astype(jnp.int32)
+    y_last = jnp.take_along_axis(y, last[:, None, None], axis=1)  # (A, 1, D)
+    logits = readout(params, cfg, y_last + skip[:, None, :].astype(y_last.dtype))
+
+    n_layers = len(cfg.layer_kinds())
+
+    def unstage(c):
+        # (n_stages, Lp, n_micro, mb, ...) -> (L, A, ...): drop stage pads,
+        # merge the microbatch grid back into admission-row order.
+        c = c.reshape((l_pad,) + c.shape[2:])[:n_layers]
+        return c.reshape((n_layers, a) + c.shape[3:])
+
+    caches = _caches_from_flat(jax.tree.map(unstage, stage_caches), cfg)
+    return logits, caches

@@ -6,7 +6,11 @@ distribution layer:
 
   - sharding: ``AxisRules``, ``make_mesh``, ``session_devices``,
     ``session_param_specs``, ``replicate_backbone``, ``param_specs``,
-    ``sharding_scope``, ``constrain``
+    ``sharding_scope``, ``constrain``, and the 2-D session surface
+    (``session_mesh_layout``, ``shard_submesh``, ``shard_backbone``,
+    ``ShardScope``, ``scope_ctx``, ``per_device_bytes``)
+  - pipeline parallelism: ``split_stages``, ``pipeline_apply``,
+    ``pipeline_prefill``, ``bubble_fraction``
   - fault tolerance: ``Supervisor``, ``SessionSupervisor``,
     ``StragglerMonitor``, ``elastic_remesh``, ``elastic_session_mesh``,
     ``healthy_mesh_shape``
@@ -35,6 +39,18 @@ _EXPORTS = {
     "sharding_scope": "repro.runtime.sharding",
     "constrain": "repro.runtime.sharding",
     "named": "repro.runtime.sharding",
+    "session_mesh_layout": "repro.runtime.sharding",
+    "shard_submesh": "repro.runtime.sharding",
+    "shard_backbone": "repro.runtime.sharding",
+    "ShardScope": "repro.runtime.sharding",
+    "scope_ctx": "repro.runtime.sharding",
+    "SESSION_TP_RULES": "repro.runtime.sharding",
+    "per_device_bytes": "repro.runtime.sharding",
+    # pipeline parallelism
+    "split_stages": "repro.runtime.pipeline_par",
+    "pipeline_apply": "repro.runtime.pipeline_par",
+    "pipeline_prefill": "repro.runtime.pipeline_par",
+    "bubble_fraction": "repro.runtime.pipeline_par",
     # fault tolerance
     "Supervisor": "repro.runtime.fault",
     "SessionSupervisor": "repro.runtime.fault",

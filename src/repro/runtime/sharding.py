@@ -56,21 +56,43 @@ def make_mesh(
     return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 
+def session_mesh_layout(mesh: Mesh) -> tuple[int, int, list[list]]:
+    """``(n_data, n_model, groups)`` of a session mesh.
+
+    Sessions shard *tenants* over ``("pod", "data")`` and may additionally
+    shard the frozen *backbone* over a ``model`` axis (DESIGN.md §14): each
+    data shard then owns a model-axis device *group* that holds one
+    tensor-parallel backbone replica. ``groups[s]`` is shard ``s``'s device
+    list (length ``n_model``); on a data-only mesh every group is a single
+    device — the PR 5 committed-replica layout, unchanged.
+    """
+    data_axes, model_size = [], 1
+    for i, (ax, size) in enumerate(zip(mesh.axis_names, mesh.devices.shape)):
+        if ax in ("data", "pod"):
+            data_axes.append(i)
+        elif ax == "model":
+            model_size = size
+        elif size > 1:
+            raise ValueError(
+                f"session meshes shard tenants on ('pod', 'data') and the "
+                f"backbone on 'model' only; axis {ax!r} has size {size}"
+            )
+    order = data_axes + [i for i in range(mesh.devices.ndim) if i not in data_axes]
+    grid = np.transpose(mesh.devices, order).reshape(-1, model_size)
+    return grid.shape[0], model_size, [list(row) for row in grid]
+
+
 def session_devices(mesh: Mesh) -> list:
     """The data-axis device list of a session mesh, in shard order.
 
-    Mesh-native sessions parallelise the *tenant* axis only (the backbone
-    is frozen and replicated — DESIGN.md §10), so every non-data mesh axis
-    must be trivial; a >1 ``model`` axis is the pretraining substrate's
-    territory and is rejected here.
+    Mesh-native sessions parallelise the tenant axis over ``("pod",
+    "data")``; with a >1 ``model`` axis each data shard is a device *group*
+    (one TP backbone replica) and this returns the group anchors — the
+    device per shard that host-side bookkeeping (cache tiers, pool stats)
+    keys on. ``session_mesh_layout`` exposes the full groups.
     """
-    for ax, size in zip(mesh.axis_names, mesh.devices.shape):
-        if ax not in ("data", "pod") and size > 1:
-            raise ValueError(
-                f"session meshes shard tenants on ('pod', 'data') only; "
-                f"axis {ax!r} has size {size}"
-            )
-    return list(mesh.devices.flatten())
+    _, _, groups = session_mesh_layout(mesh)
+    return [g[0] for g in groups]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +115,11 @@ class AxisRules:
     # grid-sharded for dense layers but must release the 'model' axis to the
     # experts inside MoE blocks (a cheap h-reshard at the block boundary).
     expert_group: Any = ("pod", "data")
+    # Layer axis of stacked (L, ...) activation tensors — the skip-cache and
+    # the collected block inputs. "model" on session TP meshes: each model
+    # shard holds (and skip-sums) its resident blocks' inputs locally and
+    # one psum stitches the adapter logits (DESIGN.md §14).
+    layers: Any = None
 
     def resolve(self, mesh_axes: tuple[str, ...], logical: Any) -> Any:
         """Drop mesh axes not present (e.g. 'pod' on the single-pod mesh)."""
@@ -123,6 +150,18 @@ def sharding_scope(mesh: Mesh, rules: AxisRules):
         _ACTIVE.reset(tok)
 
 
+@contextlib.contextmanager
+def suspend_scope():
+    """Clear any active sharding scope for the dynamic extent — for manual
+    SPMD regions (``shard_map``) traced under a scoped jit, where the scope's
+    auto-constraints would name an axis the region claims as manual."""
+    tok = _ACTIVE.set(None)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(tok)
+
+
 def constrain(x: jax.Array, *logical_axes) -> jax.Array:
     """with_sharding_constraint against the active scope (no-op if none).
 
@@ -140,6 +179,57 @@ def constrain(x: jax.Array, *logical_axes) -> jax.Array:
             r = None
         parts.append(r)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*parts)))
+
+
+# Session TP rules: within one data shard's model group the *rows* are not
+# sharded (the data axis lives across groups, not inside the jit), so every
+# batch-like logical axis replicates and the tensor axes follow Megatron.
+SESSION_TP_RULES = AxisRules(
+    batch=None, seq=None, heads="model", vocab="model", ffn="model",
+    expert="model", capacity=None, d_inner="model", logits_batch=None,
+    expert_group=None, layers="model",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardScope:
+    """Hashable (mesh, rules) pair a compiled-fn factory can close over.
+
+    The ``sharding_scope`` contextvar is read at TRACE time, so any cached
+    jit whose body should emit ``constrain`` ops must key its cache entry on
+    the scope — this dataclass is that key (``Mesh`` and ``AxisRules`` are
+    both hashable) and ``ctx()`` is the trace-time activation.
+    """
+
+    mesh: Mesh
+    rules: AxisRules = SESSION_TP_RULES
+
+    def ctx(self):
+        return sharding_scope(self.mesh, self.rules)
+
+
+def scope_ctx(scope: Optional[ShardScope]):
+    """``scope.ctx()`` or a no-op context — for fns compiled both ways."""
+    return scope.ctx() if scope is not None else contextlib.nullcontext()
+
+
+def shard_submesh(mesh: Mesh, shard: int) -> Mesh:
+    """Shard ``shard``'s model-axis group as its own 1-D ``("model",)``
+    mesh — the device set every dispatch of that data shard runs on."""
+    _, _, groups = session_mesh_layout(mesh)
+    return Mesh(np.asarray(groups[shard]), ("model",))
+
+
+def shard_backbone(params: Params, submesh: Mesh) -> Params:
+    """One TP-sharded backbone replica committed to a shard's model group
+    (the >1-model-axis counterpart of ``replicate_backbone``): params whose
+    rule resolves shard over ``model``, the rest replicate over the group.
+    Committed inputs pin every downstream jit to the group's device set,
+    exactly like the single-device committed replicas do today."""
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+    )
+    return jax.device_put(params, named(submesh, param_specs(shapes, submesh)))
 
 
 # ---------------------------------------------------------------------------

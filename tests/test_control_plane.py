@@ -160,6 +160,42 @@ class TestControlPolicy:
         with pytest.raises(ValueError, match="decision"):
             cp.record(7, "maybe")
 
+    def test_auto_rollback_streak_policy(self):
+        with pytest.raises(ValueError, match="auto_rollback_after"):
+            ControlConfig(auto_rollback_after=0)
+        cp = ControlPlane(ControlConfig(auto_rollback_after=2))
+        cp.record("t", "reject", pre=1.0, post=2.0, step=1)
+        assert not cp.should_auto_rollback("t")
+        cp.record("t", "reject", pre=1.0, post=2.0, step=2)
+        assert cp.should_auto_rollback("t")
+        cp.record_rollback("t", auto=True)
+        assert (cp.rollbacks, cp.auto_rollbacks) == (1, 1)
+        assert not cp.should_auto_rollback("t")        # streak cleared
+        # An accept resets the streak mid-way.
+        cp.record("t", "reject", pre=1.0, post=2.0, step=3)
+        cp.record("t", "accept", pre=1.0, post=0.5, step=4)
+        cp.record("t", "reject", pre=0.5, post=2.0, step=5)
+        assert not cp.should_auto_rollback("t")
+        # Manual rollbacks don't count as auto.
+        cp.record_rollback("t")
+        assert (cp.rollbacks, cp.auto_rollbacks) == (2, 1)
+        # Disabled (the default): streaks accumulate but never fire.
+        cp0 = ControlPlane(ControlConfig())
+        cp0.record("t", "reject", pre=1.0, post=2.0, step=1)
+        cp0.record("t", "reject", pre=1.0, post=2.0, step=2)
+        assert not cp0.should_auto_rollback("t")
+
+    def test_streaks_survive_state_roundtrip(self):
+        cp = ControlPlane(ControlConfig(mode="quarantine", auto_rollback_after=3))
+        cp.record(3, "quarantine", pre=1.0, post=2.0, step=1)
+        cp.record(3, "quarantine", pre=1.0, post=2.0, step=2)
+        wire = json.loads(json.dumps(cp.state()))
+        cp2 = ControlPlane(cp.config)
+        cp2.load_state(wire)
+        assert not cp2.should_auto_rollback(3)
+        cp2.record(3, "quarantine", pre=1.0, post=2.0, step=3)
+        assert cp2.should_auto_rollback(3)             # int key survived JSON
+
     def test_state_roundtrips_int_tenants_through_json(self):
         cp = ControlPlane(ControlConfig(mode="quarantine"))
         cp.record(3, "reject", pre=1.0, post=2.0, step=2)
@@ -320,6 +356,64 @@ class TestGatedRuntime:
         rec = dict(rt.control_metrics()["tenants"])["u0"]
         assert rec["decision"] == "accept"
         assert rec["pre"] is None and rec["post"] is None
+
+    def test_auto_rollback_fires_after_streak_and_resets_optimizer(
+        self, cfg, params
+    ):
+        """threshold=-inf: the first write-back per tenant accepts, every
+        later one rejects. With ``auto_rollback_after=2`` the second reject
+        fires the automatic rollback: optimizer state zeroed, step reset,
+        ledger counted — while the served slot (v1, never overwritten by
+        the rejected versions) stays put."""
+        control = ControlConfig(
+            holdout_every=4, threshold=float("-inf"), auto_rollback_after=2
+        )
+        rt = self._adapted(cfg, params, control)       # adapt 1: accepts
+        v1 = slot_payload_np(rt.pool.shards[0], "u0")
+        rt.adapt(epochs=1, batch_per_tenant=4)         # reject, streak 1
+        assert rt.control.auto_rollbacks == 0
+        assert any(
+            np.any(np.asarray(x)) for x in jax.tree.leaves(rt.tenant("u0").opt_mu)
+        )
+        rt.adapt(epochs=1, batch_per_tenant=4)         # reject, streak 2 -> fire
+        assert rt.control.auto_rollbacks == 2          # both tenants
+        assert rt.counters["control/auto_rollbacks"] == 2
+        assert rt.counters["control/rollbacks"] == 2
+        st = rt.tenant("u0")
+        assert st.step == 0
+        assert not any(
+            np.any(np.asarray(x)) for x in jax.tree.leaves(st.opt_mu)
+        )
+        for n, arr in slot_payload_np(rt.pool.shards[0], "u0").items():
+            np.testing.assert_array_equal(arr, v1[n])
+        # The streak cleared with the rollback: one more reject is streak 1
+        # again, no second firing.
+        rt.adapt(epochs=1, batch_per_tenant=4)
+        assert rt.control.auto_rollbacks == 2
+
+    def test_auto_rollback_restores_archived_version(self, cfg, params):
+        """With history beneath the served version, the automatic rollback
+        restores it bitwise (the same mechanism the manual path uses)."""
+        import dataclasses
+
+        control = ControlConfig(
+            holdout_every=4, threshold=float("inf"), auto_rollback_after=2
+        )
+        rt = self._adapted(cfg, params, control)       # v1 accepted
+        v1 = slot_payload_np(rt.pool.shards[0], "u0")
+        rt.adapt(epochs=1, batch_per_tenant=4)         # v2 accepted, v1 archived
+        assert rt.pool.history_len("u0") == 1
+        # The operator tightens the gate mid-session: every further
+        # write-back now counts as a regression.
+        rt.control.config = dataclasses.replace(
+            rt.control.config, threshold=float("-inf")
+        )
+        rt.adapt(epochs=1, batch_per_tenant=4)         # reject, streak 1
+        rt.adapt(epochs=1, batch_per_tenant=4)         # reject, streak 2 -> fire
+        assert rt.control.auto_rollbacks == 2
+        assert rt.pool.history_len("u0") == 0
+        for n, arr in slot_payload_np(rt.pool.shards[0], "u0").items():
+            np.testing.assert_array_equal(arr, v1[n])  # v2 rolled back to v1
 
     def test_control_off_keeps_historical_behaviour(self, cfg, params):
         rt = self._adapted(cfg, params, None)

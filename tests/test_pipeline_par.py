@@ -28,17 +28,29 @@ class TestScheduleMath:
 
     def test_split_stages_shapes(self):
         layers = [{"w": jnp.full((3,), i, jnp.float32)} for i in range(8)]
-        st = split_stages(layers, 4)
+        st, valid = split_stages(layers, 4)
         assert st["w"].shape == (4, 2, 3)
         np.testing.assert_array_equal(np.asarray(st["w"][1, 0]), np.full(3, 2.0))
+        assert valid.shape == (4, 2) and bool(jnp.all(valid))
 
-    def test_split_stages_divisibility(self):
-        layers = [{"w": jnp.zeros(2)} for _ in range(6)]
-        try:
-            split_stages(layers, 4)
-            assert False
-        except ValueError:
-            pass
+    def test_split_stages_remainder_pads_invalid(self):
+        # 6 layers over 4 stages: ceil division gives 2 slots per stage;
+        # the last stage's slots are copies of the final layer, marked
+        # invalid so pipeline runners pass through them unchanged.
+        layers = [{"w": jnp.full((2,), i, jnp.float32)} for i in range(6)]
+        st, valid = split_stages(layers, 4)
+        assert st["w"].shape == (4, 2, 2)
+        np.testing.assert_array_equal(
+            np.asarray(valid),
+            np.array([[1, 1], [1, 1], [1, 1], [0, 0]], bool),
+        )
+        np.testing.assert_array_equal(np.asarray(st["w"][3, 1]), np.full(2, 5.0))
+
+    def test_split_stages_errors(self):
+        with pytest.raises(ValueError):
+            split_stages([], 2)
+        with pytest.raises(ValueError):
+            split_stages([{"w": jnp.zeros(2)} for _ in range(3)], 4)
 
 
 SUBPROCESS_PROG = textwrap.dedent(
@@ -59,16 +71,25 @@ SUBPROCESS_PROG = textwrap.dedent(
     def layer_fn(p, h):
         return jnp.tanh(h @ p["w"])
 
-    stages = split_stages(layers, 4)
+    stages, valid = split_stages(layers, 4)
     x = jax.random.normal(key, (6, 4, D))  # 6 microbatches of 4
 
-    out = pipeline_apply(stages, x, layer_fn, mesh=mesh, axis="pod")
+    out = pipeline_apply(stages, x, layer_fn, mesh=mesh, axis="pod", valid=valid)
 
     # Reference: plain sequential stack.
     ref = x
     for p in layers:
         ref = layer_fn(p, ref)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+    # Remainder split: 6 layers over 4 stages — the padded slots must pass
+    # activations through unchanged.
+    stages6, valid6 = split_stages(layers[:6], 4)
+    out6 = pipeline_apply(stages6, x, layer_fn, mesh=mesh, axis="pod", valid=valid6)
+    ref6 = x
+    for p in layers[:6]:
+        ref6 = layer_fn(p, ref6)
+    np.testing.assert_allclose(np.asarray(out6), np.asarray(ref6), atol=1e-5)
 
     # Differentiability: grad through the pipeline matches the reference.
     def loss_pipe(stages):

@@ -195,7 +195,7 @@ class TestRouting:
         rt.adapt(epochs=1, batch_per_tenant=2, key=jax.random.key(3))
         prompts = jax.random.randint(jax.random.key(5), (2, 6), 0, cfg.vocab_size)
         rt.serve(["u0", None], prompts, max_new=3)
-        entry = _FN_CACHE[("decode_scan", cfg, True, False)]
+        entry = _FN_CACHE[("decode_scan", cfg, True, False, None)]
         assert launch_serve._decode_scan_fn(cfg, True) is entry
 
     def test_idx_memo_survives_traffic_and_invalidates_on_churn(self, cfg, params):

@@ -327,7 +327,14 @@ class TestRuntimePublicAPI:
                      "StragglerMonitor", "elastic_remesh",
                      "elastic_session_mesh", "make_mesh", "session_devices",
                      "session_param_specs", "replicate_backbone",
-                     "SessionRuntime"):
+                     "SessionRuntime",
+                     # the 2-D session surface (DESIGN.md §14)
+                     "session_mesh_layout", "shard_submesh", "shard_backbone",
+                     "ShardScope", "scope_ctx", "SESSION_TP_RULES",
+                     "per_device_bytes",
+                     # pipeline parallelism
+                     "split_stages", "pipeline_apply", "pipeline_prefill",
+                     "bubble_fraction"):
             assert getattr(R, name) is not None
             assert name in dir(R)
         with pytest.raises(AttributeError):
@@ -457,6 +464,122 @@ print("ELASTIC_RESTORE_PARITY_OK")
         )
         assert out.returncode == 0, out.stderr[-3000:]
         assert "ELASTIC_RESTORE_PARITY_OK" in out.stdout
+
+    def test_mesh_2d_twin_parity_and_elastic_restore(self, tmp_path):
+        """(data=2, model=2) forced mesh vs the 1-device same-layout twin:
+        serve TOKENS (temp-0) exact — including through the pipelined
+        scheduler admission — adapters within TP float tolerance (the model
+        axis reorders partial sums), slot tables equal, per-device backbone
+        bytes ~halved; then a checkpoint from the 2-D session restores into
+        the 1-device twin and both continue in lockstep (the mesh shape is
+        placement, not layout — DESIGN.md §14)."""
+        script = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax, jax.numpy as jnp, numpy as np
+from repro.models.config import ModelConfig
+from repro.models.lm import init_lm
+from repro.core.lm_skiplora import SkipLoRAConfig
+from repro.core.runtime import SessionRuntime
+from repro.checkpoint.checkpoint import restore_runtime_session, save_runtime_session
+from repro.runtime.sharding import make_mesh
+
+ckdir = sys.argv[1]
+cfg = ModelConfig(name="t", family="test", n_layers=4, d_model=16, n_heads=4,
+                  n_kv_heads=2, d_ff=32, vocab_size=64, pattern=("attn",),
+                  dtype="float32")
+sl = SkipLoRAConfig(rank=2, mode="full")
+params = init_lm(jax.random.key(0), cfg)
+
+def build(mesh=None, pipeline_stages=0):
+    return SessionRuntime(cfg, sl, params, max_tenants=4, samples_per_tenant=8,
+                          seq=6, use_kernel=False, mesh=mesh,
+                          placement_shards=2, seed=0,
+                          pipeline_stages=pipeline_stages)
+
+mesh2 = make_mesh((2, 2), ("data", "model"), devices=jax.devices())
+rt1, rt2, rtp = build(), build(mesh2), build(mesh2, pipeline_stages=2)
+assert rt2.model_parallel == 2 and rt2.n_shards == 2
+prompts = jax.random.randint(jax.random.key(4), (2, 5), 0, cfg.vocab_size)
+tokens = jax.random.randint(jax.random.key(5), (2, 6), 0, cfg.vocab_size)
+labels = jax.random.randint(jax.random.key(6), (2, 6), 0, cfg.vocab_size)
+for rt in (rt1, rt2, rtp):
+    for t in ("a", "b", "c"):
+        rt.ingest(t, tokens, labels)
+    rt.adapt(["a", "b", "c"], epochs=2, key=jax.random.key(7))
+
+def adapters_close(x, y):
+    for a, b in zip(jax.tree.leaves(x), jax.tree.leaves(y)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+
+for t in ("a", "b", "c"):
+    adapters_close(rt1.tenant(t).adapters, rt2.tenant(t).adapters)
+assert rt1.pool.slot_table() == rt2.pool.slot_table()
+np.testing.assert_array_equal(
+    np.asarray(rt1.serve([None, "a"], prompts, max_new=4)),
+    np.asarray(rt2.serve([None, "a"], prompts, max_new=4)))
+
+# One backbone replica per data group, TP-split over its 2 model devices.
+total = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+            for x in jax.tree.leaves(params))
+per = max(sum(s.data.nbytes for x in jax.tree.leaves(rt2._shard_params[0])
+              for s in x.addressable_shards if s.device == d)
+          for d in rt2.mesh.devices.ravel())
+assert total / per > 1.5, (total, per)
+
+# Pipelined admission: tokens exact vs plain 2-D and vs 1 device.
+outs = []
+for rt in (rt1, rt2, rtp):
+    rt.attach_scheduler(max_batch=4, max_prompt=5, max_new_cap=8,
+                        admit_bucket=2, chunk=2)
+    reqs = [rt.enqueue_serve("a", prompts[0, :4], max_new=6),
+            rt.enqueue_serve(None, prompts[1, :3], max_new=5)]
+    rt.drain()
+    outs.append([r.result().tolist() for r in reqs])
+assert outs[0] == outs[1] == outs[2], outs
+assert abs(rtp.scheduler.predicted_bubble() - 1/3) < 1e-12
+
+# Elastic restore ACROSS mesh shapes: checkpoint the (2,2) session, restore
+# into the 1-device twin, continue both with the same events.
+path = save_runtime_session(ckdir, 1, rt2)
+rt_back = build()
+restore_runtime_session(path, rt_back)
+for rt in (rt2, rt_back):
+    for t in ("a", "b", "c"):
+        rt.ingest(t, labels, tokens)
+    rt.adapt(["a", "b", "c"], epochs=1, key=jax.random.key(8))
+for t in ("a", "b", "c"):
+    adapters_close(rt2.tenant(t).adapters, rt_back.tenant(t).adapters)
+assert rt2.pool.slot_table() == rt_back.pool.slot_table()
+np.testing.assert_array_equal(
+    np.asarray(rt2.serve([None, "b"], prompts, max_new=4)),
+    np.asarray(rt_back.serve([None, "b"], prompts, max_new=4)))
+print("MESH2D_PARITY_OK")
+"""
+        out = subprocess.run(
+            [sys.executable, "-c", script, str(tmp_path / "ck")],
+            capture_output=True, text=True, timeout=600, env=_forced_env(4),
+            cwd=_repo_root(),
+        )
+        assert out.returncode == 0, out.stderr[-3000:]
+        assert "MESH2D_PARITY_OK" in out.stdout
+
+    def test_run_cli_mesh_2d_pipelined(self):
+        """launch/run.py --mesh 2x2 --pipeline-stages 2 --scheduler
+        --check-parity: tokens exact, adapters within TP tolerance."""
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.run",
+             "--mesh", "2x2", "--pipeline-stages", "2", "--scheduler",
+             "--tenants", "2", "--rounds", "1", "--samples-per-round", "4",
+             "--seq", "8", "--prompt-len", "5", "--gen", "4",
+             "--check-parity"],
+            capture_output=True, text=True, timeout=600, env=_forced_env(4),
+            cwd=_repo_root(),
+        )
+        assert out.returncode == 0, out.stderr[-2000:] + out.stdout[-2000:]
+        assert "parity OK" in out.stdout
 
     def test_supervised_elastic_failure_cli(self, tmp_path):
         """launch/run.py crash drill: injected failure mid-stream, restart
