@@ -18,6 +18,12 @@ tok/s per mode, plus the PR's three correctness gates:
     temperatures all run through one compiled dispatch (temperature is
     traced, never a static; ``runtime.TRACE_COUNTS``).
 
+A second section (``prefix_share_section``; standalone via
+``--prefix-share``) replays a shared-prefix trace with the scheduler's
+paged-KV prefix reuse on vs off and gates bitwise token equality, the
+pool's ref-count no-leak invariant, and (full tier) >= 1.5x tok/s from
+skipping the shared prefill.
+
   PYTHONPATH=src python -m benchmarks.serving_bench            # full
   PYTHONPATH=src python -m benchmarks.serving_bench --quick    # CI smoke
 
@@ -79,7 +85,8 @@ def make_trace(n: int, *, lam: float, n_tenants: int, prompt_len: int,
 
 
 def replay(rt, trace: list[dict], *, mode: str, max_batch: int,
-           prompt_len: int, max_new: int, chunk: int) -> dict:
+           prompt_len: int, max_new: int, chunk: int,
+           prefix_reuse: bool = False, kv_block=None) -> dict:
     """Replay the trace in real time: submit each request once the clock
     passes its arrival, pump the scheduler otherwise. Returns latencies,
     per-request tokens, and sustained tok/s over the makespan."""
@@ -88,7 +95,7 @@ def replay(rt, trace: list[dict], *, mode: str, max_batch: int,
     sched = RequestScheduler(
         rt, max_batch=max_batch, max_prompt=prompt_len, max_new_cap=max_new,
         admit_bucket=min(2, max_batch), inflight_per_tenant=max_batch,
-        chunk=chunk, mode=mode,
+        chunk=chunk, mode=mode, prefix_reuse=prefix_reuse, kv_block=kv_block,
     )
     reqs = []
     t0 = time.perf_counter()
@@ -113,10 +120,125 @@ def replay(rt, trace: list[dict], *, mode: str, max_batch: int,
         "latency_p50_s": float(np.percentile(lat, 50)),
         "latency_p99_s": float(np.percentile(lat, 99)),
         "dispatches": int(sched.counters["dispatch/admit"]
+                          + sched.counters["dispatch/admit_reuse"]
                           + sched.counters["dispatch/step"]),
         "quality": sched.quality_metrics(),
+        "prefix": sched.prefix_metrics(),
         "tokens": [r.result().tolist() for r in reqs],
     }
+
+
+def make_prefix_trace(n: int, *, share_len: int, tail_len: int, max_new: int,
+                      vocab: int, seed: int = 13) -> list[dict]:
+    """``n`` simultaneous temp-0 base-traffic requests sharing a
+    ``share_len``-token prefix, each with a distinct ``tail_len``-token
+    random suffix — the shared-system-prompt traffic shape that paged
+    prefix reuse exists for."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, size=share_len, dtype=np.int32)
+    return [
+        {
+            "arrival": 0.0,
+            "tenant": None,
+            "temperature": 0.0,
+            "prompt": np.concatenate(
+                [shared, rng.integers(0, vocab, size=tail_len, dtype=np.int32)]
+            ),
+            "max_new": max_new,
+        }
+        for _ in range(n)
+    ]
+
+
+def prefix_share_section(*, quick: bool = False, requests: int = 8,
+                         share: int = 448, tail: int = 64, max_new: int = 4,
+                         max_batch: int = 4, chunk: int = 2,
+                         kv_block: int = 32) -> tuple[list, dict]:
+    """Shared-prefix trace, reuse-on vs reuse-off, three gates:
+
+      - ``prefix_bitwise_match``: identical tokens either way (everything
+        is temperature 0) — reused KV bytes ARE the recomputed bytes;
+      - ``prefix_ref_leaks``: after the reuse-on drain every pool block is
+        owned by exactly one radix node (no in-flight refs survive);
+      - ``prefix_speedup_tokps`` >= 1.5 (full tier only): skipping the
+        shared 87.5% of each prefill must show up in sustained tok/s. The
+        full tier uses long prompts (448 shared + 64 tail) so the prefill
+        this section is about dominates the makespan; the quick tier keeps
+        prompts short (decode/dispatch-dominated, speedup ~1x) and gates
+        only correctness: bitwise match, zero leaks, blocks actually reused.
+
+    Reports analytic prefill-FLOPs saved (``launch.flops.reuse_saved_flops``
+    over the reused tokens) and blocks-reused columns alongside."""
+    from repro.core.runtime import TRACE_COUNTS
+    from repro.launch.flops import model_flops, reuse_saved_flops
+
+    if quick:
+        requests, share, tail, max_new, kv_block = 6, 24, 8, 4, 8
+    plen = share + tail
+    rt = _make_runtime(2)
+    vocab = rt.cfg.vocab_size
+    trace = make_prefix_trace(requests, share_len=share, tail_len=tail,
+                              max_new=max_new, vocab=vocab, seed=13)
+    warm = make_prefix_trace(min(requests, 4), share_len=share, tail_len=tail,
+                             max_new=max_new, vocab=vocab, seed=17)
+    kw = dict(mode="continuous", max_batch=max_batch, prompt_len=plen,
+              max_new=max_new, chunk=chunk, kv_block=kv_block)
+    for reuse in (True, False):
+        rt.reset_prefix_cache()
+        replay(rt, warm, prefix_reuse=reuse, **kw)
+    keys = ("sched_step", "sched_admit", "sched_admit_reuse")
+    traces0 = sum(TRACE_COUNTS[k] for k in keys)
+
+    rt.reset_prefix_cache()
+    on = replay(rt, trace, prefix_reuse=True, **kw)
+    leak = ""
+    try:
+        rt.check_prefix_no_leaks()     # BEFORE reset: refs must be clean now
+    except RuntimeError as err:
+        leak = str(err)
+    rt.reset_prefix_cache()
+    off = replay(rt, trace, prefix_reuse=False, **kw)
+    retraces = sum(TRACE_COUNTS[k] for k in keys) - traces0
+
+    bitwise = on["tokens"] == off["tokens"]
+    speedup = on["tok_per_s"] / off["tok_per_s"]
+    pm = on["prefix"]
+    hits = int(pm.get("hits", 0))
+    reused_tokens = int(pm.get("tokens_reused", 0))
+    saved = (
+        hits * reuse_saved_flops(rt.cfg, reused_tokens // hits) if hits else 0.0
+    )
+    dense_prefill = requests * model_flops(rt.cfg, (1, plen), "prefill")
+    payload = {
+        "requests": requests,
+        "share_tokens": share,
+        "tail_tokens": tail,
+        "share_fraction": share / plen,
+        "kv_block": kv_block,
+        "reuse_on": {k: v for k, v in on.items() if k != "tokens"},
+        "reuse_off": {k: v for k, v in off.items()
+                      if k not in ("tokens", "prefix")},
+        "prefix_speedup_tokps": speedup,
+        "prefix_bitwise_match": bool(bitwise),
+        "prefix_ref_leaks": leak,
+        "prefill_flops_saved": saved,
+        "prefill_flops_dense": dense_prefill,
+        "prefill_flops_saved_frac": saved / dense_prefill,
+        "blocks_reused": int(pm.get("blocks_reused", 0)),
+        "retraces_after_warmup": int(retraces),
+    }
+    rows = [
+        ("serving/prefix_reuse_tok_per_s", on["tok_per_s"]),
+        ("serving/prefix_dense_tok_per_s", off["tok_per_s"]),
+        ("serving/prefix_speedup_tokps", speedup),
+        ("serving/prefix_bitwise_match", 1.0 if bitwise else 0.0),
+        ("serving/prefix_ref_leaks", 0.0 if not leak else 1.0),
+        ("serving/prefix_blocks_reused", float(payload["blocks_reused"])),
+        ("serving/prefill_flops_saved", saved),
+        ("serving/prefill_flops_saved_frac",
+         payload["prefill_flops_saved_frac"]),
+    ]
+    return rows, payload
 
 
 def quality_section(*, n_samples: int = 4, seq: int = 8, rounds: int = 3) -> dict:
@@ -218,6 +340,14 @@ def serving_slo(*, quick: bool = False, requests: int = 24, lam: float = 200.0,
         "temp0_requests_checked": len(temp0),
         "decode_retraces_after_warmup": int(retraces),
     }
+    if not quick:
+        # Nightly payload carries the shared-prefix section next to the
+        # classic cont-vs-seq comparison; the quick tier runs it as its own
+        # CI step (--quick --prefix-share) to keep the smoke fast.
+        prows, ppayload = prefix_share_section(quick=False)
+        payload["prefix_share"] = ppayload
+    else:
+        prows = []
     rows = [
         ("serving/continuous_tok_per_s", cont["tok_per_s"]),
         ("serving/sequential_tok_per_s", seq["tok_per_s"]),
@@ -231,7 +361,7 @@ def serving_slo(*, quick: bool = False, requests: int = 24, lam: float = 200.0,
         ("serving/gate_rejected", float(quality["gate"]["rejected"])),
         ("serving/gate_auto_rollbacks", float(quality["gate"]["auto_rollbacks"])),
     ]
-    return rows, payload
+    return rows + prows, payload
 
 
 def main() -> None:
@@ -247,8 +377,22 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="run ONLY the shared-prefix reuse section (the "
+                         "quick tier's per-push smoke)")
     ap.add_argument("--json", default="BENCH_serving_slo.json")
     args = ap.parse_args()
+
+    if args.prefix_share:
+        rows, ppayload = prefix_share_section(quick=args.quick)
+        print("name,value,derived")
+        for k, v in rows:
+            print(f"{k},{v:.4f},")
+        with open(args.json, "w") as f:
+            json.dump({"prefix_share": ppayload}, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+        _gate_prefix(ppayload, speedup_bar=None if args.quick else 1.5)
+        return
 
     rows, payload = serving_slo(
         quick=args.quick, requests=args.requests, lam=args.lam,
@@ -273,6 +417,25 @@ def main() -> None:
         raise SystemExit(
             "quality section produced no gate events "
             f"(rejected={q['rejected']}, auto_rollbacks={q['auto_rollbacks']})"
+        )
+    if "prefix_share" in payload:
+        _gate_prefix(payload["prefix_share"], speedup_bar=1.5)
+
+
+def _gate_prefix(ps: dict, *, speedup_bar) -> None:
+    """Shared-prefix acceptance gates: bitwise + no-leak always; the
+    >= 1.5x tok/s bar only on the full tier (``speedup_bar=None`` skips —
+    the quick smoke's trace is too small to measure throughput)."""
+    if not ps["prefix_bitwise_match"]:
+        raise SystemExit("prefix reuse changed temperature-0 tokens")
+    if ps["prefix_ref_leaks"]:
+        raise SystemExit(f"kv pool ref leak: {ps['prefix_ref_leaks']}")
+    if ps["blocks_reused"] == 0:
+        raise SystemExit("shared-prefix trace reused zero blocks")
+    if speedup_bar is not None and ps["prefix_speedup_tokps"] < speedup_bar:
+        raise SystemExit(
+            f"prefix reuse speedup {ps['prefix_speedup_tokps']:.2f}x "
+            f"< {speedup_bar}x"
         )
 
 

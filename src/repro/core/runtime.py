@@ -627,6 +627,12 @@ class SessionRuntime:
         #: key twice within one session.
         self._serve_calls = 0
         self._scheduler = None
+        #: Per-shard paged KV block pools + radix prefix indexes (the
+        #: scheduler's prefix-reuse state; see ``core.kv_pool`` /
+        #: ``core.prefix_index``). Lazily built by ``kv_pool()`` so
+        #: reuse-off sessions pay nothing.
+        self._kv_pools: dict[int, Any] = {}
+        self._prefix_indexes: dict[int, Any] = {}
         self.counters = Counter()
 
     # -- shard arithmetic ----------------------------------------------------
@@ -675,6 +681,79 @@ class SessionRuntime:
             self.pool.unpin(tenant)
         else:
             self.pool.unplace(tenant)
+        for idx in self._prefix_indexes.values():
+            idx.drop_tenant(tenant)
+
+    # -- paged KV prefix cache ----------------------------------------------
+
+    def kv_pool(self, shard: int, *, block: Optional[int] = None,
+                n_blocks: Optional[int] = None):
+        """The shard's paged KV block pool, built on first call (on the
+        shard's device). ``block`` is the pool's identity — a later caller
+        asking for a different block size gets a loud error (tables and
+        radix paths are block-granular); ``n_blocks`` is only a sizing
+        hint for construction and is ignored once the pool exists."""
+        from repro.core.kv_pool import KVBlockPool, get_default_block
+
+        pool = self._kv_pools.get(shard)
+        if pool is not None:
+            if block is not None and int(block) != pool.block:
+                raise ValueError(
+                    f"kv pool shard {shard} already built with block="
+                    f"{pool.block}; requested {block}"
+                )
+            return pool
+        if n_blocks is None:
+            raise ValueError(
+                "first kv_pool() call for a shard must size it (n_blocks)"
+            )
+        pool = KVBlockPool(
+            self.cfg, n_blocks=int(n_blocks),
+            block=int(block) if block else get_default_block(),
+            device=self._shard_device[shard],
+        )
+        self._kv_pools[shard] = pool
+        return pool
+
+    def prefix_index(self, shard: int):
+        from repro.core.prefix_index import RadixPrefixIndex
+
+        idx = self._prefix_indexes.get(shard)
+        if idx is None:
+            pool = self._kv_pools.get(shard)
+            if pool is None:
+                raise ValueError(
+                    f"prefix_index({shard}) needs kv_pool({shard}, ...) "
+                    "built first"
+                )
+            idx = self._prefix_indexes[shard] = RadixPrefixIndex(pool)
+        return idx
+
+    def reset_prefix_cache(self) -> None:
+        """Forget every pooled prefix (all shards): radix trees cleared,
+        pool refcounts zeroed, generations bumped so in-flight handles
+        turn stale. The benchmark calls this between replays so each
+        measurement starts cold."""
+        for shard, pool in self._kv_pools.items():
+            idx = self._prefix_indexes.get(shard)
+            if idx is not None:
+                idx.reset()
+            else:
+                pool.reset()
+
+    def check_prefix_no_leaks(self) -> None:
+        """Drained-state ref invariant, raised on violation: every held
+        block is owned by exactly one radix node and nothing else (no
+        in-flight refs survive a drain; free + held == n_blocks)."""
+        for shard, pool in self._kv_pools.items():
+            idx = self._prefix_indexes.get(shard)
+            pool.check_no_leaks(idx.n_nodes() if idx is not None else 0)
+            extra = int(pool.refs.sum()) - int((pool.refs > 0).sum())
+            if extra:
+                raise RuntimeError(
+                    f"kv pool shard {shard}: {extra} in-flight ref(s) "
+                    "outstanding after drain"
+                )
 
     # -- events --------------------------------------------------------------
 
@@ -1272,6 +1351,20 @@ class SessionRuntime:
         }
         if self.control is not None:
             meta["control"] = self.control.state()
+        if self._kv_pools:
+            arrays["kv_pool"] = {
+                str(s): p.state_arrays() for s, p in self._kv_pools.items()
+            }
+            meta["kv_pool"] = {
+                str(s): {
+                    **p.state_meta(),
+                    "radix": (
+                        self._prefix_indexes[s].state()
+                        if s in self._prefix_indexes else []
+                    ),
+                }
+                for s, p in self._kv_pools.items()
+            }
         return arrays, meta
 
     def load_session_state(self, arrays: dict, meta: dict) -> None:
@@ -1352,6 +1445,18 @@ class SessionRuntime:
                     for name, arr in arrays["cache"].items()
                 }
                 eng.write(jnp.asarray([l for _, l in sub]), vals)
+        # Paged prefix cache: pool bytes + radix tree round-trip, with the
+        # refcounts recomputed from the restored tree (exactly one ref per
+        # node — a fresh session has no in-flight rows, so saved in-flight
+        # refs must NOT survive). Geometry mismatches fail loudly inside
+        # ``KVBlockPool.load_state``.
+        for s_str, pmeta in meta.get("kv_pool", {}).items():
+            s = int(s_str)
+            pool = self.kv_pool(
+                s, block=int(pmeta["block"]), n_blocks=int(pmeta["n_blocks"])
+            )
+            pool.load_state(arrays["kv_pool"][s_str], pmeta)
+            self.prefix_index(s).load_state(pmeta.get("radix", []))
 
 
 def _maybe_stack(trees: list) -> Optional[Params]:

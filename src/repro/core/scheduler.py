@@ -71,6 +71,7 @@ from repro.models.lm import (
     pipeline_sched_prefill,
     sample_token,
     sched_prefill,
+    sched_prefill_reuse,
 )
 from repro.runtime.sharding import scope_ctx
 
@@ -271,6 +272,72 @@ def _sched_admit_pipe_fn(cfg, use_kernel: bool, chunk: int, max_seq: int,
     )
 
 
+def _sched_admit_reuse_fn(cfg, use_kernel: bool, chunk: int, max_seq: int,
+                          bucket: int, prompt: int, tail: int, max_nb: int,
+                          block: int, fuse: bool = False, scope=None):
+    """Prefix-reuse admission: the wave's prompts all matched >= 1 pooled
+    KV block, so the dispatch gathers their block tables out of the paged
+    pool into fresh (A, P) admission caches (pure data movement — zero
+    forward FLOPs for the prefix), prefills ONLY the (A, PT << P) tails
+    through ``sched_prefill_reuse``, then runs the identical sample /
+    scatter / chunk-scan epilogue as ``_sched_admit_fn``. Bitwise doctrine:
+    cache dtype == compute dtype, so a gathered key is exactly the key a
+    dense prefill would recompute — temp-0 tokens match reuse-off (gated in
+    tests and ``benchmarks/serving_bench.py --prefix-share``)."""
+
+    def make():
+        def f(params, pools, idx, pool_data, tables, tail_tokens, tail_lens,
+              prefix_lens, new_idx, new_rows, caches, tok, pos, active,
+              temps, key):
+            RT._mark_trace("sched_admit_reuse")
+            with scope_ctx(scope):
+                from repro.core.kv_pool import gather_blocks
+                from repro.models.lm import init_serve_caches
+
+                akey, key = jax.random.split(key)
+                adm = init_serve_caches(cfg, bucket, prompt)
+                prefix = gather_blocks(
+                    pool_data, tables, block=block, use_kernel=use_kernel
+                )
+                span = max_nb * block
+                adm = jax.tree.map(
+                    lambda dst, src: dst.at[..., 0:span, :, :].set(
+                        src.astype(dst.dtype)
+                    ),
+                    adm, prefix,
+                )
+                logits, new_caches = sched_prefill_reuse(
+                    params, cfg, tail_tokens, tail_lens, prefix_lens, adm,
+                    pools, new_idx, use_kernel=use_kernel,
+                )
+                b = tok.shape[0]
+                row_t = jnp.take(temps, jnp.clip(new_rows, 0, b - 1))
+                tok0, _ = sample_token(logits, akey, row_t)
+                tok = tok.at[new_rows].set(tok0, mode="drop")
+                pos = pos.at[new_rows].set(
+                    (prefix_lens + tail_lens).astype(pos.dtype), mode="drop"
+                )
+                caches = jax.tree.map(
+                    lambda live, new: live.at[
+                        ..., new_rows, 0:prompt, :, :
+                    ].set(new.astype(live.dtype), mode="drop"),
+                    caches, new_caches,
+                )
+                caches, tok, pos, toks = _chunk_scan(
+                    params, cfg, use_kernel, fuse, chunk, pools, idx, caches,
+                    tok, pos, active, temps, key, max_seq,
+                )
+                return caches, tok, pos, toks, tok0
+
+        return jax.jit(f, donate_argnums=donate_argnums(10))
+
+    return RT.compiled(
+        ("sched_admit_reuse", cfg, use_kernel, chunk, max_seq, bucket, prompt,
+         tail, max_nb, block, fuse, scope),
+        make,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Live batch (per shard)
 # ---------------------------------------------------------------------------
@@ -305,6 +372,9 @@ class _LiveBatch:
         self.temps = np.zeros((max_batch,), np.float32)
         self.idx = np.zeros((max_batch,), np.int32)
         self.idx_version: Optional[int] = None
+        #: Per-row prefix pin: ``(index, handle)`` while the row reuses
+        #: pooled KV blocks, released when the row retires.
+        self.blocks: list[Optional[tuple]] = [None] * max_batch
 
     def free_rows(self) -> list[int]:
         return [i for i, r in enumerate(self.rows) if r is None]
@@ -336,6 +406,9 @@ class RequestScheduler:
         chunk: int = 4,
         mode: str = "continuous",
         microbatch: int = 0,
+        prefix_reuse: bool = True,
+        kv_block: Optional[int] = None,
+        kv_pool_blocks: Optional[int] = None,
     ):
         if mode not in ("continuous", "sequential"):
             raise ValueError(f"unknown scheduler mode {mode!r}")
@@ -377,6 +450,16 @@ class RequestScheduler:
             )
         else:
             self.admit_pad = admit_bucket
+        # Paged-KV prefix reuse (both modes; pipelined admission keeps the
+        # dense prefill — the GPipe stage split owns its own cache layout).
+        # ``kv_block`` overrides the autotuned/default block size;
+        # ``kv_pool_blocks`` overrides the pool sizing heuristic. The pool
+        # and radix index live on the RUNTIME (one per shard), so a later
+        # scheduler on the same runtime reuses what an earlier one
+        # published; ``runtime.reset_prefix_cache()`` clears them.
+        self.prefix_reuse = bool(prefix_reuse) and not self.pipeline
+        self.kv_block = int(kv_block) if kv_block else None
+        self.kv_pool_blocks = int(kv_pool_blocks) if kv_pool_blocks else None
         self.counters = Counter()
         self._pending: deque[Request] = deque()
         self._ingest_queue: deque[IngestRequest] = deque()
@@ -498,8 +581,28 @@ class RequestScheduler:
         issued = []
         for shard, admits in plans:
             issued.append(self._dispatch(shard, admits))
+        done0 = self.counters["completed"]
         for shard, admits, out in issued:    # async dispatch, sync here
             self._harvest(shard, admits, out)
+        # Row recycle: rows released by THIS step's retirements are
+        # admissible immediately. Planning before the harvest meant a full
+        # batch rejected admissible requests for one extra step even
+        # though the dispatch about to land would free their rows — so
+        # when the harvest retired something and work is still queued, run
+        # one follow-up wave on shards with fresh admissions (a shard
+        # without admissions is not re-dispatched; on one that is, the
+        # other live rows simply advance an extra chunk — per-row decode
+        # is asynchronous by construction, so that is just an extra tick).
+        if self._pending and self.counters["completed"] > done0:
+            extra = [
+                self._dispatch(shard, admits)
+                for shard, admits in self._plan() if admits
+            ]
+            for shard, admits, out in extra:
+                self._harvest(shard, admits, out)
+            if extra:
+                self.counters["recycle_waves"] += 1
+            issued.extend(extra)
         self._run_ingest()
         return len(issued)
 
@@ -551,8 +654,44 @@ class RequestScheduler:
                 plans.append((shard, admits))
         return plans
 
+    def _prefix_state(self, shard: int):
+        """(pool, index) for a shard's paged prefix cache, built lazily on
+        the runtime. Disabled — ``(None, None)`` — when no full block can
+        ever be matched (a match is capped at ``(len - 1) // block`` so a
+        tail token survives; with ``block >= max_prompt`` that cap is
+        always zero and the pool would be dead weight)."""
+        from repro.core import kv_pool as KV
+
+        blk = self.kv_block or KV.get_default_block()
+        if (self.max_prompt - 1) // blk < 1:
+            return None, None
+        n_blocks = self.kv_pool_blocks or max(
+            8, 2 * self.max_batch * (self.max_prompt // blk)
+        )
+        pool = self.rt.kv_pool(shard, block=blk, n_blocks=n_blocks)
+        return pool, self.rt.prefix_index(shard)
+
     def _dispatch(self, shard: int, admits: list[Request]):
         lb = self._batch(shard)
+        matches = None
+        pool = pidx = None
+        if admits and self.prefix_reuse:
+            pool, pidx = self._prefix_state(shard)
+            if pidx is not None:
+                m = [pidx.match(r.tenant, r.prompt) for r in admits]
+                # One dispatch is one geometry: split a mixed wave at the
+                # first kind flip and take the longest same-kind FIFO
+                # prefix (all-reuse or all-dense); the rest stay pending
+                # for the next plan.
+                want = bool(m[0])
+                take = 1
+                while take < len(admits) and bool(m[take]) == want:
+                    take += 1
+                if take < len(admits):
+                    admits = admits[:take]
+                    self.counters["prefix/wave_split"] += 1
+                if want:
+                    matches = m[:take]
         now = time.perf_counter()
         free = lb.free_rows()
         for req, row in zip(admits, free):
@@ -573,10 +712,15 @@ class RequestScheduler:
         scope = self._scope_of(shard)
         if admits:
             a, p = self.admit_pad, self.max_prompt
+            rows = free[: len(admits)]
+            if matches is not None:
+                return self._dispatch_reuse(
+                    shard, lb, admits, rows, matches, pool, pidx, params,
+                    pools, key, scope,
+                )
             new_tokens = np.zeros((a, p), np.int32)
             new_lens = np.ones((a,), np.int32)
             new_rows = np.full((a,), _DROP_ROW, np.int32)
-            rows = free[: len(admits)]
             for j, (req, row) in enumerate(zip(admits, rows)):
                 new_tokens[j, : req.prompt.size] = req.prompt
                 new_lens[j] = req.prompt.size
@@ -612,6 +756,9 @@ class RequestScheduler:
             self.counters[
                 "dispatch/admit_pipe" if self.pipeline else "dispatch/admit"
             ] += 1
+            if pidx is not None:
+                self._publish_rows(pool, pidx, lb, admits, rows)
+                self.counters["prefix/misses"] += len(admits)
             return shard, list(zip(admits, rows)), (toks, tok0)
         fn = _sched_step_fn(
             self.rt.cfg, self.rt.use_kernel, self.chunk, self.max_seq,
@@ -624,6 +771,108 @@ class RequestScheduler:
         self.counters["dispatch/step"] += 1
         return shard, [], (toks, None)
 
+    def _dispatch_reuse(self, shard: int, lb: _LiveBatch, admits, rows,
+                        matches, pool, pidx, params, pools, key, scope):
+        """Reuse-wave dispatch: every admit matched >= 1 pooled block. Pin
+        the matched blocks for the rows' lifetimes, then one fused jit
+        gathers them into the admission caches and prefills only the
+        tails (``_sched_admit_reuse_fn``)."""
+        a, p = self.admit_pad, self.max_prompt
+        blk = pool.block
+        nbs = [len(ids) for ids in matches]
+        max_nb = max(nbs)
+        tails = [r.prompt.size - nb * blk for r, nb in zip(admits, nbs)]
+        # Tail pad bucket: block-quantised (trace reuse across waves whose
+        # max tail rounds the same), never above the prompt bucket.
+        pt = min(p, -(-max(tails) // blk) * blk)
+        tables = np.zeros((a, max_nb), np.int32)
+        tail_tokens = np.zeros((a, pt), np.int32)
+        tail_lens = np.ones((a,), np.int32)
+        prefix_lens = np.zeros((a,), np.int32)
+        new_rows = np.full((a,), _DROP_ROW, np.int32)
+        for j, (req, row, ids) in enumerate(zip(admits, rows, matches)):
+            nb = len(ids)
+            # Rows with nb < max_nb pad their table with block 0 — any
+            # valid id: the padded key positions are >= the row's own
+            # length, masked in the tail prefill and overwritten by
+            # decode before it ever attends there.
+            tables[j, :nb] = ids
+            plen = nb * blk
+            t = req.prompt[plen:]
+            tail_tokens[j, : t.size] = t
+            tail_lens[j] = t.size
+            prefix_lens[j] = plen
+            new_rows[j] = row
+            lb.blocks[row] = (pidx, pidx.acquire(ids))
+            self.counters["prefix/blocks_reused"] += nb
+            self.counters["prefix/tokens_reused"] += plen
+        self.counters["prefix/hits"] += len(admits)
+        new_idx = lb.idx[np.minimum(new_rows, self.max_batch - 1)]
+        fn = _sched_admit_reuse_fn(
+            self.rt.cfg, self.rt.use_kernel, self.chunk, self.max_seq, a, p,
+            pt, max_nb, blk, getattr(self.rt, "decode_fuse", False), scope,
+        )
+        try:
+            lb.caches, lb.tok, lb.pos, toks, tok0 = fn(
+                params, pools, jnp.asarray(lb.idx), pool.data, tables,
+                tail_tokens, tail_lens, prefix_lens, new_idx, new_rows,
+                lb.caches, lb.tok, lb.pos, lb.active, lb.temps, key,
+            )
+        except Exception as err:
+            self._abort_admits(lb, admits, rows, err)
+            raise
+        self.counters["dispatch/admit_reuse"] += 1
+        return shard, list(zip(admits, rows)), (toks, tok0)
+
+    def _publish_rows(self, pool, pidx, lb: _LiveBatch, admits, rows) -> None:
+        """After a dense admission lands, index the wave's full prompt
+        blocks and publish their freshly-prefilled K/V out of the live
+        rows into the pool (``floor(len / block)`` blocks per prompt;
+        only newly-created radix nodes copy)."""
+        for req, row in zip(admits, rows):
+            created = pidx.insert(req.tenant, req.prompt)
+            if created:
+                pool.publish(
+                    lb.caches, row,
+                    [bid for bid, _ in created],
+                    [slot for _, slot in created],
+                )
+                self.counters["prefix/published_blocks"] += len(created)
+
+    def _release_blocks(self, lb: _LiveBatch, row: int) -> None:
+        handle = lb.blocks[row]
+        if handle is not None:
+            lb.blocks[row] = None
+            pidx, h = handle
+            pidx.release(h)
+
+    def prefix_metrics(self) -> dict:
+        """Prefix-reuse observability for the serving bench: hit/miss and
+        reused-block/token counters plus per-shard pool occupancy. After a
+        drain (no rows in flight) every held block belongs to exactly one
+        radix node, so ``refs_total == held == nodes`` — the no-leak gate
+        (``SessionRuntime.check_prefix_no_leaks``)."""
+        out: dict[str, Any] = {
+            k.split("/", 1)[1]: int(v)
+            for k, v in sorted(self.counters.items())
+            if k.startswith("prefix/")
+        }
+        out["pools"] = {
+            str(s): {
+                "block": p.block,
+                "n_blocks": p.n_blocks,
+                "free": p.n_free(),
+                "held": int((p.refs > 0).sum()),
+                "refs_total": int(p.refs.sum()),
+                "nodes": (
+                    self.rt._prefix_indexes[s].n_nodes()
+                    if s in getattr(self.rt, "_prefix_indexes", {}) else 0
+                ),
+            }
+            for s, p in sorted(getattr(self.rt, "_kv_pools", {}).items())
+        }
+        return out
+
     def _abort_admits(self, lb: _LiveBatch, admits, rows, err) -> None:
         """Unwind a failed dispatch's admissions: the rows just claimed go
         back to the free list and each admitted tenant's in-flight count
@@ -634,6 +883,7 @@ class RequestScheduler:
         caller sees the raise and owns the retry policy."""
         now = time.perf_counter()
         for req, row in zip(admits, rows):
+            self._release_blocks(lb, row)
             lb.rows[row] = None
             lb.active[row] = False
             self._in_flight[req.tenant] -= 1
@@ -665,6 +915,7 @@ class RequestScheduler:
     def _finish(self, lb: _LiveBatch, row: int, req: Request) -> None:
         req.done = True
         req.finished_at = time.perf_counter()
+        self._release_blocks(lb, row)
         lb.rows[row] = None
         lb.active[row] = False
         self._in_flight[req.tenant] -= 1

@@ -55,6 +55,10 @@ _MIN_TILE = {
 
 GRID_ORDERS = ("ml", "lm")
 UNROLL_CANDIDATES = (1, 2, 4)
+#: KV block sizes swept by ``tune_kv_block`` (tokens per paged block).
+#: Smaller blocks match longer prefixes (match granularity is the block);
+#: larger blocks amortise gather/publish dispatch overhead.
+KV_BLOCK_CANDIDATES = (4, 8, 16)
 
 
 def tile_candidates(
@@ -335,6 +339,74 @@ def apply_choice(choice: Choice) -> None:
     """Install a tuned winner as the process-wide kernel default. Trace-time
     only: call before warmup, not under live traffic."""
     O.set_default_tile(tm=choice.tm, grid_order=choice.grid_order)
+
+
+def tune_kv_block(
+    cfg,
+    *,
+    config: str,
+    seq: int = 64,
+    batch: int = 4,
+    candidates: Sequence[int] = KV_BLOCK_CANDIDATES,
+    cache: Optional[AutotuneCache] = None,
+    device: Optional[str] = None,
+    timer: Optional[Callable] = None,
+) -> Choice:
+    """Pick the paged-KV block size by timing the pool round-trip the
+    scheduler's prefix reuse actually dispatches: one ``publish`` (live row
+    -> pool blocks) plus one ``gather_blocks`` (block tables -> admission
+    layout) over a ``seq``-token prompt for ``batch`` rows.
+
+    The winner rides the shared ``Choice``/``AutotuneCache`` machinery with
+    the block size in the ``tm`` field (one schema for every tuned knob);
+    ``apply_kv_block`` installs it via ``kv_pool.set_default_block``. The
+    untuned ``DEFAULT_BLOCK`` is always a candidate, so tuned is never
+    worse than untuned by construction."""
+    from repro.core import kv_pool as KV
+
+    device = device or device_kind()
+    if cache is not None:
+        hit = cache.get(config, device, "kv_block")
+        if hit is not None:
+            return hit
+    timer = timer or median_timer()
+    from repro.models.lm import init_serve_caches
+
+    blocks = sorted(set(
+        b for b in (*candidates, KV.DEFAULT_BLOCK) if seq % b == 0
+    ))
+    caches = init_serve_caches(cfg, 1, seq)
+    results = []  # (time_s, block)
+    for blk in blocks:
+        per_row = seq // blk
+        pool = KV.KVBlockPool(cfg, n_blocks=batch * per_row, block=blk)
+        ids = pool.alloc(per_row)
+        slots = list(range(per_row))
+        tables = jnp.tile(jnp.asarray(ids, jnp.int32)[None], (batch, 1))
+
+        def run(pool=pool, ids=ids, slots=slots, tables=tables, blk=blk):
+            pool.publish(caches, 0, ids, slots)
+            out = KV.gather_blocks(pool.data, tables, block=blk)
+            return jax.tree.leaves(out)[0]
+
+        results.append((timer(run), blk))
+    default_t = min(t for t, blk in results if blk == KV.DEFAULT_BLOCK)
+    best_t, best_blk = min(results)
+    choice = Choice(
+        tm=best_blk, grid_order="na", time_s=best_t, default_time_s=default_t,
+    )
+    if cache is not None:
+        cache.put(config, device, "kv_block", choice)
+    return choice
+
+
+def apply_kv_block(choice: Choice) -> None:
+    """Install a tuned KV block size as the process-wide pool default
+    (``tm`` carries the block; see ``tune_kv_block``). Applies to pools
+    built AFTER the call — existing pools keep their geometry."""
+    from repro.core import kv_pool as KV
+
+    KV.set_default_block(choice.tm)
 
 
 # ---------------------------------------------------------------------------

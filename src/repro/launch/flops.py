@@ -39,6 +39,17 @@ def _attention_flops_per_seq(cfg: ModelConfig, s: int, causal: bool = True) -> f
     return total
 
 
+def reuse_saved_flops(cfg: ModelConfig, prefix_tokens: int) -> float:
+    """Prefill FLOPs one prefix-reuse admission skips: the matmul stack
+    over ``prefix_tokens`` positions plus their causal attention pairs
+    (the gathered KV blocks replace both). The readout is NOT saved — the
+    tail prefill still produces the next-token logits."""
+    if prefix_tokens <= 0:
+        return 0.0
+    return (2.0 * _matmul_params(cfg) * prefix_tokens
+            + _attention_flops_per_seq(cfg, prefix_tokens))
+
+
 def _decode_attn_flops(cfg: ModelConfig, ctx: int, batch: int) -> float:
     hd = cfg.resolved_head_dim
     total = 0.0

@@ -180,6 +180,50 @@ def attn_prefill(
     return y, new_cache
 
 
+def attn_prefill_ext(
+    params: Params,
+    x: jax.Array,                 # (b, s, d) tail tokens (right-padded)
+    offs: jax.Array,              # (b,) int32 per-row start position
+    spec: AttnSpec,
+    cache: dict[str, jax.Array],
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Per-row *offset* prefill: row b's ``s`` tokens occupy positions
+    ``[offs[b], offs[b] + s)``; K/V scatter into the cache at those
+    positions and attention runs over the CACHE — including whatever the
+    caller pre-wrote below ``offs`` (the prefix-reuse admission path:
+    gathered pool blocks sit at ``[0, offs)``, so the tail attends reused
+    keys without recomputing them; the cache and compute dtypes coincide,
+    so a cached key is bitwise the key a dense prefill would recompute).
+
+    Padding doctrine matches ``sched_prefill``: pad tail positions write
+    garbage K/V at indices >= the row's true end (``mode="drop"`` for
+    writes past the cache) and rows with a shorter reused prefix see
+    garbage between their prefix and the wave's padded prefix — all at
+    positions >= their own length, which the causal mask hides and decode
+    overwrites before ever attending."""
+    b, s, _ = x.shape
+    positions = (
+        offs[:, None].astype(jnp.int32)
+        + jnp.arange(s, dtype=jnp.int32)[None]
+    )                                                        # (b, s)
+    q, k, v = _qkv(params, x, positions, spec)
+    rows = jnp.arange(b)[:, None]
+    ck = cache["k"].at[rows, positions].set(
+        k.astype(cache["k"].dtype), mode="drop"
+    )
+    cv = cache["v"].at[rows, positions].set(
+        v.astype(cache["v"].dtype), mode="drop"
+    )
+    sk = ck.shape[1]
+    k_pos = jnp.arange(sk)
+    mask = k_pos[None, None, :] <= positions[:, :, None]     # (b, s, sk)
+    if spec.window > 0:
+        mask &= k_pos[None, None, :] > (positions[:, :, None] - spec.window)
+    out = _sdpa(q, ck.astype(x.dtype), cv.astype(x.dtype), mask, spec)
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+    return y, {"k": ck, "v": cv}
+
+
 def attn_decode(
     params: Params,
     x: jax.Array,                 # (b, 1, d)
@@ -219,3 +263,51 @@ def attn_decode(
     out = _sdpa(q, ck.astype(x.dtype), cv.astype(x.dtype), mask, spec)
     y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
     return y, {"k": ck, "v": cv}
+
+
+def attn_decode_paged(
+    params: Params,
+    x: jax.Array,                 # (b, 1, d)
+    pos: jax.Array,               # (b,) int32 per-row position
+    spec: AttnSpec,
+    pool: dict[str, jax.Array],   # {"k","v"}: (n_blocks, block, n_kv, hd)
+    table: dict[str, Any] | jax.Array,  # (b, T) int32 pool block ids
+    *,
+    use_kernel: bool = False,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Block-table variant of ``attn_decode``'s vector branch: row ``b``'s
+    KV for token position ``t`` lives in pool block ``table[b, t //
+    block]`` at offset ``t % block`` instead of a contiguous cache row.
+
+    The step writes the new K/V at ``pos`` into the owning pool block —
+    the caller must hold that block EXCLUSIVELY (the copy-on-write rule:
+    ``KVBlockPool.copy_block`` first if shared) — then attends over the
+    gathered per-row keys with the same per-row causal mask as the dense
+    branch, so given equal KV bytes the output is bitwise the dense
+    ``attn_decode``'s (tested). ``use_kernel`` routes the gather through
+    the Pallas scalar-prefetch kernel (interpret off-TPU); either way the
+    gather is pure data movement. Returns (y, updated pool)."""
+    from repro.kernels.flash_attn import paged
+
+    b = x.shape[0]
+    blk = pool["k"].shape[1]
+    positions = pos[:, None].astype(jnp.int32)               # (b, 1)
+    q, k, v = _qkv(params, x, positions, spec)
+    owner = jnp.take_along_axis(
+        table, (pos // blk)[:, None].astype(table.dtype), axis=1
+    )[:, 0]                                                  # (b,)
+    off = pos % blk
+    new_pool = {
+        "k": pool["k"].at[owner, off].set(k[:, 0].astype(pool["k"].dtype)),
+        "v": pool["v"].at[owner, off].set(v[:, 0].astype(pool["v"].dtype)),
+    }
+    ck = paged.gather(new_pool["k"], table, use_kernel=use_kernel)
+    cv = paged.gather(new_pool["v"], table, use_kernel=use_kernel)
+    sk = ck.shape[1]
+    k_pos = jnp.arange(sk)
+    mask = k_pos[None, None, :] <= pos[:, None, None]        # (b, 1, sk)
+    if spec.window > 0:
+        mask &= k_pos[None, None, :] > (pos[:, None, None] - spec.window)
+    out = _sdpa(q, ck.astype(x.dtype), cv.astype(x.dtype), mask, spec)
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+    return y, new_pool

@@ -132,7 +132,15 @@ def block_forward(
         if mode == "train":
             y = A.attn_train(params["attn"], x, spec)
         elif mode == "prefill":
-            y, new_cache = A.attn_prefill(params["attn"], x, spec, cache)
+            if pos is not None:
+                # Offset prefill (prefix-reuse admission): ``pos`` is the
+                # (b,) per-row start position; the cache below it already
+                # holds the reused prefix K/V.
+                y, new_cache = A.attn_prefill_ext(
+                    params["attn"], x, pos, spec, cache
+                )
+            else:
+                y, new_cache = A.attn_prefill(params["attn"], x, spec, cache)
         else:
             y, new_cache = A.attn_decode(params["attn"], x, pos, spec, cache)
     elif kind == "mamba":

@@ -525,6 +525,51 @@ def sched_prefill(
     return logits, out["caches"]
 
 
+def sched_prefill_reuse(
+    params: Params,
+    cfg: ModelConfig,
+    tail_tokens: jax.Array,        # (A, PT) int32, right-padded tail per row
+    tail_lens: jax.Array,          # (A,) int32 true tail length (>= 1)
+    prefix_lens: jax.Array,        # (A,) int32 reused-prefix length per row
+    caches: Params,                # (A, P) caches, prefix K/V pre-written
+    pools: Optional[dict[str, jax.Array]] = None,
+    idx: Optional[jax.Array] = None,   # (A,) int32 slot per row
+    *,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, Params]:
+    """Admission prefill over only the UNSEEN tail of each prompt — the
+    serve-path Skip2-LoRA move: the prefix's K/V was cached (paged pool
+    blocks gathered into ``caches[:, 0:prefix_lens)``) so its forward is
+    skipped entirely; the backbone runs at (A, PT << P).
+
+    The tail attends the cache (``attn_prefill_ext``), and because cache
+    dtype == compute dtype a pooled key is bitwise the key ``sched_prefill``
+    would recompute, so temp-0 tokens match the dense path exactly (tested
+    + gated). The skip-LoRA readout needs only the LAST real position's
+    block inputs, which live in the tail (tail_lens >= 1 by construction:
+    the radix match never swallows a whole prompt) — so cached-prefix
+    activations are never needed, mirroring the paper's last-position
+    adapter tap. Returns (logits (A, 1, V), caches at (A, P))."""
+    out = lm_forward(
+        params, cfg, tail_tokens, mode="prefill", caches=caches,
+        pos=prefix_lens.astype(jnp.int32), collect_acts=True,
+    )
+    last = (jnp.maximum(tail_lens, 1) - 1).astype(jnp.int32)     # (A,)
+    y_last = jnp.take_along_axis(
+        out["y_base"], last[:, None, None], axis=1
+    )                                                            # (A, 1, D)
+    if pools is not None:
+        from repro.core.adapter_pool import grouped_skip_sum
+
+        acts_last = jnp.take_along_axis(
+            out["acts"], last[None, :, None, None], axis=2
+        )                                                        # (L, A, 1, D)
+        skip = grouped_skip_sum(acts_last, pools, idx, use_kernel=use_kernel)
+        y_last = y_last + skip.astype(y_last.dtype)
+    logits = readout(params, cfg, y_last)
+    return logits, out["caches"]
+
+
 # ---------------------------------------------------------------------------
 # Pipelined admission prefill (pipeline_stages=N on SessionRuntime)
 # ---------------------------------------------------------------------------

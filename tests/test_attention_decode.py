@@ -1,0 +1,143 @@
+"""``attn_decode``'s per-row position branch and its paged variant.
+
+The continuous-batching scheduler drives decode with a (b,) position
+vector (each row at its own depth); prefix reuse additionally swaps the
+contiguous cache row for pool blocks behind a block table
+(``attn_decode_paged``). All of these are layout moves, not math
+changes, so the bar is bitwise equality with the classic scalar-position
+decode given equal KV bytes — including at the edges: position 0 (the
+whole rest of the cache is masked garbage), position T-1 (the last
+slot), and rows at mixed depths versus each row decoded solo.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    AttnSpec,
+    attn_decode,
+    attn_decode_paged,
+    init_attn,
+)
+from repro.models.config import ModelConfig
+
+
+def mini_cfg(**kw):
+    base = dict(
+        name="t", family="dense", n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=32, vocab_size=64, dtype="float32",
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+T = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = mini_cfg()
+    spec = AttnSpec.from_config(cfg, local=False)
+    params = init_attn(jax.random.key(0), cfg)
+    b, hd = 3, cfg.resolved_head_dim
+    x = jax.random.normal(jax.random.key(1), (b, 1, cfg.d_model))
+    cache = {
+        "k": jax.random.normal(jax.random.key(2), (b, T, cfg.n_kv_heads, hd)),
+        "v": jax.random.normal(jax.random.key(3), (b, T, cfg.n_kv_heads, hd)),
+    }
+    return params, spec, x, cache
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestVectorPositionBranch:
+    @pytest.mark.parametrize("p", [0, T // 2, T - 1])
+    def test_all_rows_equal_matches_scalar_branch_bitwise(self, setup, p):
+        """A constant position vector must reproduce the scalar branch
+        exactly — output AND updated cache — at both cache edges."""
+        params, spec, x, cache = setup
+        b = x.shape[0]
+        y_s, c_s = attn_decode(params, x, jnp.asarray(p, jnp.int32), spec,
+                               cache)
+        y_v, c_v = attn_decode(params, x, jnp.full((b,), p, jnp.int32), spec,
+                               cache)
+        np.testing.assert_array_equal(np.asarray(y_v), np.asarray(y_s))
+        assert_trees_equal(c_v, c_s)
+
+    def test_position_zero_ignores_cache_garbage(self, setup):
+        """At pos 0 every other cache slot is garbage the mask must hide:
+        huge-magnitude junk beyond the position changes nothing."""
+        params, spec, x, cache = setup
+        b = x.shape[0]
+        pos = jnp.zeros((b,), jnp.int32)
+        y_clean, _ = attn_decode(params, x, pos, spec, cache)
+        junk = {n: c.at[:, 1:].set(1e3) for n, c in cache.items()}
+        y_junk, c_junk = attn_decode(params, x, pos, spec, junk)
+        np.testing.assert_array_equal(np.asarray(y_junk), np.asarray(y_clean))
+        # only slot 0 was written; the junk is still there untouched
+        np.testing.assert_array_equal(np.asarray(c_junk["k"][:, 1:]),
+                                      np.full_like(cache["k"][:, 1:], 1e3))
+
+    def test_last_slot_write_stays_in_bounds(self, setup):
+        """pos == T-1 writes the final slot and attends the whole cache;
+        earlier slots come through unmodified."""
+        params, spec, x, cache = setup
+        b = x.shape[0]
+        _, c_v = attn_decode(params, x, jnp.full((b,), T - 1, jnp.int32),
+                             spec, cache)
+        for n in ("k", "v"):
+            assert c_v[n].shape == cache[n].shape
+            np.testing.assert_array_equal(np.asarray(c_v[n][:, : T - 1]),
+                                          np.asarray(cache[n][:, : T - 1]))
+            assert not np.array_equal(np.asarray(c_v[n][:, T - 1]),
+                                      np.asarray(cache[n][:, T - 1]))
+
+    def test_mixed_depths_match_each_row_solo(self, setup):
+        """Rows at positions (0, T//2, T-1) in one batch: each row's
+        output equals that row decoded alone through the scalar branch —
+        batch-row independence, the property continuous batching needs."""
+        params, spec, x, cache = setup
+        pos = jnp.asarray([0, T // 2, T - 1], jnp.int32)
+        y_v, c_v = attn_decode(params, x, pos, spec, cache)
+        for r in range(3):
+            row_cache = {n: c[r : r + 1] for n, c in cache.items()}
+            y_r, c_r = attn_decode(params, x[r : r + 1],
+                                   jnp.asarray(int(pos[r]), jnp.int32),
+                                   spec, row_cache)
+            np.testing.assert_array_equal(np.asarray(y_v[r : r + 1]),
+                                          np.asarray(y_r))
+            for n in ("k", "v"):
+                np.testing.assert_array_equal(np.asarray(c_v[n][r : r + 1]),
+                                              np.asarray(c_r[n]))
+
+
+class TestPagedDecodeParity:
+    def test_paged_matches_dense_vector_branch_bitwise(self, setup):
+        """Scatter the dense cache rows into pool blocks; the block-table
+        decode must land on the dense branch's exact bytes (output and
+        written KV), mixed per-row depths included."""
+        params, spec, x, cache = setup
+        b, blk = x.shape[0], 4
+        per_row = T // blk
+        # row r's token span [j*blk, (j+1)*blk) lives in pool block
+        # r*per_row + j; the table is just that layout, row-major.
+        pool = {
+            n: c.reshape(b * per_row, blk, *c.shape[2:])
+            for n, c in cache.items()
+        }
+        table = jnp.arange(b * per_row, dtype=jnp.int32).reshape(b, per_row)
+        pos = jnp.asarray([0, T // 2, T - 1], jnp.int32)
+        y_d, c_d = attn_decode(params, x, pos, spec, cache)
+        y_p, pool_p = attn_decode_paged(params, x, pos, spec, pool, table)
+        np.testing.assert_array_equal(np.asarray(y_p), np.asarray(y_d))
+        for n in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(pool_p[n].reshape(b, T, *cache[n].shape[2:])),
+                np.asarray(c_d[n]),
+            )

@@ -294,6 +294,30 @@ class TestSchedulerLoop:
         assert ing.logits.shape == (1, 1, cfg.vocab_size)
         assert rt.tenant("u0").n_ingested == before + 1
 
+    def test_freed_rows_readmit_in_the_same_step(self, cfg, params):
+        """Regression (row-recycle accounting): a completion harvested in
+        step N frees its row for step N's OWN admission wave — pending
+        requests must not wait for step N+1 when capacity just opened."""
+        rt = adapted_runtime(cfg, params)
+        sched = RequestScheduler(
+            rt, max_batch=1, max_prompt=4, max_new_cap=2, admit_bucket=1,
+            inflight_per_tenant=2, chunk=2,
+        )
+        prompts = np.asarray(jax.random.randint(
+            jax.random.key(13), (2, 4), 0, cfg.vocab_size
+        ))
+        reqs = [sched.submit("u0", p, max_new=2) for p in prompts]
+        steps = 0
+        while not all(r.done for r in reqs):
+            sched.step()
+            steps += 1
+            assert steps < 20
+        assert sched.counters["recycle_waves"] >= 1
+        assert sched.counters["completed"] == 2
+        for r, p in zip(reqs, prompts):
+            solo = rt.serve(["u0"], jnp.asarray(p[None]), max_new=2)
+            np.testing.assert_array_equal(r.result(), np.asarray(solo)[0])
+
     def test_validation(self, cfg, params):
         rt = adapted_runtime(cfg, params)
         sched = RequestScheduler(rt, max_batch=2, max_prompt=4, max_new_cap=3)
@@ -303,3 +327,69 @@ class TestSchedulerLoop:
             sched.submit(None, np.zeros((3,), np.int32), max_new=9)
         with pytest.raises(ValueError, match="mode"):
             RequestScheduler(rt, mode="warp")
+
+
+class TestPrefixReuse:
+    """Paged KV prefix reuse (DESIGN.md §15): reuse-on must be a pure
+    optimisation — same bytes out, clean pool accounting afterwards."""
+
+    def _shared_prefix_prompts(self, cfg, n=4, share=12, tail=4):
+        shared = np.asarray(jax.random.randint(
+            jax.random.key(20), (share,), 0, cfg.vocab_size
+        ), np.int32)
+        tails = np.asarray(jax.random.randint(
+            jax.random.key(21), (n, tail), 0, cfg.vocab_size
+        ), np.int32)
+        return [np.concatenate([shared, t]) for t in tails]
+
+    def _run(self, rt, prompts, *, reuse, gen=3):
+        rt.reset_prefix_cache()
+        sched = RequestScheduler(
+            rt, max_batch=4, max_prompt=len(prompts[0]), max_new_cap=gen,
+            admit_bucket=2, inflight_per_tenant=len(prompts), chunk=2,
+            prefix_reuse=reuse, kv_block=4,
+        )
+        reqs = [
+            sched.submit(None, p, max_new=gen, temperature=0.0)
+            for p in prompts
+        ]
+        sched.drain()
+        return sched, [r.result() for r in reqs]
+
+    def test_reuse_is_bitwise_and_leaks_nothing(self, cfg, params):
+        """Four temp-0 requests sharing a 12-of-16-token prefix: the first
+        admit wave prefills dense and publishes, later waves gather pooled
+        blocks — tokens identical either way, and after the drain every
+        pool block is owned by exactly one radix node."""
+        rt = adapted_runtime(cfg, params)
+        prompts = self._shared_prefix_prompts(cfg)
+        on_sched, on = self._run(rt, prompts, reuse=True)
+        assert on_sched.counters["dispatch/admit_reuse"] >= 1
+        assert on_sched.counters["prefix/hits"] >= 1
+        assert on_sched.counters["prefix/blocks_reused"] >= 1
+        rt.check_prefix_no_leaks()           # BEFORE reset: refs clean now
+
+        off_sched, off = self._run(rt, prompts, reuse=False)
+        assert off_sched.counters["dispatch/admit_reuse"] == 0
+        for a, b in zip(on, off):
+            np.testing.assert_array_equal(a, b)
+
+    def test_reuse_survives_row_recycling(self, cfg, params):
+        """More requests than rows: recycled rows re-admit through the
+        reuse path (their prefix is pooled by then) and release their
+        block pins on retirement — still bitwise, still leak-free."""
+        rt = adapted_runtime(cfg, params)
+        prompts = self._shared_prefix_prompts(cfg, n=6)
+        rt.reset_prefix_cache()
+        sched = RequestScheduler(
+            rt, max_batch=2, max_prompt=16, max_new_cap=3, admit_bucket=2,
+            inflight_per_tenant=6, chunk=2, prefix_reuse=True, kv_block=4,
+        )
+        reqs = [sched.submit(None, p, max_new=3) for p in prompts]
+        sched.drain()
+        assert sched.counters["completed"] == 6
+        assert sched.counters["prefix/hits"] >= 2
+        rt.check_prefix_no_leaks()
+        _, off = self._run(rt, prompts, reuse=False)
+        for r, b in zip(reqs, off):
+            np.testing.assert_array_equal(r.result(), b)
